@@ -1,0 +1,61 @@
+"""Fig. 5 / Fig. 12 — per-stage mini-batch preprocessing latency.
+
+Per RM: time each ETL stage of the unfused (Disagg/CPU-style) pipeline and
+the fused PreSto pipeline on identical encoded partitions.  The paper's
+observation to reproduce: feature generation + normalization (Bucketize /
+SigridHash / Log) dominate (~79% on RM2-5) and the fused ISP path removes
+the inter-stage traffic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import BENCH_ROWS, emit, rm_fixture, time_call
+from repro.core.preprocess import preprocess_pages, stage_functions
+
+
+def run(rms=("rm1", "rm2", "rm5")) -> dict:
+    results = {}
+    for rm in rms:
+        src, spec, pages = rm_fixture(rm)
+        stages = stage_functions(spec)
+
+        t_decode = time_call(stages["extract_decode"], pages)
+        dense_raw, sparse_raw = stages["extract_decode"](pages)
+        t_bucket = time_call(stages["gen_bucketize"], dense_raw)
+        bucket_ids = stages["gen_bucketize"](dense_raw)
+        t_hash = time_call(stages["norm_sigridhash"], sparse_raw, bucket_ids)
+        hashed, gen_hashed = stages["norm_sigridhash"](sparse_raw, bucket_ids)
+        t_log = time_call(stages["norm_log"], dense_raw)
+        dense_norm = stages["norm_log"](dense_raw)
+        t_form = time_call(
+            stages["form_minibatch"], pages, dense_norm, hashed, gen_hashed
+        )
+        unfused_total = t_decode + t_bucket + t_hash + t_log + t_form
+
+        fused = jax.jit(lambda p: preprocess_pages(p, spec, mode="fused"))
+        t_fused = time_call(fused, pages)
+
+        transform_frac = (t_bucket + t_hash + t_log) / unfused_total
+        speedup = unfused_total / t_fused
+        for stage, t in [
+            ("extract_decode", t_decode), ("gen_bucketize", t_bucket),
+            ("norm_sigridhash", t_hash), ("norm_log", t_log),
+            ("form_minibatch", t_form),
+        ]:
+            emit(f"latency/{rm}/{stage}", t * 1e6,
+                 f"frac={t / unfused_total:.3f}")
+        emit(f"latency/{rm}/unfused_total", unfused_total * 1e6,
+             f"transform_frac={transform_frac:.3f}")
+        emit(f"latency/{rm}/fused_total", t_fused * 1e6,
+             f"fused_speedup={speedup:.2f}x rows={BENCH_ROWS}")
+        results[rm] = {
+            "unfused_s": unfused_total, "fused_s": t_fused,
+            "transform_frac": transform_frac, "speedup": speedup,
+        }
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Fig. 4 / Fig. 14 — workers required to saturate an 8-GPU training node.
+
+Two parts: (a) the paper's published provisioning constants (CPU cores and
+ISP units per RM) with the implied per-unit speedup; (b) our measured T/P
+provisioning on the reduced RM1 pipeline (the planner mechanics themselves).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs.registry import get_recsys
+from repro.core.pipeline import TrainingPipeline
+from repro.core.planner import (
+    PAPER_CORES_REQUIRED_8GPU,
+    PAPER_ISP_UNITS_REQUIRED_8GPU,
+    paper_speedup_per_unit,
+)
+from repro.core.presto import PreStoEngine
+from repro.core.spec import TransformSpec
+from repro.data.storage import PartitionedStore
+from repro.data.synth import SyntheticRecSysSource
+from repro.distributed.sharding import ShardingRules
+from repro.models import recsys as RS
+from repro.train import adamw, make_train_step, warmup_cosine
+
+
+def run() -> dict:
+    results = {}
+    for rm in PAPER_CORES_REQUIRED_8GPU:
+        cores = PAPER_CORES_REQUIRED_8GPU[rm]
+        units = PAPER_ISP_UNITS_REQUIRED_8GPU[rm]
+        emit(f"provisioning/{rm}/paper", 0.0,
+             f"cpu_cores={cores} isp_units={units} "
+             f"per_unit_speedup={paper_speedup_per_unit(rm):.1f}x")
+        results[rm] = {"cores": cores, "units": units}
+
+    # measured T/P on the reduced pipeline (planner mechanics)
+    rcfg = get_recsys("rm1", reduced=True)
+    src = SyntheticRecSysSource(rcfg.data, rows=512)
+    spec = TransformSpec.from_source(src)
+    store = PartitionedStore(8, num_devices=4, source=src)
+    rules = ShardingRules.make(None)
+    opt = adamw(warmup_cosine(1e-3, 5, 100))
+    loss_fn = lambda p, b: RS.loss_fn(p, b, rcfg, rules)
+    step = jax.jit(make_train_step(loss_fn, opt))
+    params = RS.init_params(jax.random.PRNGKey(0), rcfg)
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    pipe = TrainingPipeline(PreStoEngine(spec, mesh=None), store, step)
+    plan = pipe.provision(state)
+    emit("provisioning/measured_T_over_P", 0.0,
+         f"T={plan.train_throughput:.0f} P={plan.worker_throughput:.0f} "
+         f"workers={plan.workers_required}")
+    results["measured"] = {
+        "T": plan.train_throughput, "P": plan.worker_throughput,
+        "workers": plan.workers_required,
+    }
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""§Roofline report — reads results/dryrun.jsonl and prints the per-cell
+roofline table (compute/memory/collective terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, roofline fraction)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun.jsonl")
+
+
+def load(path: str = DEFAULT_PATH) -> list:
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return list(recs.values())
+
+
+def run(path: str = DEFAULT_PATH) -> dict:
+    recs = load(path)
+    if not recs:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return {}
+    ok = [r for r in recs if r["status"] == "ok"]
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        t = r["roofline"]
+        emit(
+            f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
+            t["compute_s"] * 1e6,
+            f"mem_us={t['memory_s']*1e6:.0f} coll_us={t['collective_s']*1e6:.0f} "
+            f"dominant={t['dominant']} useful={t['useful_ratio']:.3f} "
+            f"rf={t['roofline_fraction']:.3f}",
+        )
+    skipped = [r for r in recs if r["status"] == "skip"]
+    errors = [r for r in recs if r["status"] == "error"]
+    emit("roofline/summary", 0.0,
+         f"ok={len(ok)} skip={len(skipped)} errors={len(errors)}")
+    return {"ok": len(ok), "skip": len(skipped), "errors": len(errors)}
+
+
+if __name__ == "__main__":
+    run()

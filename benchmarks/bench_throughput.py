@@ -1,0 +1,39 @@
+"""Fig. 11 — preprocessing throughput: PreSto (fused, 1 unit) vs Disagg(N).
+
+Measured: fused vs unfused end-to-end rows/s on this host (the fused/unfused
+ratio is the hardware-independent fraction).  Fleet-scale Disagg(N) follows
+the paper's own analytical model: per-worker throughput scales linearly with
+N workers; the paper's published equivalence (ISP unit ~ cores) anchors the
+cross-hardware comparison in bench_provisioning / bench_tco.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import BENCH_ROWS, emit, rm_fixture, time_call
+from repro.core.preprocess import preprocess_pages
+
+
+def run(rms=("rm1", "rm2", "rm5")) -> dict:
+    results = {}
+    for rm in rms:
+        src, spec, pages = rm_fixture(rm)
+        fused = jax.jit(lambda p: preprocess_pages(p, spec, mode="fused"))
+        unfused = jax.jit(lambda p: preprocess_pages(p, spec, mode="unfused"))
+        tf = time_call(fused, pages)
+        tu = time_call(unfused, pages)
+        rows_s_f = BENCH_ROWS / tf
+        rows_s_u = BENCH_ROWS / tu
+        emit(f"throughput/{rm}/fused", tf * 1e6, f"rows_per_s={rows_s_f:.0f}")
+        emit(f"throughput/{rm}/unfused", tu * 1e6, f"rows_per_s={rows_s_u:.0f}")
+        # Disagg(N) analytical: N x single-worker unfused throughput
+        for n in (1, 8, 32, 64):
+            emit(f"throughput/{rm}/disagg_{n}", tu * 1e6 / n,
+                 f"rows_per_s={rows_s_u * n:.0f} (paper linear-scaling model)")
+        results[rm] = {"fused_rows_s": rows_s_f, "unfused_rows_s": rows_s_u}
+    return results
+
+
+if __name__ == "__main__":
+    run()

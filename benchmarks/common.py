@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: timing + RM fixtures (CPU-sized rows)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.preprocess import pages_from_partition
+from repro.core.spec import TransformSpec
+from repro.data.synth import RM_CONFIGS, SyntheticRecSysSource
+
+BENCH_ROWS = 1024  # rows per partition for CPU benching (paper: 8192)
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median-ish wall time per call in seconds (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def rm_fixture(rm: str, rows: int = BENCH_ROWS):
+    """(source, spec, device pages) for one RM config at bench rows."""
+    src = SyntheticRecSysSource(RM_CONFIGS[rm], rows=rows)
+    spec = TransformSpec.from_source(src)
+    pages = {
+        k: jnp.asarray(v)
+        for k, v in pages_from_partition(src.partition(0), spec).items()
+    }
+    return src, spec, pages
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

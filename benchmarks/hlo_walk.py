@@ -1,0 +1,88 @@
+"""Hillclimb profiling tool: per-collective and per-dot attribution with
+loop-trip multipliers, from a compiled cell's HLO.
+
+  PYTHONPATH=src python -m benchmarks.hlo_walk --arch glm4-9b --shape train_4k
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from collections import defaultdict
+
+
+def walk_cell(arch: str, shape: str, multi_pod: bool = False, top: int = 18):
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.launch import hlo_cost as hc
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+
+    cfg = get_arch(arch).config
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = build_cell(cfg, shape, mesh)
+    with mesh:
+        compiled = (
+            jax.jit(spec.fn, in_shardings=spec.in_shardings)
+            .lower(*spec.args)
+            .compile()
+        )
+    txt = compiled.as_text()
+    model = hc.HloCostModel(txt)
+    comps = model.comps
+    colls: dict = defaultdict(float)
+    dots: dict = defaultdict(float)
+
+    def collect(comp_name, scale):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            kind = None
+            for k in hc._COLLECTIVES:
+                if ins.op == k or ins.op == k + "-start":
+                    kind = k
+            if kind:
+                payload = max(
+                    hc._operand_bytes(ins, comp), hc._type_numel_bytes(ins.type_str)
+                )
+                colls[f"{kind} {ins.type_str[:52]}"] += payload * scale
+            elif ins.op == "dot":
+                dots[f"dot {ins.type_str[:52]}"] += hc._dot_flops(ins, comp) * scale
+            elif ins.op == "while":
+                m = hc._TRIP_RE.search(ins.attrs)
+                trips = int(m.group(1)) if m else 1
+                b = hc._BODY_RE.search(ins.attrs)
+                if b:
+                    collect(b.group(1), scale * trips)
+            elif ins.op in ("fusion", "call"):
+                m = hc._CALLS_RE.search(ins.attrs)
+                if m:
+                    collect(m.group(1), scale)
+
+    collect("__entry__", 1)
+    total = model.total()
+    print(f"{arch} x {shape}: flops={total.flops/1e12:.2f}T "
+          f"hbm={total.hbm_bytes/1e12:.3f}TB coll={total.coll_bytes/1e9:.1f}GB")
+    print("-- collectives (bytes x trips) --")
+    for k, v in sorted(colls.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {v/1e9:8.2f} GB  {k}")
+    print("-- dots (flops x trips) --")
+    for k, v in sorted(dots.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"  {v/1e12:8.2f} T   {k}")
+    return compiled
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi", action="store_true")
+    args = ap.parse_args()
+    walk_cell(args.arch, args.shape, args.multi)
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    main()

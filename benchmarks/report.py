@@ -1,0 +1,56 @@
+"""Render results/dryrun.jsonl as the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.bench_roofline import DEFAULT_PATH, load
+
+
+def gib(b: float) -> str:
+    return f"{b / 2**30:.2f}"
+
+
+def table(mesh: str, recs: list) -> str:
+    rows = [
+        "| arch | shape | c (ms) | m (ms) | x (ms) | dominant | temp GiB/dev "
+        "| args GiB/dev | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | *skipped:* "
+                f"{r['reason'][:40]} | — | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR: {r['reason'][:50]} |")
+            continue
+        t = r["roofline"]
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:.1f} "
+            f"| {t['memory_s']*1e3:.1f} | {t['collective_s']*1e3:.1f} "
+            f"| {t['dominant']} | {gib(m['temp_bytes'])} "
+            f"| {gib(m['argument_bytes'])} | {t['useful_ratio']:.2f} "
+            f"| {t['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH
+    recs = load(path)
+    for mesh in ("single", "multi"):
+        n_ok = sum(1 for r in recs if r["mesh"] == mesh and r["status"] == "ok")
+        n_skip = sum(1 for r in recs if r["mesh"] == mesh and r["status"] == "skip")
+        print(f"\n### {mesh}-pod mesh ({n_ok} compiled, {n_skip} skipped)\n")
+        print(table(mesh, recs))
+
+
+if __name__ == "__main__":
+    main()

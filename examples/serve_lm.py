@@ -1,0 +1,85 @@
+"""Serve a small LM with batched requests: prefill + greedy decode.
+
+Demonstrates the serving substrate on reduced configs of the assigned
+architectures — KV caches for attention layers, recurrent state for
+SSM/hybrid layers, cross-attention caches for the enc-dec model.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch jamba-v0.1-52b --gen 24
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_arch
+from repro.distributed.sharding import ShardingRules
+from repro.models import encdec, transformer as tfm
+from repro.train import make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="jamba-v0.1-52b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced
+    rules = ShardingRules.make(None)
+    rng = np.random.default_rng(0)
+    max_seq = args.prompt_len + args.gen
+    B = args.batch
+
+    if cfg.is_encdec:
+        params = encdec.init_params(jax.random.PRNGKey(0), cfg)
+        frames = jnp.asarray(rng.normal(size=(B, args.prompt_len, cfg.d_model)),
+                             jnp.float32)
+        enc_out = encdec.encode(params, frames, cfg, rules)
+        k, hd = cfg.n_kv_heads, cfg.hd
+        def cross_kv(lp):
+            kk = (enc_out @ lp["xattn"]["wk"].astype(enc_out.dtype)
+                  ).reshape(B, args.prompt_len, k, hd)
+            vv = (enc_out @ lp["xattn"]["wv"].astype(enc_out.dtype)
+                  ).reshape(B, args.prompt_len, k, hd)
+            return kk, vv
+        cks, cvs = jax.vmap(cross_kv)(params["dec_layers"])
+        caches = {
+            "self_k": jnp.zeros((cfg.n_layers, B, max_seq, k, hd), enc_out.dtype),
+            "self_v": jnp.zeros((cfg.n_layers, B, max_seq, k, hd), enc_out.dtype),
+            "cross_k": cks, "cross_v": cvs,
+        }
+        decode = lambda p, t, c, n: encdec.decode_step(p, t, c, n, cfg, rules)
+        token = jnp.ones((B, 1), jnp.int32)
+        start = 0
+        print(f"{cfg.name}: encoded {args.prompt_len} frames; decoding...")
+    else:
+        params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        prompts = jnp.asarray(
+            rng.integers(1, cfg.vocab_size, (B, args.prompt_len)), jnp.int32)
+        logits, caches = jax.jit(
+            lambda p, t: tfm.prefill(p, t, cfg, rules, max_seq))(params, prompts)
+        token = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+        decode = lambda p, t, c, n: tfm.decode_step(p, t, c, n, cfg, rules)
+        start = args.prompt_len
+        print(f"{cfg.name}: prefilled {B}x{args.prompt_len}; decoding...")
+
+    serve = jax.jit(make_serve_step(decode))
+    out = [token]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        token, logits, caches = serve(params, token, caches, jnp.int32(start + i))
+        out.append(token)
+    jax.block_until_ready(token)
+    dt = time.time() - t0
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    assert gen.min() >= 0 and gen.max() < cfg.vocab_size
+    print(f"decoded {args.gen-1} steps x {B} requests in {dt:.2f}s "
+          f"({B*(args.gen-1)/dt:.1f} tok/s); sample: {gen[0, :12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from repro.common.util import (
+    Timer,
+    bytes_of_tree,
+    human_bytes,
+    human_flops,
+    param_count,
+)
+
+__all__ = [
+    "Timer",
+    "bytes_of_tree",
+    "human_bytes",
+    "human_flops",
+    "param_count",
+]

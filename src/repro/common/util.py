@@ -1,0 +1,69 @@
+"""Small shared utilities: timing, tree accounting, formatting."""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Any, Iterator
+
+import jax
+import numpy as np
+
+
+class Timer:
+    """Wall-clock timer usable as context manager or start/stop pairs."""
+
+    def __init__(self) -> None:
+        self.elapsed = 0.0
+        self._start: float | None = None
+
+    def __enter__(self) -> "Timer":
+        self._start = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        assert self._start is not None
+        self.elapsed += time.perf_counter() - self._start
+        self._start = None
+
+
+@contextmanager
+def timed(label: str, sink: dict | None = None) -> Iterator[None]:
+    t0 = time.perf_counter()
+    yield
+    dt = time.perf_counter() - t0
+    if sink is not None:
+        sink[label] = sink.get(label, 0.0) + dt
+
+
+def bytes_of_tree(tree: Any) -> int:
+    """Total nbytes across all array leaves of a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def param_count(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) for l in leaves if hasattr(l, "shape"))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} EiB"
+
+
+def human_flops(n: float) -> str:
+    for unit in ("FLOP", "KFLOP", "MFLOP", "GFLOP", "TFLOP", "PFLOP"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f} {unit}"
+        n /= 1000.0
+    return f"{n:.2f} EFLOP"

@@ -1,0 +1,8 @@
+from repro.configs.registry import (
+    ARCH_IDS,
+    get_arch,
+    get_recsys,
+    list_arch_ids,
+)
+
+__all__ = ["ARCH_IDS", "get_arch", "get_recsys", "list_arch_ids"]

@@ -1,0 +1,35 @@
+"""RM1-RM5 — the paper's own RecSys models (Table I).
+
+RM1 = public Criteo scale; RM2-5 = production-scale synthetics.
+Full configs are exercised by the dry-run and the PreSto benchmarks;
+REDUCED variants (tiny embedding tables) run the smoke tests on CPU.
+"""
+
+import dataclasses
+
+from repro.data.synth import RM_CONFIGS, RMDataConfig
+from repro.models.recsys import RecSysConfig
+
+CONFIGS = {
+    f"rm{i}": RecSysConfig(name=f"rm{i}", data=RM_CONFIGS[f"rm{i}"])
+    for i in range(1, 6)
+}
+
+
+def reduced_data(cfg: RMDataConfig, rows: int = 256) -> RMDataConfig:
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        bucket_size=min(cfg.bucket_size, 64),
+        id_space=1 << 16,
+        embedding_rows=1024,
+        rows_per_partition=rows,
+    )
+
+
+REDUCED = {
+    f"rm{i}": RecSysConfig(
+        name=f"rm{i}-smoke", data=reduced_data(RM_CONFIGS[f"rm{i}"])
+    )
+    for i in range(1, 6)
+}

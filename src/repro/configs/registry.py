@@ -1,0 +1,46 @@
+"""Architecture registry: --arch <id> resolution for all assigned configs."""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    config: ModelConfig
+    reduced: ModelConfig
+    skip_shapes: frozenset
+
+
+def get_arch(arch_id: str) -> ArchEntry:
+    mod = importlib.import_module(_MODULES[arch_id])
+    return ArchEntry(mod.CONFIG, mod.REDUCED, mod.SKIP_SHAPES)
+
+
+def list_arch_ids() -> tuple:
+    return ARCH_IDS
+
+
+def get_recsys(name: str, *, reduced: bool = False):
+    from repro.configs import recsys_rm
+
+    return (recsys_rm.REDUCED if reduced else recsys_rm.CONFIGS)[name]

@@ -1,0 +1,41 @@
+# The paper's primary contribution: storage-centric (ISP) data preprocessing
+# for RecSys training, as a composable JAX module.
+from repro.core.costmodel import (
+    Comparison,
+    DeviceModel,
+    cost_efficiency,
+    energy_efficiency,
+    tco_usd,
+)
+from repro.core.pipeline import PipelineStats, TrainingPipeline
+from repro.core.planner import ProvisioningPlan, measure_throughput
+from repro.core.preprocess import (
+    minibatch_shape_dtypes,
+    pages_from_partition,
+    pages_shape_dtypes,
+    preprocess_pages,
+    stage_functions,
+)
+from repro.core.presto import PreStoEngine, minibatch_pspec, pages_pspec
+from repro.core.spec import TransformSpec
+
+__all__ = [
+    "Comparison",
+    "DeviceModel",
+    "PipelineStats",
+    "PreStoEngine",
+    "ProvisioningPlan",
+    "TrainingPipeline",
+    "TransformSpec",
+    "cost_efficiency",
+    "energy_efficiency",
+    "measure_throughput",
+    "minibatch_pspec",
+    "minibatch_shape_dtypes",
+    "pages_from_partition",
+    "pages_pspec",
+    "pages_shape_dtypes",
+    "preprocess_pages",
+    "stage_functions",
+    "tco_usd",
+]

@@ -1,0 +1,122 @@
+"""Producer-consumer training pipeline (paper Fig. 9).
+
+TrainingPipeline glues together:
+  train manager    — owns the input queue, feeds the accelerator step;
+  preprocess mgr   — spawns preprocessing workers (PrefetchLoader threads)
+                     that Extract partitions from the store and Transform
+                     them via a PreStoEngine;
+  provisioning     — T/P measurement then worker count (core.planner).
+
+Utilization accounting mirrors the paper's Fig. 3: consumer utilization =
+time spent inside train steps / wall time; starvation = time blocked on the
+queue.  (On this 1-core container the absolute numbers are not TPU numbers —
+the *pipeline mechanics* are what is exercised; fleet-scale throughput uses
+the analytical model, exactly like the paper's §V-B methodology.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+
+from repro.core.planner import ProvisioningPlan, measure_throughput
+from repro.core.presto import PreStoEngine
+from repro.data.loader import PrefetchLoader
+from repro.data.storage import PartitionedStore
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    steps: int = 0
+    train_time_s: float = 0.0
+    starved_time_s: float = 0.0
+    wall_time_s: float = 0.0
+    reissues: int = 0
+
+    @property
+    def utilization(self) -> float:
+        return self.train_time_s / max(self.wall_time_s, 1e-9)
+
+
+class TrainingPipeline:
+    def __init__(
+        self,
+        engine: PreStoEngine,
+        store: PartitionedStore,
+        train_step: Callable,  # (state, minibatch) -> (state, metrics)
+        *,
+        num_workers: int = 2,
+        queue_depth: int = 4,
+        straggler_timeout: float = 30.0,
+    ):
+        self.engine = engine
+        self.store = store
+        self.train_step = train_step
+        self.num_workers = num_workers
+        self.queue_depth = queue_depth
+        self.straggler_timeout = straggler_timeout
+        self._preprocess = engine.jit_preprocess()
+
+    def _produce(self, pid: int):
+        """One preprocessing worker's job: Extract + Transform one partition."""
+        pages = self.engine.stage_partition(self.store, pid)
+        pages = jax.tree.map(jax.numpy.asarray, pages)
+        mb = self._preprocess(pages)
+        jax.block_until_ready(mb)
+        return mb
+
+    def provision(self, state, partition_for_probe: int = 0) -> ProvisioningPlan:
+        """Paper step 2: measure T with dummy batches, P per worker, plan T/P."""
+        probe = self._produce(partition_for_probe)
+        rows = int(probe["labels"].shape[0])
+        state_holder = [state]
+
+        def train_once():
+            new_state, metrics = self.train_step(state_holder[0], probe)
+            state_holder[0] = new_state
+            return metrics
+
+        t_meas = measure_throughput(train_once, rows, iters=5, warmup=2)
+        p_meas = measure_throughput(
+            lambda: self._produce(partition_for_probe), rows, iters=3, warmup=1
+        )
+        return ProvisioningPlan.derive(t_meas.samples_per_s, p_meas.samples_per_s)
+
+    def run(
+        self,
+        state,
+        partition_ids: Iterable[int],
+        *,
+        max_steps: Optional[int] = None,
+    ) -> tuple[object, PipelineStats, list]:
+        stats = PipelineStats()
+        metrics_log: list = []
+        loader = PrefetchLoader(
+            partition_ids,
+            self._produce,
+            num_workers=self.num_workers,
+            depth=self.queue_depth,
+            straggler_timeout=self.straggler_timeout,
+        ).start()
+        wall0 = time.perf_counter()
+        try:
+            q0 = time.perf_counter()
+            for pid, mb in loader:
+                stats.starved_time_s += time.perf_counter() - q0
+                t0 = time.perf_counter()
+                state, metrics = self.train_step(state, mb)
+                jax.block_until_ready(metrics)
+                stats.train_time_s += time.perf_counter() - t0
+                stats.steps += 1
+                metrics_log.append(jax.tree.map(float, metrics))
+                if max_steps is not None and stats.steps >= max_steps:
+                    break
+                q0 = time.perf_counter()
+        finally:
+            loader.stop()
+        stats.wall_time_s = time.perf_counter() - wall0
+        stats.reissues = loader.work.reissues
+        return state, stats, metrics_log

@@ -1,0 +1,232 @@
+"""The ETL Transform graph: encoded pages -> train-ready mini-batch.
+
+Two execution modes over identical semantics:
+
+* ``fused``   — the PreSto path: decode+transform fused per column family
+                (one HBM read of encoded bytes, one write of tensors).
+* ``unfused`` — the Disagg/CPU-style multi-step path (decode, then each
+                transform as its own pass) used for the per-stage latency
+                breakdown (paper Fig. 5 / Fig. 12) and as the ablation
+                baseline.
+
+Everything here is jit-able and shard_map-able; shapes are static given a
+``PartitionSchema`` + ``TransformSpec``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spec import TransformSpec
+from repro.data.columnar import Partition
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+MiniBatch = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Host-side page staging: Partition (numpy, flat pages) -> kernel layout
+
+
+def pages_from_partition(part: Partition, spec: TransformSpec) -> Dict[str, np.ndarray]:
+    """Stack per-column pages into the grouped arrays the kernels consume."""
+    cfg = spec.cfg
+    rows = part.schema.rows
+    dense = []
+    for i in range(cfg.n_dense):
+        col = part.columns[f"d{i}"]
+        dense.append(K.regroup_bytesplit(col.pages["data"], rows))
+    sparse, lengths = [], []
+    n_vals = rows * cfg.max_sparse_len
+    for i in range(cfg.n_sparse):
+        col = part.columns[f"s{i}"]
+        sparse.append(K.regroup_bitpack(col.pages["values"], n_vals, cfg.id_width))
+        lengths.append(K.regroup_bitpack(col.pages["lengths"], rows, cfg.len_width))
+    label_words = part.columns["label"].pages["data"][:rows]
+    return {
+        "dense_words": np.stack(dense),  # (n_dense, rows/4, 4) u32
+        "sparse_words": np.stack(sparse),  # (n_sparse, rows*L/32, w) u32
+        "length_words": np.stack(lengths),  # (n_sparse, rows/32, lw) u32
+        "label_words": label_words,  # (rows,) u32
+    }
+
+
+def pages_shape_dtypes(spec: TransformSpec, rows: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the page arrays (dry-run inputs)."""
+    cfg = spec.cfg
+    u32 = jnp.uint32
+    return {
+        "dense_words": jax.ShapeDtypeStruct((cfg.n_dense, rows // 4, 4), u32),
+        "sparse_words": jax.ShapeDtypeStruct(
+            (cfg.n_sparse, rows * cfg.max_sparse_len // 32, cfg.id_width), u32
+        ),
+        "length_words": jax.ShapeDtypeStruct(
+            (cfg.n_sparse, rows // 32, cfg.len_width), u32
+        ),
+        "label_words": jax.ShapeDtypeStruct((rows,), u32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Transform graph
+
+
+def _decode_lengths(length_words: jax.Array, spec: TransformSpec, rows: int) -> jax.Array:
+    """(n_sparse, rows/32, lw) -> (rows, n_sparse) i32.  Tiny; pure jnp."""
+    lens = R.bitunpack_grouped(length_words, spec.cfg.len_width)  # (S, G, 32)
+    return lens.reshape(spec.cfg.n_sparse, rows).T.astype(jnp.int32)
+
+
+def _decode_labels(label_words: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(label_words, jnp.float32)
+
+
+def preprocess_pages(
+    pages: Dict[str, jax.Array],
+    spec: TransformSpec,
+    *,
+    mode: str = "fused",
+    interpret: bool | None = None,
+) -> MiniBatch:
+    """Full Transform for one partition shard. Returns the train-ready batch.
+
+    Output:
+      dense          (rows, n_dense) f32      — Log-normalized
+      multi_hot_ids  (rows, n_sparse, L) i32  — SigridHashed raw sparse ids
+      lengths        (rows, n_sparse) i32     — multi-hot lengths
+      one_hot_ids    (rows, n_generated) i32  — Bucketize+SigridHash generated
+      labels         (rows,) f32
+    """
+    cfg = spec.cfg
+    rows = pages["label_words"].shape[0]
+    L = cfg.max_sparse_len
+
+    src = jnp.asarray(np.asarray(spec.generated_source, np.int32))
+    if mode == "fused":
+        # -- PreSto ISP path: decode fused with transform ---------------------
+        dense_norm = K.fused_dense(pages["dense_words"], interpret=interpret)
+        hashed = K.fused_sparse(
+            pages["sparse_words"],
+            spec.sparse_seeds,
+            spec.sparse_max,
+            width=cfg.id_width,
+            interpret=interpret,
+        )
+        # feature GENERATION fully fused: decode+Bucketize+SigridHash in one
+        # kernel over the sourced dense columns (SPerf preprocess it.1)
+        gen_hashed = K.fused_gen(
+            jnp.take(pages["dense_words"], src, axis=0),
+            spec.bucket_boundaries,
+            spec.gen_seeds,
+            spec.gen_max,
+            interpret=interpret,
+        )
+        return {
+            "dense": dense_norm.T,
+            "multi_hot_ids": hashed.reshape(cfg.n_sparse, rows, L).transpose(1, 0, 2),
+            "lengths": _decode_lengths(pages["length_words"], spec, rows),
+            "one_hot_ids": gen_hashed.T,
+            "labels": _decode_labels(pages["label_words"]),
+        }
+    elif mode == "unfused":
+        # -- Disagg-style multi-pass path ------------------------------------
+        dense_raw = K.decode_bytesplit(pages["dense_words"], interpret=interpret)
+        sparse_raw = K.decode_bitpack(
+            pages["sparse_words"], width=cfg.id_width, interpret=interpret
+        )
+        dense_norm = K.lognorm(dense_raw, interpret=interpret)
+        hashed = K.sigridhash(
+            sparse_raw, spec.sparse_seeds, spec.sparse_max, interpret=interpret
+        )
+        gen_inputs = jnp.take(dense_raw, src, axis=0)  # (n_gen, rows) raw
+    else:
+        raise ValueError(mode)
+
+    # -- Feature generation: Bucketize sourced dense cols, then normalize ----
+    bucket_ids = K.bucketize(
+        gen_inputs, spec.bucket_boundaries, interpret=interpret
+    )  # (n_gen, rows) in [0, m]
+    gen_hashed = K.sigridhash(
+        bucket_ids, spec.gen_seeds, spec.gen_max, interpret=interpret
+    )
+
+    # -- Mini-batch formation (step 3 of Fig. 1) -------------------------------
+    return {
+        "dense": dense_norm.T,  # (rows, n_dense)
+        "multi_hot_ids": hashed.reshape(cfg.n_sparse, rows, L).transpose(1, 0, 2),
+        "lengths": _decode_lengths(pages["length_words"], spec, rows),
+        "one_hot_ids": gen_hashed.T,  # (rows, n_gen)
+        "labels": _decode_labels(pages["label_words"]),
+    }
+
+
+def minibatch_shape_dtypes(spec: TransformSpec, rows: int) -> MiniBatch:
+    cfg = spec.cfg
+    return {
+        "dense": jax.ShapeDtypeStruct((rows, cfg.n_dense), jnp.float32),
+        "multi_hot_ids": jax.ShapeDtypeStruct(
+            (rows, cfg.n_sparse, cfg.max_sparse_len), jnp.int32
+        ),
+        "lengths": jax.ShapeDtypeStruct((rows, cfg.n_sparse), jnp.int32),
+        "one_hot_ids": jax.ShapeDtypeStruct((rows, cfg.n_generated), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((rows,), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Stage-split functions for the latency breakdown (Fig. 5 / Fig. 12)
+
+
+def stage_functions(spec: TransformSpec, *, interpret: bool | None = None):
+    """Individually jit-able callables per ETL stage, for stage timing."""
+    cfg = spec.cfg
+
+    def extract_decode(pages):
+        dense_raw = K.decode_bytesplit(pages["dense_words"], interpret=interpret)
+        sparse_raw = K.decode_bitpack(
+            pages["sparse_words"], width=cfg.id_width, interpret=interpret
+        )
+        return dense_raw, sparse_raw
+
+    def gen_bucketize(dense_raw):
+        src = jnp.asarray(np.asarray(spec.generated_source, np.int32))
+        return K.bucketize(
+            jnp.take(dense_raw, src, axis=0),
+            spec.bucket_boundaries,
+            interpret=interpret,
+        )
+
+    def norm_sigridhash(sparse_raw, bucket_ids):
+        h = K.sigridhash(
+            sparse_raw, spec.sparse_seeds, spec.sparse_max, interpret=interpret
+        )
+        g = K.sigridhash(bucket_ids, spec.gen_seeds, spec.gen_max, interpret=interpret)
+        return h, g
+
+    def norm_log(dense_raw):
+        return K.lognorm(dense_raw, interpret=interpret)
+
+    def form_minibatch(pages, dense_norm, hashed, gen_hashed):
+        rows = pages["label_words"].shape[0]
+        return {
+            "dense": dense_norm.T,
+            "multi_hot_ids": hashed.reshape(
+                cfg.n_sparse, rows, cfg.max_sparse_len
+            ).transpose(1, 0, 2),
+            "lengths": _decode_lengths(pages["length_words"], spec, rows),
+            "one_hot_ids": gen_hashed.T,
+            "labels": _decode_labels(pages["label_words"]),
+        }
+
+    return {
+        "extract_decode": jax.jit(extract_decode),
+        "gen_bucketize": jax.jit(gen_bucketize),
+        "norm_sigridhash": jax.jit(norm_sigridhash),
+        "norm_log": jax.jit(norm_log),
+        "form_minibatch": jax.jit(form_minibatch),
+    }

@@ -1,0 +1,145 @@
+"""PreStoEngine: storage-centric vs. disaggregated preprocessing placement.
+
+The paper's two system design points, rendered in SPMD:
+
+* ``presto`` (Fig. 8)   — every mesh shard preprocesses the partition rows it
+  already owns; output batch sharding == input page sharding, so the compiled
+  program contains **zero collectives** between Extract and Load.
+
+* ``disagg`` (Fig. 7b)  — preprocessing happens on a *different* shard than
+  both the storage shard and the consuming trainer shard.  We render the two
+  network hops of server disaggregation as explicit ``ppermute``s on the
+  ``data`` axis: raw pages hop storage→preprocessor, train-ready tensors hop
+  preprocessor→trainer.  Their operand bytes are exactly the paper's
+  copy-in/copy-out traffic and are measurable in the compiled HLO
+  (see benchmarks/bench_comm.py and EXPERIMENTS.md §Dry-run).
+
+Both modes compose with the training step into ONE jit program
+(`repro.train.step.make_train_step_with_ingest`), which is the end-to-end
+"online preprocessing feeds training" pipeline of Fig. 1.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.preprocess import (
+    MiniBatch,
+    pages_from_partition,
+    pages_shape_dtypes,
+    preprocess_pages,
+)
+from repro.core.spec import TransformSpec
+from repro.data.storage import PartitionedStore
+
+
+def pages_pspec() -> Dict[str, P]:
+    """Row-group axis of every page array is sharded over the data axis."""
+    return {
+        "dense_words": P(None, "data", None),
+        "sparse_words": P(None, "data", None),
+        "length_words": P(None, "data", None),
+        "label_words": P("data"),
+    }
+
+
+def minibatch_pspec() -> Dict[str, P]:
+    return {
+        "dense": P("data", None),
+        "multi_hot_ids": P("data", None, None),
+        "lengths": P("data", None),
+        "one_hot_ids": P("data", None),
+        "labels": P("data"),
+    }
+
+
+class PreStoEngine:
+    """Owns a TransformSpec and compiles the sharded preprocessing program."""
+
+    def __init__(
+        self,
+        spec: TransformSpec,
+        mesh: Optional[Mesh] = None,
+        *,
+        placement: str = "presto",
+        kernel_mode: str = "fused",
+        interpret: bool | None = None,
+    ):
+        assert placement in ("presto", "disagg")
+        self.spec = spec
+        self.mesh = mesh
+        self.placement = placement
+        self.kernel_mode = kernel_mode
+        self.interpret = interpret
+
+    # -- single-shard (local) path -------------------------------------------
+    def preprocess_local(self, pages: Dict[str, jax.Array]) -> MiniBatch:
+        return preprocess_pages(
+            pages, self.spec, mode=self.kernel_mode, interpret=self.interpret
+        )
+
+    # -- sharded global path ---------------------------------------------------
+    def preprocess_global(self, pages: Dict[str, jax.Array]) -> MiniBatch:
+        """Preprocess a global batch of encoded pages on the mesh.
+
+        In presto placement, the body is pure local compute. In disagg
+        placement, pages hop +1 on the data axis before compute and the
+        mini-batch hops -1 after, modeling the disaggregated pool's
+        copy-in/copy-out (the hops are real collective-permutes in the HLO).
+        """
+        if self.mesh is None:
+            return self.preprocess_local(pages)
+        mesh = self.mesh
+        data_axis = "data"
+        n_data = mesh.shape[data_axis]
+
+        def body(pages):
+            if self.placement == "disagg" and n_data > 1:
+                perm_in = [(i, (i + 1) % n_data) for i in range(n_data)]
+                pages = jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, data_axis, perm_in), pages
+                )
+            mb = self.preprocess_local(pages)
+            if self.placement == "disagg" and n_data > 1:
+                perm_out = [(i, (i - 1) % n_data) for i in range(n_data)]
+                mb = jax.tree.map(
+                    lambda x: jax.lax.ppermute(x, data_axis, perm_out), mb
+                )
+            return mb
+
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(pages_pspec(),),
+            out_specs=minibatch_pspec(),
+            check_vma=False,
+        )(pages)
+
+    def jit_preprocess(self):
+        """Compiled global preprocessing step with explicit shardings."""
+        if self.mesh is None:
+            return jax.jit(self.preprocess_local)
+        in_sh = {
+            k: NamedSharding(self.mesh, v) for k, v in pages_pspec().items()
+        }
+        out_sh = {
+            k: NamedSharding(self.mesh, v) for k, v in minibatch_pspec().items()
+        }
+        return jax.jit(
+            self.preprocess_global, in_shardings=(in_sh,), out_shardings=out_sh
+        )
+
+    # -- staging ----------------------------------------------------------------
+    def stage_partition(self, store: PartitionedStore, pid: int) -> Dict[str, np.ndarray]:
+        """Extract(Read): fetch + lay out one partition's pages (host side)."""
+        return pages_from_partition(store.read(pid), self.spec)
+
+    def pages_struct(self, rows: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        return pages_shape_dtypes(self.spec, rows)

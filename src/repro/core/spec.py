@@ -1,0 +1,50 @@
+"""TransformSpec: the declarative description of one RecSys ETL Transform.
+
+Mirrors what the paper's preprocess manager receives from the train manager
+at job launch (step 2 of Fig. 9): which dense features are Log-normalized,
+which are Bucketized into new sparse features (with which boundaries), and
+the (seed, table-size) pair for every SigridHash.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.synth import RMDataConfig, SyntheticRecSysSource
+
+
+@dataclasses.dataclass
+class TransformSpec:
+    cfg: RMDataConfig
+    # feature generation (Bucketize): generated feature g reads dense column
+    # generated_source[g] and digitizes against bucket_boundaries[g].
+    bucket_boundaries: np.ndarray  # (n_generated, bucket_size) f32 sorted
+    generated_source: tuple[int, ...]  # static dense-column index per gen feat
+    # feature normalization (SigridHash): per-table seed + embedding rows.
+    sparse_seeds: np.ndarray  # (n_sparse,) uint32
+    sparse_max: np.ndarray  # (n_sparse,) uint32
+    gen_seeds: np.ndarray  # (n_generated,) uint32
+    gen_max: np.ndarray  # (n_generated,) uint32
+
+    @staticmethod
+    def from_source(src: SyntheticRecSysSource) -> "TransformSpec":
+        cfg = src.cfg
+        return TransformSpec(
+            cfg=cfg,
+            bucket_boundaries=src.bucket_boundaries,
+            generated_source=tuple(int(i) for i in src.generated_source),
+            sparse_seeds=(np.arange(cfg.n_sparse, dtype=np.uint32) * 2654435761 + 1),
+            sparse_max=np.full(cfg.n_sparse, cfg.embedding_rows, np.uint32),
+            gen_seeds=(np.arange(cfg.n_generated, dtype=np.uint32) * 40503 + 7),
+            gen_max=np.full(cfg.n_generated, cfg.embedding_rows, np.uint32),
+        )
+
+    @property
+    def n_tables(self) -> int:
+        return self.cfg.n_tables
+
+    def table_sizes(self) -> np.ndarray:
+        """Embedding rows per table (multi-hot tables first, then generated)."""
+        return np.concatenate([self.sparse_max, self.gen_max]).astype(np.int64)

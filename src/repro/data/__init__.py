@@ -1,0 +1,45 @@
+from repro.data.encoding import (
+    bitpack,
+    bitunpack,
+    bytesplit_encode,
+    bytesplit_decode,
+    dict_encode,
+    dict_decode,
+    pack_words_needed,
+)
+from repro.data.columnar import (
+    ColumnSchema,
+    EncodedColumn,
+    Partition,
+    PartitionSchema,
+    decode_partition_numpy,
+    encode_partition,
+)
+from repro.data.synth import RawBatch, SyntheticRecSysSource, make_rm_source
+from repro.data.storage import PartitionedStore
+from repro.data.loader import PrefetchLoader, WorkQueue
+from repro.data.tokens import TokenSynthesizer, lm_input_batch
+
+__all__ = [
+    "ColumnSchema",
+    "EncodedColumn",
+    "Partition",
+    "PartitionSchema",
+    "PartitionedStore",
+    "PrefetchLoader",
+    "RawBatch",
+    "SyntheticRecSysSource",
+    "TokenSynthesizer",
+    "WorkQueue",
+    "bitpack",
+    "bitunpack",
+    "bytesplit_decode",
+    "bytesplit_encode",
+    "decode_partition_numpy",
+    "dict_decode",
+    "dict_encode",
+    "encode_partition",
+    "lm_input_batch",
+    "make_rm_source",
+    "pack_words_needed",
+]

@@ -1,0 +1,249 @@
+"""Partitioned columnar file format (Parquet-lite) for raw RecSys features.
+
+A *partition* is a self-contained group of rows (one training mini-batch in
+the paper: 8,192 rows).  Partitions are mutually independent — the property
+PreSto exploits: all transforms for a mini-batch touch exactly one partition,
+so preprocessing can run wherever that partition lives with zero cross-shard
+communication.
+
+On-disk layout (one file per partition):
+    [8B magic 'RPRESTO1'][4B header_len][header JSON][page words...]
+Each column's pages are contiguous uint32 word arrays whose sizes are fully
+determined by the dataset-level schema, so a partition can be decoded by a
+single pre-compiled XLA program.
+
+Column kinds
+------------
+dense : float32 per row.  encodings: 'plain' | 'bytesplit'
+sparse: variable-length list of int32 ids per row, stored ragged:
+        lengths  bitpacked at `len_width` bits   (per-row list lengths)
+        values   bitpacked at `id_width` bits or dictionary-encoded
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import struct
+from typing import Dict, List, Mapping
+
+import numpy as np
+
+from repro.data import encoding as enc
+
+_MAGIC = b"RPRESTO1"
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSchema:
+    name: str
+    kind: str  # 'dense' | 'sparse'
+    encoding: str  # dense: 'plain'|'bytesplit'; sparse: 'bitpack'|'dict'
+    # sparse-only static parameters (dataset-level, fixed across partitions):
+    max_len: int = 1  # padded list length after decode
+    id_width: int = 32  # bit width of raw ids ('bitpack')
+    len_width: int = 8  # bit width of per-row lengths
+    dict_size: int = 0  # >0 for 'dict' encoding (fixed dictionary capacity)
+
+    @property
+    def code_width(self) -> int:
+        return enc.width_for(max(self.dict_size - 1, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSchema:
+    """Dataset-level schema: identical for every partition of a dataset."""
+
+    rows: int
+    columns: tuple[ColumnSchema, ...]
+
+    def dense_columns(self) -> List[ColumnSchema]:
+        return [c for c in self.columns if c.kind == "dense"]
+
+    def sparse_columns(self) -> List[ColumnSchema]:
+        return [c for c in self.columns if c.kind == "sparse"]
+
+    def page_sizes(self, col: ColumnSchema) -> Dict[str, int]:
+        """Word counts of each page of `col` — static given the schema."""
+        r = self.rows
+        if col.kind == "dense":
+            return {"data": r}  # 1 word per float (plain and bytesplit alike)
+        total_vals = r * col.max_len  # ragged values stored padded-capacity
+        sizes = {"lengths": enc.pack_words_needed(r, col.len_width)}
+        if col.encoding == "dict":
+            sizes["dict"] = col.dict_size
+            sizes["values"] = enc.pack_words_needed(total_vals, col.code_width)
+        else:
+            sizes["values"] = enc.pack_words_needed(total_vals, col.id_width)
+        return sizes
+
+    def encoded_words(self) -> int:
+        return sum(sum(self.page_sizes(c).values()) for c in self.columns)
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "rows": self.rows,
+                "columns": [dataclasses.asdict(c) for c in self.columns],
+            }
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "PartitionSchema":
+        d = json.loads(s)
+        return PartitionSchema(
+            rows=d["rows"],
+            columns=tuple(ColumnSchema(**c) for c in d["columns"]),
+        )
+
+
+@dataclasses.dataclass
+class EncodedColumn:
+    schema: ColumnSchema
+    pages: Dict[str, np.ndarray]  # page name -> uint32 words
+
+
+@dataclasses.dataclass
+class Partition:
+    """One encoded partition: the unit of in-storage preprocessing."""
+
+    partition_id: int
+    schema: PartitionSchema
+    columns: Dict[str, EncodedColumn]
+
+    def nbytes(self) -> int:
+        return sum(
+            int(p.nbytes) for c in self.columns.values() for p in c.pages.values()
+        )
+
+    def page_arrays(self) -> Dict[str, np.ndarray]:
+        """Flat dict 'col/page' -> words, the kernel-side input layout."""
+        out = {}
+        for cname, col in self.columns.items():
+            for pname, words in col.pages.items():
+                out[f"{cname}/{pname}"] = words
+        return out
+
+
+def encode_partition(
+    partition_id: int,
+    schema: PartitionSchema,
+    dense: Mapping[str, np.ndarray],
+    sparse_values: Mapping[str, np.ndarray],
+    sparse_lengths: Mapping[str, np.ndarray],
+) -> Partition:
+    """Encode raw host arrays into a Partition.
+
+    dense[name]         : (rows,) float
+    sparse_values[name] : (rows, max_len) int — entries beyond length are 0
+    sparse_lengths[name]: (rows,) int, each <= max_len
+    """
+    cols: Dict[str, EncodedColumn] = {}
+    for cs in schema.columns:
+        if cs.kind == "dense":
+            v = np.asarray(dense[cs.name], dtype=np.float32)
+            assert v.shape == (schema.rows,), (cs.name, v.shape)
+            if cs.encoding == "bytesplit":
+                words, _ = enc.bytesplit_encode(v)
+            else:
+                words = enc.plain_f32_encode(v)
+            cols[cs.name] = EncodedColumn(cs, {"data": words})
+        else:
+            vals = np.asarray(sparse_values[cs.name], dtype=np.int64)
+            lens = np.asarray(sparse_lengths[cs.name], dtype=np.int64)
+            assert vals.shape == (schema.rows, cs.max_len), (cs.name, vals.shape)
+            assert lens.max(initial=0) <= cs.max_len
+            flat = vals.reshape(-1)
+            pages = {"lengths": enc.bitpack(lens, cs.len_width)}
+            if cs.encoding == "dict":
+                # fixed-capacity dictionary: ids are already < dict_size by
+                # construction (dataset-level id space); dictionary is the
+                # identity-ish mapping table generated at dataset build time.
+                dictionary = np.arange(cs.dict_size, dtype=np.int32)
+                pages["dict"] = dictionary.view(np.uint32)
+                pages["values"] = enc.bitpack(flat, cs.code_width)
+            else:
+                pages["values"] = enc.bitpack(flat, cs.id_width)
+            cols[cs.name] = EncodedColumn(cs, pages)
+    return Partition(partition_id, schema, cols)
+
+
+def decode_partition_numpy(part: Partition) -> dict:
+    """Numpy decode oracle: Partition -> raw feature arrays.
+
+    Returns {'dense': {name: (rows,) f32},
+             'sparse_values': {name: (rows, max_len) i32},
+             'sparse_lengths': {name: (rows,) i32}}
+    """
+    schema = part.schema
+    out = {"dense": {}, "sparse_values": {}, "sparse_lengths": {}}
+    for cs in schema.columns:
+        col = part.columns[cs.name]
+        if cs.kind == "dense":
+            if cs.encoding == "bytesplit":
+                out["dense"][cs.name] = enc.bytesplit_decode(
+                    col.pages["data"], schema.rows
+                )
+            else:
+                out["dense"][cs.name] = enc.plain_f32_decode(
+                    col.pages["data"], schema.rows
+                )
+        else:
+            total = schema.rows * cs.max_len
+            lens = enc.bitunpack(col.pages["lengths"], schema.rows, cs.len_width)
+            if cs.encoding == "dict":
+                dictionary = col.pages["dict"].view(np.int32)
+                vals = enc.dict_decode(
+                    dictionary, col.pages["values"], total, cs.code_width
+                )
+            else:
+                vals = enc.bitunpack(col.pages["values"], total, cs.id_width).astype(
+                    np.int32
+                )
+            out["sparse_values"][cs.name] = vals.reshape(schema.rows, cs.max_len)
+            out["sparse_lengths"][cs.name] = lens.astype(np.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# File round-trip
+
+
+def write_partition(path: str, part: Partition) -> None:
+    header = {
+        "partition_id": part.partition_id,
+        "schema": json.loads(part.schema.to_json()),
+        "pages": [],
+    }
+    payload = io.BytesIO()
+    for cname, col in part.columns.items():
+        for pname, words in col.pages.items():
+            header["pages"].append(
+                {"column": cname, "page": pname, "words": int(words.shape[0])}
+            )
+            payload.write(np.ascontiguousarray(words, dtype=np.uint32).tobytes())
+    hjson = json.dumps(header).encode()
+    with open(path, "wb") as f:
+        f.write(_MAGIC)
+        f.write(struct.pack("<I", len(hjson)))
+        f.write(hjson)
+        f.write(payload.getvalue())
+
+
+def read_partition(path: str) -> Partition:
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        assert magic == _MAGIC, f"bad magic in {path}"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        schema = PartitionSchema.from_json(json.dumps(header["schema"]))
+        cols: Dict[str, EncodedColumn] = {}
+        cschemas = {c.name: c for c in schema.columns}
+        for pmeta in header["pages"]:
+            words = np.frombuffer(f.read(pmeta["words"] * 4), dtype=np.uint32)
+            cname = pmeta["column"]
+            if cname not in cols:
+                cols[cname] = EncodedColumn(cschemas[cname], {})
+            cols[cname].pages[pmeta["page"]] = words
+    return Partition(header["partition_id"], schema, cols)

@@ -1,0 +1,121 @@
+"""Host-side async loader: prefetch queue + work stealing + straggler re-issue.
+
+The producer-consumer model of the paper's software architecture (Fig. 9):
+preprocessing workers fill an input queue that the train manager drains.  At
+fleet scale a slow storage device (straggler) must not stall the queue, so
+the work queue supports *speculative re-issue*: if a claimed partition has
+not completed within `straggler_timeout`, another worker may claim a backup
+copy; first completion wins, duplicates are dropped (partitions are
+deterministic, so duplicate results are identical — re-issue is always safe).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+
+class WorkQueue:
+    """Partition work queue with straggler re-issue (backup tasks)."""
+
+    def __init__(self, partition_ids: Iterable[int], straggler_timeout: float = 30.0):
+        self._pending: List[int] = list(partition_ids)
+        self._inflight: Dict[int, float] = {}  # pid -> claim time
+        self._done: set[int] = set()
+        self._lock = threading.Lock()
+        self.straggler_timeout = straggler_timeout
+        self.reissues = 0
+
+    def claim(self) -> Optional[int]:
+        with self._lock:
+            if self._pending:
+                pid = self._pending.pop(0)
+                self._inflight[pid] = time.monotonic()
+                return pid
+            # steal: re-issue the longest-overdue inflight partition
+            now = time.monotonic()
+            overdue = [
+                (t, p)
+                for p, t in self._inflight.items()
+                if now - t > self.straggler_timeout and p not in self._done
+            ]
+            if overdue:
+                overdue.sort()
+                _, pid = overdue[0]
+                self._inflight[pid] = now
+                self.reissues += 1
+                return pid
+            return None
+
+    def complete(self, pid: int) -> bool:
+        """Returns True if this completion is the winner (not a duplicate)."""
+        with self._lock:
+            if pid in self._done:
+                return False
+            self._done.add(pid)
+            self._inflight.pop(pid, None)
+            return True
+
+    @property
+    def exhausted(self) -> bool:
+        with self._lock:
+            return not self._pending and not self._inflight
+
+
+class PrefetchLoader:
+    """Threaded prefetching producer: keeps `depth` ready batches queued.
+
+    produce_fn(partition_id) -> batch.  Batches are delivered in completion
+    order (training is order-agnostic across partitions, like the paper's
+    mini-batch queue).
+    """
+
+    def __init__(
+        self,
+        partition_ids: Iterable[int],
+        produce_fn: Callable[[int], Any],
+        num_workers: int = 2,
+        depth: int = 4,
+        straggler_timeout: float = 30.0,
+    ):
+        self.work = WorkQueue(partition_ids, straggler_timeout)
+        self.produce_fn = produce_fn
+        self.out: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+        self._threads = [
+            threading.Thread(target=self._run, daemon=True) for _ in range(num_workers)
+        ]
+        self._stop = threading.Event()
+        self._started = False
+        self._produced = 0
+        self._total = len(self.work._pending)
+
+    def start(self) -> "PrefetchLoader":
+        self._started = True
+        for t in self._threads:
+            t.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            pid = self.work.claim()
+            if pid is None:
+                if self.work.exhausted:
+                    return
+                time.sleep(0.005)
+                continue
+            batch = self.produce_fn(pid)
+            if self.work.complete(pid):  # drop duplicate straggler results
+                self.out.put((pid, batch))
+
+    def __iter__(self):
+        if not self._started:
+            self.start()
+        while self._produced < self._total:
+            pid, batch = self.out.get()
+            self._produced += 1
+            yield pid, batch
+
+    def stop(self) -> None:
+        self._stop.set()

@@ -1,0 +1,88 @@
+"""Partitioned distributed store: partition ownership + placement.
+
+Models the paper's distributed storage layer (Tectonic-style): every
+partition's blocks live contiguously on exactly ONE storage device, which is
+the property that lets an ISP unit preprocess a whole mini-batch locally.
+
+Two placements are expressible:
+
+* ``presto``  — partition p is owned by the SAME mesh shard that will consume
+  the resulting mini-batch slice.  Preprocessing ⇒ zero redistribution.
+* ``disagg``  — partitions are owned by a disjoint "preprocessing pool" slice
+  of the mesh; train-ready tensors must be redistributed to the consumers
+  (copy-in/copy-out of Fig. 7(b)).
+
+The store can be disk-backed (one file per partition) or generate-on-read
+(synthetic source), which is how we simulate petabyte-scale data without
+petabytes.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.data.columnar import Partition, read_partition, write_partition
+from repro.data.synth import SyntheticRecSysSource
+
+
+class PartitionedStore:
+    def __init__(
+        self,
+        num_partitions: int,
+        num_devices: int,
+        source: Optional[SyntheticRecSysSource] = None,
+        root: Optional[str] = None,
+        placement: str = "presto",
+    ):
+        assert placement in ("presto", "disagg")
+        self.num_partitions = num_partitions
+        self.num_devices = num_devices
+        self.source = source
+        self.root = root
+        self.placement = placement
+        self._read_bytes = 0
+
+    # -- ownership -----------------------------------------------------------
+    def owner_of(self, partition_id: int) -> int:
+        """Storage device that holds this partition (round-robin shard)."""
+        return partition_id % self.num_devices
+
+    def partitions_of(self, device: int) -> List[int]:
+        return list(range(device, self.num_partitions, self.num_devices))
+
+    # -- I/O -------------------------------------------------------------------
+    def materialize(self, partition_ids: Iterable[int]) -> None:
+        """Write partitions to disk (one columnar file each)."""
+        assert self.root and self.source
+        os.makedirs(self.root, exist_ok=True)
+        for pid in partition_ids:
+            path = self._path(pid)
+            if not os.path.exists(path):
+                write_partition(path, self.source.partition(pid))
+
+    def read(self, partition_id: int) -> Partition:
+        if self.root is not None:
+            path = self._path(partition_id)
+            if os.path.exists(path):
+                part = read_partition(path)
+                self._read_bytes += part.nbytes()
+                return part
+        assert self.source is not None, "no disk file and no synthetic source"
+        part = self.source.partition(partition_id)
+        self._read_bytes += part.nbytes()
+        return part
+
+    @property
+    def bytes_read(self) -> int:
+        return self._read_bytes
+
+    def _path(self, pid: int) -> str:
+        # deviceNN/ prefix models per-device directories of the storage array
+        assert self.root is not None
+        dev = self.owner_of(pid)
+        ddir = os.path.join(self.root, f"device{dev:03d}")
+        os.makedirs(ddir, exist_ok=True)
+        return os.path.join(ddir, f"part{pid:06d}.rp")

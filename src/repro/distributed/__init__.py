@@ -1,0 +1,13 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    ShardingRules,
+    logical_pspec,
+    shard_activation,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "ShardingRules",
+    "logical_pspec",
+    "shard_activation",
+]

@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules (MaxText-style) for DP/FSDP/TP/EP/SP.
+
+Every parameter and key activation is annotated with *logical* axis names;
+a ShardingRules table maps those to physical mesh axes.  The production
+meshes are (data, model) single-pod and (pod, data, model) multi-pod:
+
+  batch   -> (pod, data)   data parallelism (pod is an outer pure-DP axis)
+  vocab   -> model          TP: embedding/LM-head row sharding
+  heads   -> model          TP: attention head sharding
+  ff      -> model          TP: MLP hidden sharding
+  experts -> model          EP: expert sharding for MoE
+  fsdp    -> data           FSDP: weight + optimizer-state sharding of the
+                            non-TP weight axis (all-gathered per layer)
+  kv_seq  -> data           SP/CP: KV-cache sequence sharding for
+                            long-context decode (batch too small to shard)
+  tables  -> model          RecSys: embedding-table row sharding
+
+Rules are a plain dict so configs can override per-arch (e.g. disable FSDP
+for small models, enable kv_seq only for long_500k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AxisVal = Union[None, str, tuple]
+
+DEFAULT_RULES: dict[str, AxisVal] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,  # activation d_model axis: replicated
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "fsdp": "data",
+    "kv_seq": None,  # set to "data" for context-parallel decode
+    "tables": "model",
+    "layers": None,  # scan-stacked leading axis
+    "ssm_heads": "model",
+    "conv": None,
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mapping: dict[str, AxisVal]
+    mesh: Optional[Mesh] = None
+
+    @staticmethod
+    def make(
+        mesh: Optional[Mesh] = None, overrides: Optional[Mapping[str, AxisVal]] = None
+    ) -> "ShardingRules":
+        m = dict(DEFAULT_RULES)
+        if overrides:
+            m.update(overrides)
+        # drop mesh axes that don't exist on this mesh (e.g. "pod" single-pod)
+        if mesh is not None:
+            def filt(v: AxisVal) -> AxisVal:
+                if v is None:
+                    return None
+                if isinstance(v, str):
+                    return v if v in mesh.axis_names else None
+                kept = tuple(a for a in v if a in mesh.axis_names)
+                return kept if kept else None
+
+            m = {k: filt(v) for k, v in m.items()}
+        return ShardingRules(m, mesh)
+
+    def pspec(self, *logical: Optional[str]) -> P:
+        return logical_pspec(self.mapping, *logical)
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(*logical))
+
+    def constrain(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        return shard_activation(x, self, *logical)
+
+    def axis_size(self, logical: str) -> int:
+        """Product of mesh-axis sizes a logical axis maps to (1 if unmapped)."""
+        if self.mesh is None:
+            return 1
+        v = self.mapping.get(logical)
+        if v is None:
+            return 1
+        axes = (v,) if isinstance(v, str) else v
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def logical_pspec(rules: Mapping[str, AxisVal], *logical: Optional[str]) -> P:
+    """('vocab','fsdp') -> P('model','data') under the default rules."""
+    axes = []
+    used: set[str] = set()
+
+    def resolve(name: Optional[str]) -> AxisVal:
+        if name is None:
+            return None
+        v = rules.get(name)
+        if v is None:
+            return None
+        # a physical mesh axis may be used at most once in a PartitionSpec
+        if isinstance(v, str):
+            return None if v in used else (used.add(v) or v)
+        kept = tuple(a for a in v if a not in used)
+        used.update(kept)
+        return kept if kept else None
+
+    for name in logical:
+        axes.append(resolve(name))
+    return P(*axes)
+
+
+def shard_activation(x: jax.Array, rules: ShardingRules, *logical) -> jax.Array:
+    """with_sharding_constraint if a mesh is active; no-op otherwise."""
+    if rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.pspec(*logical))
+    )

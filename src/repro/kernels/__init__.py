@@ -1,0 +1,32 @@
+# Pallas TPU kernels for the compute hot-spots the paper accelerates in its
+# ISP units: Decode (columnar pages), Bucketize (feature generation),
+# SigridHash + Log (feature normalization), and the fused decode+transform
+# ISP pipelines.  ops.py = jit'd public wrappers; ref.py = pure-jnp oracles.
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    bucketize,
+    decode_bitpack,
+    decode_bytesplit,
+    fused_dense,
+    fused_gen,
+    fused_sparse,
+    lognorm,
+    regroup_bitpack,
+    regroup_bytesplit,
+    sigridhash,
+)
+
+__all__ = [
+    "bucketize",
+    "decode_bitpack",
+    "decode_bytesplit",
+    "fused_dense",
+    "fused_gen",
+    "fused_sparse",
+    "lognorm",
+    "ops",
+    "ref",
+    "regroup_bitpack",
+    "regroup_bytesplit",
+    "sigridhash",
+]

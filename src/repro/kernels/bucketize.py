@@ -1,0 +1,71 @@
+"""Bucketize feature-generation kernel (Alg. 1) — Pallas TPU.
+
+Paper's FPGA unit does a pipelined binary search per element.  The TPU-native
+adaptation is a *vectorized compare-and-count*: for sorted boundaries b,
+``digitize(a) = #{j : b[j] <= a}``, computed as a broadcast compare reduced
+over boundary chunks.  Napkin math for why this beats binary search on TPU:
+
+* binary search = log2(m) data-dependent gathers; VMEM gathers with vector
+  indices are unsupported/slow on the VPU.
+* compare-and-count = m compares/element on 8x128 lanes.  At ~7.7e12 vector
+  ops/s/chip, a (1024-value, m=4096) tile costs ~0.5 us and the kernel stays
+  entirely compute-local: each HBM byte of feature data is read exactly once
+  (Pallas grid pipelining double-buffers the next tile during compute — the
+  paper's double-buffering, for free).
+
+Inter-feature parallelism = grid dim 0 (one boundary set per feature).
+Intra-feature parallelism = 8x128 vector lanes + grid dim 1 over row tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 1024  # values per grid step (8 sublanes x 128 lanes)
+BOUNDARY_CHUNK = 512  # boundaries reduced per inner-loop iteration
+
+
+def _bucketize_kernel(vals_ref, bounds_ref, out_ref, *, m: int):
+    a = vals_ref[0, :]  # (ROW_TILE,) f32
+    nchunks = m // BOUNDARY_CHUNK
+
+    def body(k, acc):
+        b = bounds_ref[0, pl.ds(k * BOUNDARY_CHUNK, BOUNDARY_CHUNK)]
+        cmp = a[:, None] >= b[None, :]
+        return acc + jnp.sum(cmp, axis=1, dtype=jnp.int32)
+
+    acc = jnp.zeros((ROW_TILE,), jnp.int32)
+    if nchunks > 0:
+        acc = jax.lax.fori_loop(0, nchunks, body, acc)
+    rem = m - nchunks * BOUNDARY_CHUNK
+    if rem:
+        b = bounds_ref[0, pl.ds(nchunks * BOUNDARY_CHUNK, rem)]
+        acc = acc + jnp.sum(a[:, None] >= b[None, :], axis=1, dtype=jnp.int32)
+    out_ref[0, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bucketize_pallas(
+    values: jax.Array, boundaries: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """values (F, R) f32 with R % ROW_TILE == 0; boundaries (F, m) sorted f32
+    (pad with +inf to a lane multiple).  Returns (F, R) int32 in [0, m]."""
+    f, r = values.shape
+    _, m = boundaries.shape
+    assert r % ROW_TILE == 0, (r, ROW_TILE)
+    grid = (f, r // ROW_TILE)
+    return pl.pallas_call(
+        functools.partial(_bucketize_kernel, m=m),
+        out_shape=jax.ShapeDtypeStruct((f, r), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ROW_TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((1, m), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ROW_TILE), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(values, boundaries)

@@ -1,0 +1,163 @@
+"""Public jit'd wrappers around the Pallas preprocessing kernels.
+
+Handles padding to tile boundaries, dtype plumbing, and the interpret-mode
+switch (Pallas TPU kernels execute in interpret mode on CPU hosts — this is
+how the kernels are validated in this container; on a real v5e the same
+calls compile to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bucketize as _bk
+from repro.kernels import decode as _dk
+from repro.kernels import fused as _fk
+from repro.kernels import lognorm as _lk
+from repro.kernels import sigridhash as _sk
+
+# interpret=True whenever we are not on a real TPU.
+INTERPRET: bool = jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int, value) -> tuple[jax.Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def bucketize(values, boundaries, *, interpret: bool | None = None) -> jax.Array:
+    """Feature generation (Alg. 1). values (F, R) f32, boundaries (F, m) sorted.
+
+    Returns (F, R) int32 bucket ids in [0, m]."""
+    interpret = INTERPRET if interpret is None else interpret
+    values = jnp.asarray(values, jnp.float32)
+    boundaries = jnp.asarray(boundaries, jnp.float32)
+    v, r = _pad_axis(values, 1, _bk.ROW_TILE, 0.0)
+    b, _ = _pad_axis(boundaries, 1, 128, jnp.inf)
+    out = _bk.bucketize_pallas(v, b, interpret=interpret)
+    return out[:, :r]
+
+
+def sigridhash(values, seeds, max_values, *, interpret: bool | None = None) -> jax.Array:
+    """Feature normalization (Alg. 2). values (F, N) i32 -> (F, N) i32 in [0, d)."""
+    interpret = INTERPRET if interpret is None else interpret
+    values = jnp.asarray(values)
+    if values.dtype != jnp.int32:
+        values = values.astype(jnp.int32)
+    params = jnp.stack(
+        [jnp.asarray(seeds, jnp.uint32), jnp.asarray(max_values, jnp.uint32)], axis=1
+    )
+    v, n = _pad_axis(values, 1, _sk.VAL_TILE, 0)
+    out = _sk.sigridhash_pallas(v, params, interpret=interpret)
+    return out[:, :n]
+
+
+def lognorm(x, *, interpret: bool | None = None) -> jax.Array:
+    """Dense normalization: log1p(max(x, 0)) elementwise, any shape."""
+    interpret = INTERPRET if interpret is None else interpret
+    x = jnp.asarray(x, jnp.float32)
+    shape = x.shape
+    flat = x.reshape(-1)
+    tile = _lk.TILE_R * _lk.TILE_C
+    padded, n = _pad_axis(flat, 0, tile, 0.0)
+    out = _lk.lognorm_pallas(
+        padded.reshape(-1, _lk.TILE_C), interpret=interpret
+    ).reshape(-1)
+    return out[:n].reshape(shape)
+
+
+def decode_bitpack(packed, *, width: int, interpret: bool | None = None) -> jax.Array:
+    """Grouped bitpack decode: (F, G, w) words -> (F, G*32) int32 values."""
+    interpret = INTERPRET if interpret is None else interpret
+    packed = jnp.asarray(packed).view(jnp.uint32) if isinstance(packed, np.ndarray) else jnp.asarray(packed)
+    packed = packed.astype(jnp.uint32)
+    f, g, w = packed.shape
+    p, gorig = _pad_axis(packed, 1, _dk.G_BLOCK, 0)
+    out = _dk.bitunpack_pallas(p, width=width, interpret=interpret)
+    return out[:, :gorig].reshape(f, gorig * 32)
+
+
+def decode_bytesplit(plane_words, *, interpret: bool | None = None) -> jax.Array:
+    """Grouped byte-split decode: (F, G, 4) words -> (F, G*4) f32 values."""
+    interpret = INTERPRET if interpret is None else interpret
+    w = jnp.asarray(plane_words).astype(jnp.uint32)
+    f, g, _ = w.shape
+    p, gorig = _pad_axis(w, 1, _dk.G_BLOCK, 0)
+    out = _dk.bytesplit_pallas(p, interpret=interpret)
+    return out[:, :gorig].reshape(f, gorig * 4)
+
+
+def fused_dense(plane_words, *, interpret: bool | None = None) -> jax.Array:
+    """ISP dense path: decode + Log in one kernel. (F,G,4) -> (F, G*4) f32."""
+    interpret = INTERPRET if interpret is None else interpret
+    w = jnp.asarray(plane_words).astype(jnp.uint32)
+    f, g, _ = w.shape
+    p, gorig = _pad_axis(w, 1, _dk.G_BLOCK, 0)
+    out = _fk.fused_dense_pallas(p, interpret=interpret)
+    return out[:, :gorig].reshape(f, gorig * 4)
+
+
+def fused_gen(
+    plane_words, boundaries, seeds, max_values, *, interpret: bool | None = None
+) -> jax.Array:
+    """ISP generation path: decode + Bucketize + SigridHash in one kernel.
+
+    plane_words (F, G, 4) encoded dense sources, boundaries (F, m) sorted ->
+    (F, G*4) int32 table indices."""
+    interpret = INTERPRET if interpret is None else interpret
+    w = jnp.asarray(plane_words).astype(jnp.uint32)
+    f, g, _ = w.shape
+    b = jnp.asarray(boundaries, jnp.float32)
+    b, _ = _pad_axis(b, 1, 128, jnp.inf)
+    params = jnp.stack(
+        [jnp.asarray(seeds, jnp.uint32), jnp.asarray(max_values, jnp.uint32)], axis=1
+    )
+    pw, gorig = _pad_axis(w, 1, _dk.G_BLOCK, 0)
+    out = _fk.fused_gen_pallas(pw, b, params, interpret=interpret)
+    return out[:, :gorig].reshape(f, gorig * 4)
+
+
+def fused_sparse(
+    packed, seeds, max_values, *, width: int, interpret: bool | None = None
+) -> jax.Array:
+    """ISP sparse path: decode + SigridHash in one kernel.
+
+    packed (F, G, w) uint32 -> (F, G*32) int32 indices in [0, d)."""
+    interpret = INTERPRET if interpret is None else interpret
+    packed = jnp.asarray(packed).astype(jnp.uint32)
+    f, g, w = packed.shape
+    params = jnp.stack(
+        [jnp.asarray(seeds, jnp.uint32), jnp.asarray(max_values, jnp.uint32)], axis=1
+    )
+    p, gorig = _pad_axis(packed, 1, _dk.G_BLOCK, 0)
+    out = _fk.fused_sparse_pallas(p, params, width=width, interpret=interpret)
+    return out[:, :gorig].reshape(f, gorig * 32)
+
+
+# -- host-side layout helpers -------------------------------------------------
+
+
+def regroup_bitpack(packed_flat: np.ndarray, n_values: int, width: int) -> np.ndarray:
+    """Flat packed words (from data.encoding.bitpack) -> (G, w) grouped layout.
+
+    Requires n_values % 32 == 0 (dataset partitions guarantee this)."""
+    assert n_values % 32 == 0, n_values
+    g = n_values // 32
+    return np.ascontiguousarray(packed_flat[: g * width].reshape(g, width))
+
+
+def regroup_bytesplit(plane_words_flat: np.ndarray, n_values: int) -> np.ndarray:
+    """Flat plane words (from bytesplit_encode) -> (G, 4) grouped layout."""
+    assert n_values % 4 == 0, n_values
+    g = n_values // 4
+    planes = plane_words_flat[: g * 4].reshape(4, g)
+    return np.ascontiguousarray(planes.T)

@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth: kernels in
+bucketize.py / sigridhash.py / lognorm.py / decode.py / fused.py must match
+these bit-for-bit (integer ops) or to float tolerance (transcendentals).
+These oracles are themselves validated against the numpy encoders in
+``repro.data.encoding`` (see tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# -- SigridHash (Alg. 2) ------------------------------------------------------
+# TPU adaptation: TorchArrow's SigridHash is a 64-bit seeded hash; TPU vector
+# lanes are 32-bit, so we use a murmur3-style 32-bit avalanche with the seed
+# folded in twice.  Contract preserved: deterministic, seeded, uniform over
+# [0, d).  (Recorded in DESIGN.md §2.)
+
+def fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def sigridhash(values: jnp.ndarray, seed: int, max_value: int) -> jnp.ndarray:
+    """values int32 -> int32 indices in [0, max_value)."""
+    v = values.astype(jnp.uint32)
+    s = jnp.uint32(seed)
+    h = (v ^ (s * jnp.uint32(0x9E3779B1))) * jnp.uint32(0xCC9E2D51) + s
+    h = fmix32(h)
+    return (h % jnp.uint32(max_value)).astype(jnp.int32)
+
+
+# -- Bucketize (Alg. 1) -------------------------------------------------------
+
+
+def bucketize(values: jnp.ndarray, boundaries: jnp.ndarray) -> jnp.ndarray:
+    """np.digitize semantics: c[i] = #{j : boundaries[j] <= values[i]}.
+
+    values (..., n) f32, boundaries (m,) sorted f32 -> (..., n) int32 in [0, m].
+    """
+    return jnp.sum(
+        values[..., None] >= boundaries[(None,) * values.ndim], axis=-1
+    ).astype(jnp.int32)
+
+
+# -- Log normalization ---------------------------------------------------------
+
+
+def lognorm(x: jnp.ndarray) -> jnp.ndarray:
+    """TorchArrow-style dense normalization: log1p over non-negative features."""
+    return jnp.log1p(jnp.maximum(x, 0.0))
+
+
+# -- Decode: bitpack ------------------------------------------------------------
+
+
+def bitunpack(packed: jnp.ndarray, n: int, width: int) -> jnp.ndarray:
+    """packed uint32 (w,) flat words -> (n,) uint32 values (LSB-first)."""
+    p = packed.astype(jnp.uint32)
+    i = jnp.arange(n, dtype=jnp.uint32)
+    bit_pos = i * jnp.uint32(width)
+    word_idx = (bit_pos >> 5).astype(jnp.int32)
+    bit_off = bit_pos & jnp.uint32(31)
+    lo = p[word_idx] >> bit_off
+    hi = jnp.where(bit_off == 0, jnp.uint32(0), p[word_idx + 1] << (32 - bit_off))
+    mask = (
+        jnp.uint32(0xFFFFFFFF)
+        if width == 32
+        else jnp.uint32((1 << width) - 1)
+    )
+    return (lo | hi) & mask
+
+
+def bitunpack_grouped(packed_groups: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Grouped layout oracle: (..., G, w) words -> (..., G, 32) uint32.
+
+    Group g holds values [32g, 32(g+1)) in words [g*w, (g+1)*w) — the layout
+    the Pallas decode kernel consumes (no cross-group bit straddle).
+    """
+    w = width
+    p = packed_groups.astype(jnp.uint32)
+    outs = []
+    for j in range(32):
+        bit = j * w
+        wid, off = bit >> 5, bit & 31
+        lo = p[..., wid] >> jnp.uint32(off)
+        if off == 0:
+            val = lo
+        else:
+            nxt = p[..., wid + 1] if (off + w > 32) else jnp.zeros_like(lo)
+            val = lo | (nxt << jnp.uint32(32 - off))
+        mask = jnp.uint32(0xFFFFFFFF) if w == 32 else jnp.uint32((1 << w) - 1)
+        outs.append(val & mask)
+    return jnp.stack(outs, axis=-1)
+
+
+# -- Decode: byte-stream-split ---------------------------------------------------
+
+
+def bytesplit_decode_grouped(plane_words: jnp.ndarray) -> jnp.ndarray:
+    """(..., G, 4) plane words -> (..., G, 4) f32 values.
+
+    plane_words[..., g, k] = word g of byte-plane k; value i = g*4 + j takes
+    byte j from each plane word g.
+    """
+    p = plane_words.astype(jnp.uint32)
+    outs = []
+    for j in range(4):
+        b0 = (p[..., 0] >> jnp.uint32(8 * j)) & jnp.uint32(0xFF)
+        b1 = (p[..., 1] >> jnp.uint32(8 * j)) & jnp.uint32(0xFF)
+        b2 = (p[..., 2] >> jnp.uint32(8 * j)) & jnp.uint32(0xFF)
+        b3 = (p[..., 3] >> jnp.uint32(8 * j)) & jnp.uint32(0xFF)
+        outs.append(b0 | (b1 << 8) | (b2 << 16) | (b3 << 24))
+    words = jnp.stack(outs, axis=-1)
+    return jax_bitcast_u32_f32(words)
+
+
+def jax_bitcast_u32_f32(x: jnp.ndarray) -> jnp.ndarray:
+    import jax
+
+    return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+# -- Fused ISP paths --------------------------------------------------------------
+
+
+def fused_dense(plane_words: jnp.ndarray) -> jnp.ndarray:
+    """Extract(Decode) + Log in one pass: bytesplit words -> normalized f32."""
+    return lognorm(bytesplit_decode_grouped(plane_words))
+
+
+def fused_sparse(
+    packed_groups: jnp.ndarray, width: int, seed: int, max_value: int
+) -> jnp.ndarray:
+    """Extract(Decode) + SigridHash in one pass: packed ids -> hashed ids."""
+    ids = bitunpack_grouped(packed_groups, width)
+    return sigridhash(ids.astype(jnp.int32), seed, max_value)

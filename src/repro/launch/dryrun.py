@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first backend init).  For each cell this driver:
+
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the cell's LoweringSpec (function + ShapeDtypeStruct inputs +
+     explicit shardings) — zero device allocation,
+  3. jit(...).lower(...).compile(),
+  4. records memory_analysis() (fits-in-HBM proof), cost_analysis()
+     (FLOPs/bytes), and the HLO-parsed collective bytes for §Roofline.
+
+Results append to a JSON-lines file consumed by EXPERIMENTS.md and
+benchmarks/.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun.jsonl
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool, out_path: str,
+             reduced: bool = False) -> dict:
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+    from repro.models.config import SHAPES
+
+    entry = get_arch(arch_id)
+    cfg = entry.reduced if reduced else entry.config
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "status": "skip", "reason": "",
+    }
+    if shape_name in entry.skip_shapes:
+        rec["reason"] = "inapplicable (see DESIGN.md SArch-applicability)"
+        _emit(rec, out_path)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = mesh.devices.size
+        spec = build_cell(cfg, shape_name, mesh)
+        with mesh:
+            jitted = jax.jit(spec.fn, in_shardings=spec.in_shardings)
+            lowered = jitted.lower(*spec.args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        terms = rl.derive(cost, hlo, cfg, SHAPES[shape_name], chips)
+        rec.update(
+            status="ok",
+            compile_s=round(time.time() - t0, 1),
+            chips=chips,
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_estimate_bytes": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+            },
+            roofline=terms.to_json(),
+        )
+        print(
+            f"[ok] {arch_id} x {shape_name} x {mesh_name}: "
+            f"compile {rec['compile_s']}s, "
+            f"temp/dev {mem.temp_size_in_bytes/2**30:.2f} GiB, "
+            f"args/dev {mem.argument_size_in_bytes/2**30:.2f} GiB, "
+            f"dominant={terms.dominant}, "
+            f"terms(c/m/x)=({terms.compute_s*1e3:.2f}/"
+            f"{terms.memory_s*1e3:.2f}/{terms.collective_s*1e3:.2f})ms, "
+            f"rf={terms.roofline_fraction:.3f}",
+            flush=True,
+        )
+    except Exception as e:  # noqa: BLE001 — record, continue sweep
+        rec.update(status="error", reason=f"{type(e).__name__}: {e}",
+                   compile_s=round(time.time() - t0, 1))
+        print(f"[ERR] {arch_id} x {shape_name} x {mesh_name}: {rec['reason']}",
+              flush=True)
+        traceback.print_exc()
+    _emit(rec, out_path)
+    return rec
+
+
+def _emit(rec: dict, out_path: str) -> None:
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+def main() -> None:
+    from repro.configs.registry import ARCH_IDS
+    from repro.models.config import SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--reduced", action="store_true", help="smoke-size configs")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already ok in --out")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r["status"] in ("ok", "skip"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+
+    n_ok = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                key = (arch, shape, "multi" if multi else "single")
+                if key in done:
+                    continue
+                rec = run_cell(arch, shape, multi, args.out, reduced=args.reduced)
+                n_ok += rec["status"] in ("ok", "skip")
+                n_err += rec["status"] == "error"
+    print(f"dryrun complete: {n_ok} ok/skip, {n_err} errors", flush=True)
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

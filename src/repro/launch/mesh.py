@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Single pod : (16, 16) = 256 v5e chips, axes (data, model)
+Multi pod  : (2, 16, 16) = 512 chips, axes (pod, data, model); `pod` is the
+             outer DCN-connected pure-DP axis.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(shape=None, axes=None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        if n >= 8:
+            shape, axes = (2, 2, n // 4), ("pod", "data", "model")
+        elif n >= 4:
+            shape, axes = (2, n // 2), ("data", "model")
+        else:
+            shape, axes = (1, n), ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,213 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Terms per (arch x shape x mesh), exactly as specified:
+
+    compute_s    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory_s     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective_s = collective_bytes / (chips x 50e9 B/s per ICI link)
+
+`compiled.cost_analysis()` reports the PER-DEVICE SPMD program, so dividing
+by chips is implicit: compute_s = flops_per_dev / peak, etc.  Collective
+bytes are not in cost_analysis; we parse the compiled HLO text and sum the
+RESULT-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (all-reduce counted once — ring cost is
+~2x payload but payload is what the spec formula asks for; the factor is
+constant across candidates so optimization deltas are unaffected).
+
+MODEL_FLOPS uses 6·N·D (train) / 2·N·D (inference) with N_active for MoE;
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]{1,9})\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok_type: str, dims: str) -> int:
+    if tok_type not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[tok_type]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from compiled HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        rhs = rhs.strip()
+        # op name is the token right before the first '('
+        par = rhs.find("(")
+        if par < 0:
+            continue
+        # rhs looks like: "f32[128,64]{1,0} all-gather(f32[16,64]{1,0} %p), ..."
+        head = rhs[:par]
+        kind = None
+        for k in _COLLECTIVES:
+            # match op name, including -start/-done variants; count -start only
+            if re.search(rf"(?:^|\s){k}(?:-start)?$", head.rstrip()):
+                if head.rstrip().endswith("-done"):
+                    break
+                kind = k
+                break
+        if kind is None:
+            continue
+        shapes = _SHAPE_RE.findall(head)
+        out[kind] += sum(_shape_bytes(t, d) for t, d in shapes)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    coll_bytes_per_dev: int
+    coll_breakdown: Dict[str, int]
+    model_flops_global: float
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        vals = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global) — remat/redundancy waste."""
+        hlo_global = self.flops_per_dev * self.chips
+        return self.model_flops_global / max(hlo_global, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """model-compute-time / step-time lower bound — the MFU-style score."""
+        model_s = self.model_flops_global / (self.chips * PEAK_FLOPS)
+        return model_s / max(self.bound_s, 1e-30)
+
+    def to_json(self) -> dict:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "hbm_bytes_per_dev": self.hbm_bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops_global": self.model_flops_global,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS
+
+
+def param_counts(cfg) -> tuple:
+    """(total, active) parameter counts from the model schema."""
+    from repro.models.layers import ParamDef
+    mod = None
+    if getattr(cfg, "is_encdec", False):
+        from repro.models import encdec as mod
+    else:
+        from repro.models import transformer as mod
+    schema = mod.model_schema(cfg)
+    total = active = 0
+
+    def walk(node):
+        nonlocal total, active
+        if isinstance(node, ParamDef):
+            n = int(np.prod(node.shape))
+            total += n
+            # expert tensors: (..., E, d, f) stacked under 'layers' may have
+            # leading layer axis; detect by the 'experts' logical axis.
+            if "experts" in node.axes and cfg.n_experts:
+                active += n * cfg.top_k / cfg.n_experts
+            else:
+                active += n
+            return
+        for v in node.values():
+            walk(v)
+
+    walk(schema)
+    return int(total), int(active)
+
+
+def model_flops(cfg, shape, kind: Optional[str] = None) -> float:
+    """6·N_active·D (train) or 2·N_active·D (prefill/decode)."""
+    total, active = param_counts(cfg)
+    kind = kind or shape.kind
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * active * shape.global_batch
+
+
+def derive(cost: dict, hlo_text: str, cfg, shape, chips: int) -> RooflineTerms:
+    """Derive terms from the compiled HLO via the trip-count-aware cost
+    model (launch.hlo_cost).  `compiled.cost_analysis()` counts while-loop
+    bodies once — useless for scanned layer stacks — so `cost` is recorded
+    for reference but the terms come from hlo_cost.analyze."""
+    from repro.launch import hlo_cost
+
+    c = hlo_cost.analyze(hlo_text)
+    return RooflineTerms(
+        flops_per_dev=float(c.flops),
+        hbm_bytes_per_dev=float(c.hbm_bytes),
+        coll_bytes_per_dev=int(c.coll_bytes),
+        coll_breakdown={k: int(v) for k, v in c.coll_breakdown.items()},
+        model_flops_global=model_flops(cfg, shape),
+        chips=chips,
+    )

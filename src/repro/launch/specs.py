@@ -1,0 +1,252 @@
+"""Per-(arch x shape) lowering specs: function + ShapeDtypeStruct inputs +
+explicit shardings.  This is what both the dry-run and the roofline read.
+
+`input_specs()` follows the assignment contract: weak-type-correct,
+shardable, zero device allocation.  Modality frontends are stubs — the VLM
+cell receives precomputed patch embeddings, the audio cell precomputed frame
+embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules
+from repro.models import encdec
+from repro.models import transformer as tfm
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.train import optimizer as opt_lib
+from repro.train.step import make_train_step, opt_state_pspecs
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    name: str
+    fn: Callable
+    args: tuple  # pytrees of ShapeDtypeStruct
+    in_shardings: Any
+    rules: ShardingRules
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def shape_rules(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh]) -> ShardingRules:
+    overrides = dict(cfg.sharding_overrides)
+    if shape.kind == "decode" and shape.shard_kv_seq:
+        overrides.update({"batch": None, "kv_seq": "data"})
+    elif shape.kind == "decode":
+        # GQA kv-head counts (8) don't divide the 16-way model axis, so KV
+        # caches cannot head-shard; shard the cache SEQUENCE over 'model'
+        # instead (flash-decoding style: XLA reduces the partial softmax
+        # across shards).  Without this, a 32k cache replicates over the TP
+        # axis and decode states don't fit HBM (e.g. gemma3: 96 GiB/dev).
+        overrides.setdefault("kv_seq", "model")
+    return ShardingRules.make(mesh, overrides)
+
+
+def make_optimizer_for(cfg: ModelConfig):
+    lr = opt_lib.warmup_cosine(3e-4, 100, 10_000)
+    return opt_lib.make_optimizer(cfg.optimizer, lr)
+
+
+def _model_module(cfg: ModelConfig):
+    return encdec if cfg.is_encdec else tfm
+
+
+def params_struct_and_specs(cfg: ModelConfig, rules: ShardingRules):
+    mod = _model_module(cfg)
+    struct = jax.eval_shape(lambda r: mod.init_params(r, cfg), jax.random.PRNGKey(0))
+    pspecs = mod.param_pspecs(cfg, rules)
+    return struct, pspecs
+
+
+def _shard(mesh, spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input_specs per family x shape
+
+
+def train_batch_struct(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.is_encdec:
+        return {
+            "frames": _sds((b, s, cfg.d_model), dt),
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+            "mask": _sds((b, s), jnp.float32),
+        }
+    if cfg.family == "vlm" and cfg.frontend_positions:
+        p = cfg.frontend_positions
+        return {
+            "tokens": _sds((b, s - p), jnp.int32),
+            "labels": _sds((b, s - p), jnp.int32),
+            "mask": _sds((b, s - p), jnp.float32),
+            "prefix_embeds": _sds((b, p, cfg.d_model), dt),
+        }
+    return {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+        "mask": _sds((b, s), jnp.float32),
+    }
+
+
+def train_batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules):
+    batch = rules.pspec("batch")
+    b2 = P(*(list(batch) + [None]))
+    b3 = P(*(list(batch) + [None, None]))
+    if cfg.is_encdec:
+        return {"frames": b3, "tokens": b2, "labels": b2, "mask": b2}
+    if cfg.family == "vlm" and cfg.frontend_positions:
+        return {"tokens": b2, "labels": b2, "mask": b2, "prefix_embeds": b3}
+    return {"tokens": b2, "labels": b2, "mask": b2}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Public helper: ShapeDtypeStruct stand-ins for every model input."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_batch_struct(cfg, shape)
+    mod = _model_module(cfg)
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {"frames": _sds((shape.global_batch, shape.seq_len, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))}
+        return {"tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32)}
+    return {
+        "token": _sds((shape.global_batch, 1), jnp.int32),
+        "caches": mod.cache_spec(cfg, shape.global_batch, shape.seq_len),
+        "cache_len": _sds((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Lowering builders
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Pick grad-accumulation depth so one microbatch's activations fit HBM.
+
+    Napkin math: the layer-scan saves the residual carry (B_dev, S, d_model)
+    per layer for backward (~2 copies with remat boundaries), so activation
+    HBM ~ 4·B_dev·S·d_model·n_layers bytes.  Targeting <=4 GiB of carries
+    gives per-device microbatch tokens <= 8-16k for the assigned configs —
+    the same operating point production frameworks use."""
+    if cfg.microbatches:
+        return cfg.microbatches
+    if mesh is None:
+        return 1
+    batch_shards = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            batch_shards *= mesh.shape[ax]
+    per_dev_batch = max(shape.global_batch // batch_shards, 1)
+    carry_bytes_per_tok = 4.0 * cfg.d_model * max(cfg.n_layers, 1)
+    budget = 4 * 2**30
+    target_tokens = max(int(budget / carry_bytes_per_tok), 1024)
+    k = 1
+    while (
+        per_dev_batch * shape.seq_len / k > target_tokens
+        and k < per_dev_batch
+        and shape.global_batch % (k * 2) == 0
+    ):
+        k *= 2
+    return k
+
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh) -> LoweringSpec:
+    rules = shape_rules(cfg, shape, mesh)
+    mod = _model_module(cfg)
+    optimizer = make_optimizer_for(cfg)
+    loss_fn = lambda p, b: mod.loss_fn(p, b, cfg, rules)
+    step = make_train_step(
+        loss_fn, optimizer, microbatches=auto_microbatches(cfg, shape, mesh)
+    )
+
+    pstruct, pspecs = params_struct_and_specs(cfg, rules)
+    ostate = jax.eval_shape(optimizer.init, pstruct)
+    ospecs = opt_state_pspecs(optimizer, pstruct, pspecs)
+    state_struct = {"params": pstruct, "opt": ostate, "step": _sds((), jnp.int32)}
+    state_specs = {"params": pspecs, "opt": ospecs, "step": P()}
+    batch_struct = train_batch_struct(cfg, shape)
+    batch_specs = train_batch_pspecs(cfg, shape, rules)
+    return LoweringSpec(
+        name=f"{cfg.name}:{shape.name}",
+        fn=step,
+        args=(state_struct, batch_struct),
+        in_shardings=(_shard(mesh, state_specs), _shard(mesh, batch_specs)),
+        rules=rules,
+    )
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh) -> LoweringSpec:
+    rules = shape_rules(cfg, shape, mesh)
+    mod = _model_module(cfg)
+    pstruct, pspecs = params_struct_and_specs(cfg, rules)
+    b, s = shape.global_batch, shape.seq_len
+    batch = rules.pspec("batch")
+    if cfg.is_encdec:
+        # prefill for enc-dec = encode the source (cross-KV derive happens in
+        # the decode cell; encoding dominates prefill cost)
+        fn = lambda params, frames: encdec.encode(params, frames, cfg, rules)
+        args = (pstruct, _sds((b, s, cfg.d_model), jnp.dtype(cfg.dtype)))
+        in_sh = (_shard(mesh, pspecs), _shard(mesh, P(*(list(batch) + [None, None]))))
+    else:
+        fn = lambda params, tokens: tfm.prefill(params, tokens, cfg, rules, s)
+        args = (pstruct, _sds((b, s), jnp.int32))
+        in_sh = (_shard(mesh, pspecs), _shard(mesh, P(*(list(batch) + [None]))))
+    return LoweringSpec(f"{cfg.name}:{shape.name}", fn, args, in_sh, rules)
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh) -> LoweringSpec:
+    rules = shape_rules(cfg, shape, mesh)
+    mod = _model_module(cfg)
+    pstruct, pspecs = params_struct_and_specs(cfg, rules)
+    b, s = shape.global_batch, shape.seq_len
+    cache_struct = mod.cache_spec(cfg, b, s)
+    cache_specs = mod.cache_pspecs(cfg, rules)
+    batch = rules.pspec("batch")
+
+    if cfg.is_encdec:
+        fn = lambda params, token, caches, n: encdec.decode_step(
+            params, token, caches, n, cfg, rules,
+            mesh=mesh, shard_kv_seq=shape.shard_kv_seq,
+        )
+    else:
+        fn = lambda params, token, caches, n: tfm.decode_step(
+            params, token, caches, n, cfg, rules,
+            mesh=mesh, shard_kv_seq=shape.shard_kv_seq,
+        )
+    args = (pstruct, _sds((b, 1), jnp.int32), cache_struct, _sds((), jnp.int32))
+    in_sh = (
+        _shard(mesh, pspecs),
+        _shard(mesh, P(*(list(batch) + [None]))),
+        _shard(mesh, cache_specs),
+        _shard(mesh, P()),
+    )
+    return LoweringSpec(f"{cfg.name}:{shape.name}", fn, args, in_sh, rules)
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh) -> LoweringSpec:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh)
+    return build_decode_cell(cfg, shape, mesh)

@@ -1,0 +1,3 @@
+from repro.models.config import SHAPES, LayerSpec, ModelConfig, ShapeConfig
+
+__all__ = ["SHAPES", "LayerSpec", "ModelConfig", "ShapeConfig"]

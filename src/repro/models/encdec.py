@@ -1,0 +1,220 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio/text modality frontend is a STUB per the assignment: the encoder
+consumes precomputed frame embeddings (B, S_enc, d) from `input_specs()`.
+Decoder = causal self-attention + cross-attention to the encoder output.
+Serving caches: decoder self-attn KV + precomputed cross-attn K/V.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    ParamDef,
+    Schema,
+    apply_rope,
+    blockwise_attention,
+    decode_attention,
+    init_from_schema,
+    load_weight,
+    mlp_apply,
+    mlp_schema,
+    pspecs_from_schema,
+    rmsnorm,
+    stack_schema,
+)
+from repro.models.transformer import attn_schema, chunked_xent
+
+
+def _xattn_schema(cfg: ModelConfig) -> Schema:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamDef((d, h * hd), ("fsdp", "heads")),
+        "wk": ParamDef((d, k * hd), ("fsdp", "kv_heads")),
+        "wv": ParamDef((d, k * hd), ("fsdp", "kv_heads")),
+        "wo": ParamDef((h * hd, d), ("heads", "fsdp")),
+    }
+
+
+def enc_layer_schema(cfg: ModelConfig) -> Schema:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDef((d,), (None,), init="zeros"),
+        "attn": attn_schema(cfg),
+        "ln2": ParamDef((d,), (None,), init="zeros"),
+        "mlp": mlp_schema(cfg, cfg.mlp_kind),
+    }
+
+
+def dec_layer_schema(cfg: ModelConfig) -> Schema:
+    d = cfg.d_model
+    return {
+        "ln1": ParamDef((d,), (None,), init="zeros"),
+        "attn": attn_schema(cfg),
+        "lnx": ParamDef((d,), (None,), init="zeros"),
+        "xattn": _xattn_schema(cfg),
+        "ln2": ParamDef((d,), (None,), init="zeros"),
+        "mlp": mlp_schema(cfg, cfg.mlp_kind),
+    }
+
+
+def model_schema(cfg: ModelConfig) -> Schema:
+    d, v = cfg.d_model, cfg.padded_vocab
+    return {
+        "embed": ParamDef((v, d), ("vocab", None), scale=1.0),
+        "enc_layers": stack_schema(enc_layer_schema(cfg), cfg.enc_layers),
+        "enc_ln": ParamDef((d,), (None,), init="zeros"),
+        "dec_layers": stack_schema(dec_layer_schema(cfg), cfg.n_layers),
+        "final_ln": ParamDef((d,), (None,), init="zeros"),
+        "head": ParamDef((d, v), ("fsdp", "vocab")),
+    }
+
+
+def init_params(rng, cfg: ModelConfig):
+    return init_from_schema(rng, model_schema(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def param_pspecs(cfg: ModelConfig, rules: ShardingRules):
+    return pspecs_from_schema(model_schema(cfg), rules)
+
+
+def _mha(p, xq, xkv, positions_q, positions_kv, cfg, rules, causal):
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = xq.dtype
+    wq = load_weight(p["wq"], rules, None, "heads", dtype=dt)
+    wk = load_weight(p["wk"], rules, None, "kv_heads", dtype=dt)
+    wv = load_weight(p["wv"], rules, None, "kv_heads", dtype=dt)
+    kv_ax = "kv_heads" if cfg.n_kv_heads % max(rules.axis_size("kv_heads"), 1) == 0 else None
+    q = rules.constrain(xq @ wq, "batch", "seq", "heads").reshape(b, sq, h, hd)
+    kk = rules.constrain(xkv @ wk, "batch", "seq", kv_ax).reshape(b, skv, k, hd)
+    vv = rules.constrain(xkv @ wv, "batch", "seq", kv_ax).reshape(b, skv, k, hd)
+    if positions_q is not None:
+        q = apply_rope(q, positions_q, cfg.rope_theta)
+        kk = apply_rope(kk, positions_kv, cfg.rope_theta)
+    out = blockwise_attention(q, kk, vv, causal=causal)
+    wo = load_weight(p["wo"], rules, "heads", None, dtype=dt)
+    return out.reshape(b, sq, h * hd) @ wo
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, rules: ShardingRules):
+    """frames (B, S_enc, d) stub embeddings -> encoder hidden states."""
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = rules.constrain(x, "batch", "seq", "embed")
+
+    def body(h, lp):
+        a = _mha(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                 rmsnorm(h, lp["ln1"], cfg.norm_eps), pos, pos, cfg, rules, False)
+        h = h + a
+        h = h + mlp_apply(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                          cfg.mlp_kind, rules)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    h, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return rmsnorm(h, params["enc_ln"], cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules):
+    """batch: frames (B,S_enc,d), tokens (B,S_dec), labels, mask."""
+    enc_out = encode(params, batch["frames"], cfg, rules)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    pos_enc = jnp.broadcast_to(jnp.arange(enc_out.shape[1]), (b, enc_out.shape[1]))
+
+    def body(h, lp):
+        h = h + _mha(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                     rmsnorm(h, lp["ln1"], cfg.norm_eps), pos, pos, cfg, rules, True)
+        h = h + _mha(lp["xattn"], rmsnorm(h, lp["lnx"], cfg.norm_eps),
+                     enc_out, None, None, cfg, rules, False)
+        h = h + mlp_apply(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                          cfg.mlp_kind, rules)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat != "none" else body
+    h, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    xent = chunked_xent(params, h, batch["labels"], batch["mask"], cfg, rules)
+    return xent, {"loss": xent, "xent": xent}
+
+
+# -- serving -----------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    k, hd = cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    nl = cfg.n_layers
+    return {
+        "self_k": jax.ShapeDtypeStruct((nl, batch, max_seq, k, hd), dt),
+        "self_v": jax.ShapeDtypeStruct((nl, batch, max_seq, k, hd), dt),
+        "cross_k": jax.ShapeDtypeStruct((nl, batch, max_seq, k, hd), dt),
+        "cross_v": jax.ShapeDtypeStruct((nl, batch, max_seq, k, hd), dt),
+    }
+
+
+def cache_pspecs(cfg: ModelConfig, rules: ShardingRules) -> Dict[str, Any]:
+    model_n = rules.mesh.shape.get("model", 1) if rules.mesh else 1
+    kv_ax = "kv_heads" if cfg.n_kv_heads % max(model_n, 1) == 0 else None
+    p = rules.pspec("layers", "batch", "kv_seq", kv_ax, None)
+    return {"self_k": p, "self_v": p, "cross_k": p, "cross_v": p}
+
+
+def decode_step(params, token, caches, cache_len, cfg: ModelConfig,
+                rules: ShardingRules, *, mesh=None, shard_kv_seq=False):
+    """One decoder token against self- and cross-attn caches."""
+    b = token.shape[0]
+    h_, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dt)
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    enc_len = caches["cross_k"].shape[2]
+
+    def body(h, xs):
+        lp, ck, cv, sk, sv = xs
+        xn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        q = apply_rope((xn @ lp["attn"]["wq"].astype(dt)).reshape(b, 1, h_, hd),
+                       pos, cfg.rope_theta)
+        kt = apply_rope((xn @ lp["attn"]["wk"].astype(dt)).reshape(b, 1, k, hd),
+                        pos, cfg.rope_theta)
+        vt = (xn @ lp["attn"]["wv"].astype(dt)).reshape(b, 1, k, hd)
+        sk = jax.lax.dynamic_update_slice(sk, kt, (0, cache_len, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, vt, (0, cache_len, 0, 0))
+        valid = jnp.full((b,), cache_len + 1, jnp.int32)
+        a = decode_attention(q, sk, sv, valid)
+        h = h + a.reshape(b, 1, h_ * hd) @ lp["attn"]["wo"].astype(dt)
+        # cross attention against the precomputed encoder K/V
+        xq = rmsnorm(h, lp["lnx"], cfg.norm_eps)
+        qx = (xq @ lp["xattn"]["wq"].astype(dt)).reshape(b, 1, h_, hd)
+        ax = decode_attention(qx, ck, cv, jnp.full((b,), enc_len, jnp.int32))
+        h = h + ax.reshape(b, 1, h_ * hd) @ lp["xattn"]["wo"].astype(dt)
+        h = h + mlp_apply(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                          cfg.mlp_kind, rules)
+        return h, (sk, sv)
+
+    h, (new_sk, new_sv) = jax.lax.scan(
+        body,
+        x,
+        (params["dec_layers"], caches["cross_k"], caches["cross_v"],
+         caches["self_k"], caches["self_v"]),
+    )
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    logits = h @ load_weight(params["head"], rules, None, "vocab", dtype=dt)
+    if cfg.padded_vocab != cfg.vocab_size:
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -1e30)
+    logits = rules.constrain(logits, "batch", "seq", "vocab")
+    new_caches = dict(caches, self_k=new_sk, self_v=new_sv)
+    return logits, new_caches

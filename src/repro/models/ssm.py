@@ -1,0 +1,237 @@
+"""Mamba-2 SSD (state-space duality) blocks — chunked, MXU-friendly.
+
+The SSD algorithm computes the selective-SSM recurrence as chunked matmuls:
+within a chunk of Q timesteps everything is dense (C B^T ⊙ decay) X — MXU
+work; across chunks a tiny lax.scan carries the (H, P, N) state.  This is
+the TPU-native rendering of mamba2 (arXiv:2405.21060): quadratic-in-Q local
+blocks + linear global recurrence, no per-step gathers.
+
+Tensor-parallel layout: the z/x projection (per-head channels) is sharded
+over `model`; B/C/dt projections are small and replicated; heads follow the
+channel sharding implicitly.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules
+from repro.models.layers import ParamDef, Schema, load_weight, rmsnorm
+
+
+def ssm_dims(cfg):
+    d_in = 2 * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = d_in // p
+    n = cfg.ssm_state
+    return d_in, h, p, n
+
+
+def mamba_schema(cfg) -> Schema:
+    d = cfg.d_model
+    d_in, h, p, n = ssm_dims(cfg)
+    w = cfg.conv_width
+    return {
+        "zx_proj": ParamDef((d, 2 * d_in), ("fsdp", "ff")),
+        "bcdt_proj": ParamDef((d, 2 * n + h), ("fsdp", None)),
+        "conv_x": ParamDef((w, d_in), (None, "ff"), scale=0.5),
+        "conv_bc": ParamDef((w, 2 * n), (None, None), scale=0.5),
+        "A_log": ParamDef((h,), (None,), init="zeros"),
+        "D": ParamDef((h,), (None,), init="zeros"),
+        "dt_bias": ParamDef((h,), (None,), init="zeros"),
+        "norm_w": ParamDef((d_in,), ("ff",), init="zeros"),
+        "out_proj": ParamDef((d_in, d), ("ff", "fsdp")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def _ssd_chunked(
+    xh: jax.Array,  # (B, S, H, P)
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    dt: jax.Array,  # (B, S, H)  (softplus'd)
+    a: jax.Array,  # (H,) negative decay rates
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    while s % q:  # largest divisor of s not exceeding the chunk target
+        q -= 1
+    nc = s // q
+
+    xc = xh.reshape(b, nc, q, h, p)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h)
+
+    cdt = xh.dtype  # compute dtype for the MXU-heavy quadratic terms (bf16
+    # in production configs; f32 in unit tests).  Decay accumulations stay f32.
+
+    # log-decay within chunk: l[t] = sum_{u<=t} a*dt_u   (B,nc,Q,H)
+    ldec = jnp.cumsum(dtc * a[None, None, None, :], axis=2)
+    ltot = ldec[:, :, -1, :]  # (B,nc,H) total chunk decay
+
+    # intra-chunk (dual/attention form): Y_in[t] = sum_{u<=t} C_t.B_u e^{l_t-l_u} dt_u x_u
+    cb = jnp.einsum("bcqn,bcun->bcqu", cc.astype(cdt), bc.astype(cdt))  # (B,nc,Q,Q)
+    rel = ldec[:, :, :, None, :] - ldec[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    att = (cb[..., None] * decay * dtc[:, :, None, :, :]).astype(cdt)  # (B,nc,Q,Q,H)
+    y_in = jnp.einsum("bcquh,bcuhp->bcqhp", att, xc.astype(cdt)).astype(jnp.float32)
+
+    # chunk boundary states: S_c = sum_u B_u (dt_u x_u) e^{ltot - l_u}
+    wgt = (jnp.exp(ltot[:, :, None, :] - ldec) * dtc).astype(cdt)  # (B,nc,Q,H)
+    s_c = jnp.einsum(
+        "bcun,bcuh,bcuhp->bchpn", bc.astype(cdt), wgt, xc.astype(cdt)
+    ).astype(jnp.float32)  # (B,nc,H,P,N)
+
+    # recurrence over chunks
+    def step(hprev, inputs):
+        s_chunk, lt = inputs  # (B,H,P,N), (B,H)
+        hstate = hprev * jnp.exp(lt)[:, :, None, None] + s_chunk
+        return hstate, hprev
+
+    init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((b, h, p, n), jnp.float32)
+    )
+    hT, hprevs = jax.lax.scan(
+        step,
+        init,
+        (s_c.transpose(1, 0, 2, 3, 4), ltot.transpose(1, 0, 2)),
+    )
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N) state entering chunk
+
+    # inter-chunk contribution: Y_out[t] = C_t . h_in e^{l_t}
+    y_out = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp",
+        cc.astype(cdt),
+        jnp.exp(ldec).astype(cdt),
+        hprevs.astype(cdt),
+    ).astype(jnp.float32)
+    y = (y_in + y_out).reshape(b, s, h, p)
+    return y, hT
+
+
+def mamba_apply(
+    params,
+    x: jax.Array,  # (B, S, d)
+    cfg,
+    rules: ShardingRules,
+    *,
+    initial_state: jax.Array | None = None,
+    return_state: bool = False,
+):
+    """Full-sequence mamba2 block (train / prefill)."""
+    b, s, d = x.shape
+    d_in, h, p, n = ssm_dims(cfg)
+    dt_ = x.dtype
+
+    zx = x @ load_weight(params["zx_proj"], rules, None, "ff", dtype=dt_)
+    zx = rules.constrain(zx, "batch", "seq", "ff")
+    z, xin = zx[..., :d_in], zx[..., d_in:]
+    bcdt = x @ load_weight(params["bcdt_proj"], rules, None, None, dtype=dt_)
+    bmat, cmat, dtr = (
+        bcdt[..., :n],
+        bcdt[..., n : 2 * n],
+        bcdt[..., 2 * n :],
+    )
+
+    xin = jax.nn.silu(_causal_conv(xin, params["conv_x"].astype(dt_)))
+    bc = jax.nn.silu(
+        _causal_conv(jnp.concatenate([bmat, cmat], -1), params["conv_bc"].astype(dt_))
+    )
+    bmat, cmat = bc[..., :n], bc[..., n:]
+
+    dt_act = jax.nn.softplus(
+        dtr.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,S,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+
+    xh = xin.reshape(b, s, h, p)  # compute dtype (bf16 in production)
+    y, hT = _ssd_chunked(
+        xh,
+        bmat,
+        cmat,
+        dt_act,
+        a,
+        cfg.ssm_chunk,
+        h0=initial_state,
+    )
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(
+        jnp.float32
+    )
+    y = y.reshape(b, s, d_in).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm_w"], cfg.norm_eps)
+    out = y @ load_weight(params["out_proj"], rules, "ff", None, dtype=dt_)
+    out = rules.constrain(out, "batch", "seq", "embed")
+    if return_state:
+        return out, hT
+    return out
+
+
+def mamba_decode_step(
+    params,
+    x_t: jax.Array,  # (B, 1, d)
+    cfg,
+    rules: ShardingRules,
+    state: dict,  # {"h": (B,H,P,N), "conv": (B, W-1, d_in + 2N)}
+):
+    """Single-token recurrent update. Returns (out (B,1,d), new_state)."""
+    b, _, d = x_t.shape
+    d_in, h, p, n = ssm_dims(cfg)
+    w = cfg.conv_width
+    dt_ = x_t.dtype
+    xt = x_t[:, 0, :]
+
+    zx = xt @ params["zx_proj"].astype(dt_)
+    z, xin = zx[..., :d_in], zx[..., d_in:]
+    bcdt = xt @ params["bcdt_proj"].astype(dt_)
+    bmat, cmat, dtr = bcdt[..., :n], bcdt[..., n : 2 * n], bcdt[..., 2 * n :]
+
+    # conv state: (B, W-1, d_in + 2N) rolling window of pre-conv activations
+    cur = jnp.concatenate([xin, bmat, cmat], -1)  # (B, d_in+2N)
+    window = jnp.concatenate([state["conv"], cur[:, None, :]], axis=1)  # (B,W,ch)
+    conv_w = jnp.concatenate(
+        [params["conv_x"], params["conv_bc"]], axis=1
+    ).astype(dt_)  # (W, ch)
+    convd = jnp.einsum("bwc,wc->bc", window, conv_w)
+    convd = jax.nn.silu(convd)
+    xin_c, bc_c = convd[..., :d_in], convd[..., d_in:]
+    bmat_c, cmat_c = bc_c[..., :n], bc_c[..., n:]
+
+    dt_act = jax.nn.softplus(
+        dtr.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt_act * a[None, :])  # (B,H)
+
+    xh = xin_c.reshape(b, h, p).astype(jnp.float32)
+    dbx = jnp.einsum(
+        "bh,bn,bhp->bhpn", dt_act, bmat_c.astype(jnp.float32), xh
+    )
+    h_new = state["h"] * decay[:, :, None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cmat_c.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, d_in).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm_w"], cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(dt_))[:, None, :]
+    return out, {"h": h_new, "conv": window[:, 1:, :]}

@@ -1,0 +1,521 @@
+"""Periodic decoder LM: one module covering dense / MoE / hybrid / SSM / VLM.
+
+The layer stack is `n_periods` repetitions of a heterogeneous *period*
+(cfg.period()).  Parameters are stacked over periods and the stack runs
+under `jax.lax.scan` with the pattern unrolled inside the body — an
+80-layer model lowers to a compact HLO while still expressing gemma3's
+5:1 local:global, jamba's 1:7 attn:mamba + MoE, llama4's interleaved
+chunked attention, etc.
+
+Three entry points:
+  loss_fn     — training forward + chunked softmax cross-entropy
+  prefill     — full-sequence forward that also fills KV/SSM caches
+  decode_step — one-token serve step against the caches
+
+All activations carry logical sharding constraints; caches for long-context
+decode can shard their sequence axis (context parallelism) via
+`ShardingRules` overrides.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import (
+    ParamDef,
+    Schema,
+    apply_rope,
+    blockwise_attention,
+    cp_decode_attention,
+    decode_attention,
+    init_from_schema,
+    load_weight,
+    mlp_apply,
+    mlp_schema,
+    pspecs_from_schema,
+    rmsnorm,
+    stack_schema,
+)
+from repro.models.moe import moe_apply, moe_schema
+from repro.models.ssm import (
+    mamba_apply,
+    mamba_decode_step,
+    mamba_schema,
+    ssm_dims,
+)
+
+# ---------------------------------------------------------------------------
+# Schemas
+
+
+def attn_schema(cfg: ModelConfig) -> Schema:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamDef((d, h * hd), ("fsdp", "heads")),
+        "wk": ParamDef((d, k * hd), ("fsdp", "kv_heads")),
+        "wv": ParamDef((d, k * hd), ("fsdp", "kv_heads")),
+        "wo": ParamDef((h * hd, d), ("heads", "fsdp")),
+    }
+
+
+def layer_schema(cfg: ModelConfig, spec: LayerSpec) -> Schema:
+    d = cfg.d_model
+    s: Schema = {"ln1": ParamDef((d,), (None,), init="zeros")}
+    if spec.kind == "attn":
+        s["attn"] = attn_schema(cfg)
+    else:
+        s["mamba"] = mamba_schema(cfg)
+    if cfg.d_ff > 0:
+        s["ln2"] = ParamDef((d,), (None,), init="zeros")
+        if spec.mlp_kind == "moe":
+            s["mlp"] = moe_schema(cfg)
+        else:
+            s["mlp"] = mlp_schema(cfg, spec.mlp_kind)
+    return s
+
+
+def model_schema(cfg: ModelConfig) -> Schema:
+    d, v = cfg.d_model, cfg.padded_vocab
+    period = {
+        f"p{i}": layer_schema(cfg, spec) for i, spec in enumerate(cfg.period())
+    }
+    s: Schema = {
+        # NOTE: vocab-only sharding — a (vocab, fsdp) 2D-sharded table makes
+        # the SPMD partitioner fully rematerialize the gather (observed on
+        # XLA CPU+TPU); the all-gather of a vocab-sharded table is cheap and
+        # overlapped. See EXPERIMENTS.md §Perf.
+        "embed": ParamDef((v, d), ("vocab", None), scale=1.0),
+        "final_ln": ParamDef((d,), (None,), init="zeros"),
+        "layers": stack_schema(period, cfg.n_periods),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = ParamDef((d, v), ("fsdp", "vocab"))
+    return s
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    return init_from_schema(rng, model_schema(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def param_pspecs(cfg: ModelConfig, rules: ShardingRules) -> Dict[str, Any]:
+    return pspecs_from_schema(model_schema(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+
+
+def _kv_axis(cfg: ModelConfig, rules: ShardingRules):
+    """KV projections head-shard only when kv heads divide the TP size;
+    otherwise REPLICATE the (small) kv activations.  A 16-way constraint on
+    K*hd with K=2-8 splits head_dim across shards, and attention then
+    contracts a sharded hd -> per-block partial-sum all-reduces inside the
+    q/kv scans (measured 85 GB/step on glm4).  §Perf iteration 2."""
+    return "kv_heads" if cfg.n_kv_heads % max(rules.axis_size("kv_heads"), 1) == 0 else None
+
+
+def _attn_apply_train(
+    p,
+    x: jax.Array,
+    positions: jax.Array,
+    spec: LayerSpec,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    segment_ids: Optional[jax.Array],
+) -> jax.Array:
+    b, s, d = x.shape
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    # constrain the FLATTENED projections (always evenly divisible); 4D
+    # constraints on (.., K, hd) force uneven shardings when K < TP size
+    # and trigger SPMD full-rematerialization copies.
+    wq = load_weight(p["attn"]["wq"], rules, None, "heads", dtype=dt)
+    wk = load_weight(p["attn"]["wk"], rules, None, "kv_heads", dtype=dt)
+    wv = load_weight(p["attn"]["wv"], rules, None, "kv_heads", dtype=dt)
+    kv_ax = _kv_axis(cfg, rules)
+    q2 = rules.constrain(xn @ wq, "batch", "seq", "heads")
+    k2 = rules.constrain(xn @ wk, "batch", "seq", kv_ax)
+    v2 = rules.constrain(xn @ wv, "batch", "seq", kv_ax)
+    q = q2.reshape(b, s, h, hd)
+    kk = k2.reshape(b, s, k, hd)
+    vv = v2.reshape(b, s, k, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    kk = apply_rope(kk, positions, cfg.rope_theta)
+    out = blockwise_attention(
+        q,
+        kk,
+        vv,
+        pattern=spec.attn_pattern,
+        window=cfg.window,
+        chunk=cfg.chunk_size,
+        causal=True,
+        segment_ids_q=segment_ids,
+        segment_ids_kv=segment_ids,
+    )
+    wo = load_weight(p["attn"]["wo"], rules, "heads", None, dtype=dt)
+    out = out.reshape(b, s, h * hd) @ wo
+    return x + rules.constrain(out, "batch", "seq", "embed")
+
+
+def _mlp_or_moe(p, x, spec, cfg, rules) -> Tuple[jax.Array, jax.Array]:
+    if cfg.d_ff == 0:
+        return x, jnp.zeros((), jnp.float32)
+    xn = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if spec.mlp_kind == "moe":
+        out, aux = moe_apply(p["mlp"], xn, cfg, rules)
+    else:
+        out, aux = mlp_apply(p["mlp"], xn, spec.mlp_kind, rules), jnp.zeros(
+            (), jnp.float32
+        )
+    return x + out, aux
+
+
+def _period_apply_train(
+    pparams,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    segment_ids: Optional[jax.Array],
+) -> Tuple[jax.Array, jax.Array]:
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(cfg.period()):
+        lp = pparams[f"p{i}"]
+        if spec.kind == "attn":
+            x = _attn_apply_train(lp, x, positions, spec, cfg, rules, segment_ids)
+        else:
+            xn = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+            x = x + mamba_apply(lp["mamba"], xn, cfg, rules)
+        x, aux = _mlp_or_moe(lp, x, spec, cfg, rules)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "none":
+        return None
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint_policies.nothing_saveable
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+
+
+def _embed_tokens(params, tokens: jax.Array, cfg: ModelConfig, rules) -> jax.Array:
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    return rules.constrain(x, "batch", "seq", "embed")
+
+
+def _backbone(
+    params,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    segment_ids: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Runs the scanned layer stack. Returns (hidden, moe_aux)."""
+
+    def body(carry, pparams):
+        h, aux = carry
+        h, aux_p = _period_apply_train(pparams, h, positions, cfg, rules, segment_ids)
+        return (h, aux + aux_p), None
+
+    body_fn = body
+    policy = _remat_policy(cfg)
+    if policy is not None:
+        body_fn = jax.checkpoint(body, policy=policy)
+    (h, aux), _ = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), params["layers"]
+    )
+    return rmsnorm(h, params["final_ln"], cfg.norm_eps), aux
+
+
+def _logits_head(params, h: jax.Array, cfg: ModelConfig, rules) -> jax.Array:
+    dt = h.dtype
+    if cfg.tie_embeddings:
+        w = params["embed"].T.astype(dt)
+    else:
+        w = load_weight(params["head"], rules, None, "vocab", dtype=dt)
+    logits = h @ w
+    if cfg.padded_vocab != cfg.vocab_size:  # mask padding rows
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -1e30)
+    return rules.constrain(logits, "batch", "seq", "vocab")
+
+
+def chunked_xent(
+    params,
+    h: jax.Array,  # (B, S, d) final hidden
+    labels: jax.Array,  # (B, S)
+    mask: jax.Array,  # (B, S) float/bool
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    block: int = 1024,
+) -> jax.Array:
+    """Cross-entropy without materializing (B,S,V): scan over seq blocks."""
+    b, s, d = h.shape
+    block = min(block, s)
+    while s % block:  # largest divisor of s not exceeding the target block
+        block -= 1
+    nb = s // block
+    hb = h.reshape(b, nb, block, d).transpose(1, 0, 2, 3)
+    lb = labels.reshape(b, nb, block).transpose(1, 0, 2)
+    mb = mask.reshape(b, nb, block).transpose(1, 0, 2).astype(jnp.float32)
+
+    def blk(carry, xs):
+        tot, cnt = carry
+        hx, lx, mx = xs
+        logits = _logits_head(params, hx, cfg, rules).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mx
+        return (tot + nll.sum(), cnt + mx.sum()), None
+
+    blk_fn = jax.checkpoint(blk) if cfg.remat != "none" else blk
+    (tot, cnt), _ = jax.lax.scan(
+        blk_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hb, lb, mb)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(
+    params,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    rules: ShardingRules,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Training loss. batch: tokens (B,S), labels (B,S), mask (B,S);
+    optional prefix_embeds (B,P,d) for VLM/audio frontends (stubbed)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg, rules)
+    prefix = batch.get("prefix_embeds")
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    seg = batch.get("segment_ids")
+    if seg is not None and prefix is not None:
+        seg = jnp.concatenate(
+            [jnp.zeros((b, prefix.shape[1]), seg.dtype), seg], axis=1
+        )
+    h, aux = _backbone(params, x, positions, cfg, rules, seg)
+    if prefix is not None:
+        h = h[:, prefix.shape[1] :, :]
+    xent = chunked_xent(params, h, batch["labels"], batch["mask"], cfg, rules)
+    loss = xent + 0.01 * aux
+    return loss, {"loss": loss, "xent": xent, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache structure, prefill, decode
+
+
+def cache_spec(
+    cfg: ModelConfig, batch: int, max_seq: int
+) -> Dict[str, Any]:
+    """ShapeDtypeStructs of the decode cache pytree."""
+    np_, hd, k = cfg.n_periods, cfg.hd, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    d_in, h, p, n = ssm_dims(cfg) if any(
+        s.kind == "mamba" for s in cfg.period()
+    ) else (0, 0, 0, 0)
+    out: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.period()):
+        if spec.kind == "attn":
+            out[f"p{i}"] = {
+                "k": jax.ShapeDtypeStruct((np_, batch, max_seq, k, hd), dt),
+                "v": jax.ShapeDtypeStruct((np_, batch, max_seq, k, hd), dt),
+            }
+        else:
+            ch = d_in + 2 * cfg.ssm_state
+            out[f"p{i}"] = {
+                "h": jax.ShapeDtypeStruct((np_, batch, h, p, n), jnp.float32),
+                "conv": jax.ShapeDtypeStruct(
+                    (np_, batch, cfg.conv_width - 1, ch), dt
+                ),
+            }
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, rules: ShardingRules) -> Dict[str, Any]:
+    # kv_heads shard over 'model' only when divisible (GQA kv counts are
+    # usually < the 16-way TP axis; jit in_shardings demand divisibility)
+    model_n = rules.mesh.shape.get("model", 1) if rules.mesh else 1
+    kv_ax = "kv_heads" if cfg.n_kv_heads % max(model_n, 1) == 0 else None
+    out: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.period()):
+        if spec.kind == "attn":
+            p = rules.pspec("layers", "batch", "kv_seq", kv_ax, None)
+            out[f"p{i}"] = {"k": p, "v": p}
+        else:
+            out[f"p{i}"] = {
+                "h": rules.pspec("layers", "batch", "ssm_heads", None, None),
+                "conv": rules.pspec("layers", "batch", None, None),
+            }
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, max_seq)
+    )
+
+
+def _attn_decode(
+    p,
+    x: jax.Array,  # (B,1,d)
+    lcache: Dict[str, jax.Array],
+    cache_len: jax.Array,  # scalar: tokens already in cache
+    spec: LayerSpec,
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    mesh,
+    shard_kv_seq: bool,
+):
+    b = x.shape[0]
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = x.dtype
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    pos = jnp.full((b, 1), cache_len, jnp.int32)
+    wq = load_weight(p["attn"]["wq"], rules, None, "heads", dtype=dt)
+    wk = load_weight(p["attn"]["wk"], rules, None, "kv_heads", dtype=dt)
+    wv = load_weight(p["attn"]["wv"], rules, None, "kv_heads", dtype=dt)
+    q = apply_rope((xn @ wq).reshape(b, 1, h, hd), pos, cfg.rope_theta)
+    kt = apply_rope((xn @ wk).reshape(b, 1, k, hd), pos, cfg.rope_theta)
+    vt = (xn @ wv).reshape(b, 1, k, hd)
+    kc = jax.lax.dynamic_update_slice(lcache["k"], kt, (0, cache_len, 0, 0))
+    vc = jax.lax.dynamic_update_slice(lcache["v"], vt, (0, cache_len, 0, 0))
+    valid = jnp.full((b,), cache_len + 1, jnp.int32)
+    if shard_kv_seq and mesh is not None and "data" in mesh.axis_names:
+        out = cp_decode_attention(
+            q, kc, vc, valid, mesh=mesh, axis="data",
+            pattern=spec.attn_pattern, window=cfg.window, chunk=cfg.chunk_size,
+        )
+    else:
+        out = decode_attention(
+            q, kc, vc, valid,
+            pattern=spec.attn_pattern, window=cfg.window, chunk=cfg.chunk_size,
+        )
+    wo = load_weight(p["attn"]["wo"], rules, "heads", None, dtype=dt)
+    out = out.reshape(b, 1, h * hd) @ wo
+    return x + out, {"k": kc, "v": vc}
+
+
+def decode_step(
+    params,
+    token: jax.Array,  # (B, 1) int32
+    caches: Dict[str, Any],
+    cache_len: jax.Array,  # scalar int32
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    *,
+    mesh=None,
+    shard_kv_seq: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One serve step: next-token logits + updated caches."""
+    x = _embed_tokens(params, token, cfg, rules)
+
+    def body(h, xs):
+        pparams, pcache = xs
+        new_cache = {}
+        for i, spec in enumerate(cfg.period()):
+            lp, lc = pparams[f"p{i}"], pcache[f"p{i}"]
+            if spec.kind == "attn":
+                h, nc = _attn_decode(
+                    lp, h, lc, cache_len, spec, cfg, rules, mesh, shard_kv_seq
+                )
+            else:
+                xn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+                dh, nc = mamba_decode_step(lp["mamba"], xn, cfg, rules, lc)
+                h = h + dh
+            h, _ = _mlp_or_moe(lp, h, spec, cfg, rules)
+            new_cache[f"p{i}"] = nc
+        return h, new_cache
+
+    h, new_caches = jax.lax.scan(body, x, (params["layers"], caches))
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    logits = _logits_head(params, h, cfg, rules)
+    return logits, new_caches
+
+
+def prefill(
+    params,
+    tokens: jax.Array,  # (B, S)
+    cfg: ModelConfig,
+    rules: ShardingRules,
+    max_seq: int,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Full forward that fills caches up to S; returns last-position logits.
+
+    Cache tensors are allocated at max_seq; positions [0, S) are written."""
+    b, s = tokens.shape
+    x = _embed_tokens(params, tokens, cfg, rules)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h_dim, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+
+    def body(h, pparams):
+        new_cache = {}
+        for i, spec in enumerate(cfg.period()):
+            lp = pparams[f"p{i}"]
+            if spec.kind == "attn":
+                xn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+                wq = load_weight(lp["attn"]["wq"], rules, None, "heads", dtype=dt)
+                wk = load_weight(lp["attn"]["wk"], rules, None, "kv_heads", dtype=dt)
+                wv = load_weight(lp["attn"]["wv"], rules, None, "kv_heads", dtype=dt)
+                q = apply_rope(
+                    (xn @ wq).reshape(b, s, h_dim, hd), positions, cfg.rope_theta
+                )
+                kk = apply_rope(
+                    (xn @ wk).reshape(b, s, k, hd), positions, cfg.rope_theta
+                )
+                vv = (xn @ wv).reshape(b, s, k, hd)
+                out = blockwise_attention(
+                    q, kk, vv,
+                    pattern=spec.attn_pattern, window=cfg.window,
+                    chunk=cfg.chunk_size, causal=True,
+                )
+                wo = load_weight(lp["attn"]["wo"], rules, "heads", None, dtype=dt)
+                out = out.reshape(b, s, h_dim * hd) @ wo
+                h = h + out
+                pad = max_seq - s
+                kc = jnp.pad(kk, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(vv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                new_cache[f"p{i}"] = {"k": kc, "v": vc}
+            else:
+                xn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+                dh, hT = mamba_apply(
+                    lp["mamba"], xn, cfg, rules, return_state=True
+                )
+                h = h + dh
+                # conv window: last W-1 pre-conv channels — recompute cheaply
+                d_in, _, _, n = ssm_dims(cfg)
+                zx = xn @ lp["mamba"]["zx_proj"].astype(dt)
+                bcdt = xn @ lp["mamba"]["bcdt_proj"].astype(dt)
+                cur = jnp.concatenate(
+                    [zx[..., d_in:], bcdt[..., : 2 * n]], axis=-1
+                )
+                w = cfg.conv_width
+                new_cache[f"p{i}"] = {
+                    "h": hT,
+                    "conv": cur[:, s - (w - 1) :, :],
+                }
+            h, _ = _mlp_or_moe(lp, h, cfg.period()[i], cfg, rules)
+        return h, new_cache
+
+    h, caches = jax.lax.scan(body, x, params["layers"])
+    h = rmsnorm(h, params["final_ln"], cfg.norm_eps)
+    logits = _logits_head(params, h[:, -1:, :], cfg, rules)
+    return logits, caches

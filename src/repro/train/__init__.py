@@ -1,0 +1,39 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.elastic import ElasticTrainer
+from repro.train.optimizer import (
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    make_optimizer,
+    warmup_cosine,
+)
+from repro.train.step import (
+    apply_updates,
+    init_state,
+    make_compressed_train_step,
+    make_serve_step,
+    make_train_step,
+    make_train_step_with_ingest,
+    opt_state_pspecs,
+    state_shardings,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "ElasticTrainer",
+    "Optimizer",
+    "adafactor",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "init_state",
+    "make_compressed_train_step",
+    "make_optimizer",
+    "make_serve_step",
+    "make_train_step",
+    "make_train_step_with_ingest",
+    "opt_state_pspecs",
+    "state_shardings",
+    "warmup_cosine",
+]

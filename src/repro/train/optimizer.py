@@ -1,0 +1,165 @@
+"""Sharded optimizers: AdamW and Adafactor, plus LR schedules.
+
+Functional API (init/update) with optimizer states inheriting the parameter
+PartitionSpecs (Adam) or factored reductions of them (Adafactor rows/cols),
+so optimizer memory shards exactly like parameters under FSDP+TP.
+
+Adafactor (factored second moment, no first moment) is the default for the
+300B+ MoE configs: ~4 bytes/param of optimizer+param state instead of
+Adam's 12, which is what makes grok-1/llama4-maverick fit a v5e pod.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# -- LR schedules -------------------------------------------------------------
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+# -- global-norm clipping ---------------------------------------------------------
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+# -- Optimizer interface -----------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Dict[str, Any]]
+    update: Callable[[Any, Dict[str, Any], Any], Tuple[Any, Dict[str, Any], Dict[str, Any]]]
+
+
+def adamw(
+    lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.0, clip_norm: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+        lr = lr_fn(count)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_ = b1 * m + (1 - b1) * g32
+            v_ = b2 * v + (1 - b2) * g32 * g32
+            step = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype), m_, v_
+
+        flat, tdef = jax.tree_util.tree_flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        mflat = tdef.flatten_up_to(state["m"])
+        vflat = tdef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(gflat, mflat, vflat, flat)]
+        updates = tdef.unflatten([o[0] for o in out])
+        new_state = {
+            "m": tdef.unflatten([o[1] for o in out]),
+            "v": tdef.unflatten([o[2] for o in out]),
+            "count": count,
+        }
+        return updates, new_state, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    lr_fn, decay: float = 0.8, eps: float = 1e-30, clip_norm: float = 1.0,
+    min_dim_size_to_factor: int = 128,
+) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern), beta1=0."""
+
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor and p.shape[
+            -2
+        ] >= min_dim_size_to_factor
+
+    def init(params):
+        def st(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(st, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+        lr = lr_fn(count)
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+
+        def upd(g, st, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if factored(p):
+                vr = beta * st["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * st["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (
+                    vr[..., None]
+                    * vc[..., None, :]
+                    / jnp.maximum(vr.mean(axis=-1)[..., None, None], eps)
+                )
+                pre = g32 * jax.lax.rsqrt(denom + eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                pre = g32 * jax.lax.rsqrt(v + eps)
+                new_st = {"v": v}
+            # update clipping (RMS<=1) per Adafactor
+            rms = jnp.sqrt(jnp.mean(pre * pre) + 1e-12)
+            pre = pre / jnp.maximum(1.0, rms)
+            return (-lr * pre).astype(p.dtype), new_st
+
+        flat, tdef = jax.tree_util.tree_flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        sflat = tdef.flatten_up_to(state["f"])
+        out = [upd(g, s, p) for g, s, p in zip(gflat, sflat, flat)]
+        updates = tdef.unflatten([o[0] for o in out])
+        new_state = {"f": tdef.unflatten([o[1] for o in out]), "count": count}
+        return updates, new_state, {"grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr_fn, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    raise ValueError(name)

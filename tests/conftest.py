@@ -1,0 +1,30 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real single CPU device.  Sharded behaviour is tested via subprocesses that
+# set --xla_force_host_platform_device_count themselves.
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_sharded(script: str, devices: int = 8, timeout: int = 420) -> str:
+    """Run a python snippet in a subprocess with N fake devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    assert proc.returncode == 0, f"sharded subprocess failed:\n{proc.stderr[-4000:]}"
+    return proc.stdout

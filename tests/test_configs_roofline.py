@@ -1,0 +1,74 @@
+"""Config registry + roofline bookkeeping sanity."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_arch, get_recsys
+from repro.launch.roofline import model_flops, param_counts
+from repro.launch.specs import input_specs
+from repro.models.config import SHAPES
+
+
+def test_all_archs_load_and_periods_divide():
+    assert len(ARCH_IDS) == 10
+    for a in ARCH_IDS:
+        e = get_arch(a)
+        assert e.config.n_layers % len(e.config.period()) == 0
+        assert e.reduced.n_layers % len(e.reduced.period()) == 0
+        assert e.config.padded_vocab % 256 == 0
+
+
+def test_param_counts_known_scales():
+    # each assigned arch's declared parameter count should be in the
+    # ballpark of its name (backbone-only for vlm)
+    expectations = {
+        "h2o-danube-1.8b": (1.4e9, 2.4e9),
+        "gemma-7b": (7e9, 10e9),
+        "glm4-9b": (8e9, 13e9),
+        "gemma3-12b": (10e9, 14e9),
+        "internvl2-76b": (6.5e10, 8.5e10),
+        "grok-1-314b": (2.8e11, 3.6e11),
+        "llama4-maverick-400b-a17b": (3.4e11, 4.6e11),
+        "jamba-v0.1-52b": (4.4e11 / 10, 6e10),
+        "mamba2-1.3b": (1.0e9, 1.9e9),
+    }
+    for a, (lo, hi) in expectations.items():
+        total, active = param_counts(get_arch(a).config)
+        assert lo <= total <= hi, (a, total)
+        assert active <= total
+
+
+def test_moe_active_params_smaller():
+    total, active = param_counts(get_arch("grok-1-314b").config)
+    assert active < 0.5 * total  # top-2 of 8 experts
+    total_d, active_d = param_counts(get_arch("gemma-7b").config)
+    assert total_d == active_d
+
+
+def test_model_flops_kinds():
+    cfg = get_arch("gemma-7b").config
+    t = model_flops(cfg, SHAPES["train_4k"])
+    p = model_flops(cfg, SHAPES["prefill_32k"])
+    d = model_flops(cfg, SHAPES["decode_32k"])
+    assert t == 3 * p  # same tokens, 6NP vs 2NP
+    assert d < p / 1000  # one token per seq
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_all_cells(arch_id, shape):
+    e = get_arch(arch_id)
+    specs = input_specs(e.config, shape)
+    assert specs, (arch_id, shape)
+    for leaf in jax.tree_util.tree_leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+        assert all(d > 0 for d in leaf.shape)
+
+
+def test_recsys_configs():
+    full = get_recsys("rm5")
+    red = get_recsys("rm5", reduced=True)
+    assert full.data.n_dense == 504 and full.data.n_sparse == 42
+    assert full.data.bucket_size == 4096 and full.n_tables == 84
+    assert red.data.embedding_rows <= 4096  # smoke-sized tables

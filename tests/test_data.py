@@ -1,0 +1,83 @@
+"""Data substrate: columnar files, synthetic sources, loader/straggler logic."""
+
+import os
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.columnar import decode_partition_numpy, read_partition, write_partition
+from repro.data.loader import PrefetchLoader, WorkQueue
+from repro.data.storage import PartitionedStore
+from repro.data.synth import RM_CONFIGS, make_rm_source
+from repro.data.tokens import TokenSynthesizer
+
+
+def test_partition_roundtrip_all_rms():
+    for name in ("rm1", "rm2"):
+        src = make_rm_source(name, rows=128)
+        part = src.partition(5)
+        raw = src.raw(5)
+        dec = decode_partition_numpy(part)
+        np.testing.assert_allclose(dec["dense"]["d0"], raw.dense[:, 0])
+        np.testing.assert_array_equal(
+            dec["sparse_values"]["s0"], raw.sparse_values[:, 0]
+        )
+        np.testing.assert_array_equal(
+            dec["sparse_lengths"]["s0"], raw.sparse_lengths[:, 0]
+        )
+        np.testing.assert_allclose(dec["dense"]["label"], raw.labels)
+
+
+def test_partition_determinism():
+    a = make_rm_source("rm1", rows=64).raw(7)
+    b = make_rm_source("rm1", rows=64).raw(7)
+    np.testing.assert_array_equal(a.sparse_values, b.sparse_values)
+    np.testing.assert_allclose(a.dense, b.dense)
+
+
+def test_disk_store_roundtrip():
+    src = make_rm_source("rm1", rows=64)
+    with tempfile.TemporaryDirectory() as d:
+        store = PartitionedStore(8, num_devices=2, source=src, root=d)
+        store.materialize(range(4))
+        part = store.read(2)
+        dec = decode_partition_numpy(part)
+        raw = src.raw(2)
+        np.testing.assert_array_equal(dec["sparse_values"]["s1"], raw.sparse_values[:, 1])
+        # partitions land on the right simulated device dir
+        assert store.owner_of(2) == 0 and store.owner_of(3) == 1
+        assert os.path.exists(os.path.join(d, "device000", "part000002.rp"))
+
+
+def test_work_queue_straggler_reissue():
+    q = WorkQueue([0, 1], straggler_timeout=0.01)
+    a = q.claim()
+    b = q.claim()
+    assert {a, b} == {0, 1}
+    time.sleep(0.05)
+    c = q.claim()  # re-issue of an overdue partition
+    assert c in (0, 1) and q.reissues == 1
+    assert q.complete(c) is True
+    assert q.complete(c) is False  # duplicate completion dropped
+
+
+def test_prefetch_loader_delivers_all():
+    seen = []
+    loader = PrefetchLoader(range(10), lambda pid: pid * 10, num_workers=3, depth=2)
+    for pid, batch in loader:
+        assert batch == pid * 10
+        seen.append(pid)
+    assert sorted(seen) == list(range(10))
+
+
+def test_token_synth_deterministic_sharding():
+    synth = TokenSynthesizer(1000, 128, seed=1)
+    a = synth.shard_batch(3, 7, 4)
+    b = synth.shard_batch(3, 7, 4)
+    c = synth.shard_batch(4, 7, 4)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert (a["tokens"] != c["tokens"]).mean() > 0.5
+    assert a["tokens"].max() < 1000 and a["tokens"].min() >= 1
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])

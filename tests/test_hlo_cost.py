@@ -1,0 +1,60 @@
+"""Trip-count-aware HLO cost model: exact flop counting across scans."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import HloCostModel, analyze, _type_numel_bytes
+
+
+def test_scan_flops_multiplied():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y.sum()
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 128), jnp.float32),
+    ).compile()
+    cost = analyze(c.as_text())
+    assert cost.flops == 7 * 2 * 64 * 128 * 128
+    assert cost.trans == 7 * 64 * 128
+
+
+def test_nested_scan_flops():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y.sum()
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32, 64), jnp.float32),
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+    ).compile()
+    cost = analyze(c.as_text())
+    assert cost.flops == 5 * 3 * 2 * 32 * 64 * 64
+
+
+def test_type_bytes():
+    assert _type_numel_bytes("f32[4,8]{1,0}") == 128
+    assert _type_numel_bytes("bf16[10]") == 20
+    assert _type_numel_bytes("(f32[2]{0}, s8[4]{0})") == 12
+    assert _type_numel_bytes("pred[]") == 1
+
+
+def test_dot_flops_counted_without_loops():
+    def f(a, b):
+        return a @ b
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((16, 32), jnp.float32),
+        jax.ShapeDtypeStruct((32, 8), jnp.float32),
+    ).compile()
+    cost = analyze(c.as_text())
+    assert cost.flops == 2 * 16 * 32 * 8

@@ -1,0 +1,101 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas (interpret) vs ref.py
+oracle vs the numpy encoders in repro.data.encoding."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import encoding as enc
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n_feat,rows,m", [(1, 256, 64), (3, 1500, 1000),
+                                           (7, 1024, 128), (2, 4096, 4096)])
+def test_bucketize_matches_digitize(rng, n_feat, rows, m):
+    vals = rng.lognormal(1, 2, size=(n_feat, rows)).astype(np.float32)
+    bounds = np.sort(rng.lognormal(1, 2, size=(n_feat, m)).astype(np.float32), -1)
+    out = np.asarray(ops.bucketize(vals, bounds))
+    for f in range(n_feat):
+        np.testing.assert_array_equal(out[f], np.digitize(vals[f], bounds[f]))
+
+
+def test_bucketize_oracle_agreement(rng):
+    vals = rng.normal(size=(2, 777)).astype(np.float32)
+    bounds = np.sort(rng.normal(size=(2, 100)).astype(np.float32), -1)
+    kern = np.asarray(ops.bucketize(vals, bounds))
+    orac = np.asarray(ref.bucketize(jnp.asarray(vals), jnp.asarray(bounds[0])))
+    np.testing.assert_array_equal(kern[0], np.asarray(
+        ref.bucketize(jnp.asarray(vals[0]), jnp.asarray(bounds[0]))))
+
+
+@pytest.mark.parametrize("d", [500_000, 123_457, 65_536, 7])
+def test_sigridhash_range_and_oracle(rng, d):
+    ids = rng.integers(0, 2**31, size=(2, 2048)).astype(np.int32)
+    seeds = np.array([1, 99], np.uint32)
+    ds = np.array([d, d], np.uint32)
+    out = np.asarray(ops.sigridhash(ids, seeds, ds))
+    assert out.min() >= 0 and out.max() < d
+    for f in range(2):
+        expect = np.asarray(ref.sigridhash(jnp.asarray(ids[f]), int(seeds[f]), d))
+        np.testing.assert_array_equal(out[f], expect)
+
+
+def test_sigridhash_deterministic_and_seed_sensitive(rng):
+    ids = rng.integers(0, 2**31, size=(1, 1024)).astype(np.int32)
+    a = np.asarray(ops.sigridhash(ids, [7], [10_000]))
+    b = np.asarray(ops.sigridhash(ids, [7], [10_000]))
+    c = np.asarray(ops.sigridhash(ids, [8], [10_000]))
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).mean() > 0.9  # different seed -> different mapping
+
+
+@pytest.mark.parametrize("shape", [(8, 1024), (37, 53), (1, 1)])
+def test_lognorm(rng, shape):
+    x = rng.normal(size=shape).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(ops.lognorm(x)), np.log1p(np.maximum(x, 0)), atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("width", [1, 5, 7, 8, 13, 17, 24, 31, 32])
+def test_bitpack_decode_widths(rng, width):
+    n = 32 * 300
+    hi = (1 << width) if width < 33 else 2**32
+    v = rng.integers(0, min(hi, 2**63), size=n, dtype=np.uint64) % hi
+    packed = enc.bitpack(v, width)
+    grouped = ops.regroup_bitpack(packed, n, width)[None]
+    dec = np.asarray(ops.decode_bitpack(grouped, width=width))[0].astype(np.uint32)
+    np.testing.assert_array_equal(dec, v.astype(np.uint32))
+    orac = np.asarray(ref.bitunpack_grouped(jnp.asarray(grouped[0]), width))
+    np.testing.assert_array_equal(orac.reshape(-1), v.astype(np.uint32))
+
+
+@pytest.mark.parametrize("n", [4 * 128, 4 * 999])
+def test_bytesplit_decode(rng, n):
+    v = rng.normal(size=n).astype(np.float32)
+    words, _ = enc.bytesplit_encode(v)
+    grouped = ops.regroup_bytesplit(words, n)[None]
+    np.testing.assert_array_equal(np.asarray(ops.decode_bytesplit(grouped))[0], v)
+
+
+def test_fused_dense_equals_decode_then_log(rng):
+    n = 4 * 512
+    v = rng.lognormal(1, 2, size=n).astype(np.float32)
+    words, _ = enc.bytesplit_encode(v)
+    grouped = ops.regroup_bytesplit(words, n)[None]
+    fused = np.asarray(ops.fused_dense(grouped))[0]
+    unfused = np.asarray(ops.lognorm(ops.decode_bytesplit(grouped)))[0]
+    np.testing.assert_array_equal(fused, unfused)
+    np.testing.assert_allclose(fused, np.log1p(np.maximum(v, 0)), atol=1e-6)
+
+
+@pytest.mark.parametrize("width", [13, 24, 31])
+def test_fused_sparse_equals_decode_then_hash(rng, width):
+    n = 32 * 256
+    v = rng.integers(0, 2**width, size=n, dtype=np.uint64)
+    packed = enc.bitpack(v, width)
+    grouped = ops.regroup_bitpack(packed, n, width)[None]
+    fused = np.asarray(ops.fused_sparse(grouped, [3], [99991], width=width))[0]
+    dec = ops.decode_bitpack(grouped, width=width)
+    unfused = np.asarray(ops.sigridhash(dec, [3], [99991]))[0]
+    np.testing.assert_array_equal(fused, unfused)

@@ -1,0 +1,85 @@
+"""Per-arch REDUCED-config smoke tests (assignment requirement): one
+forward/train step on CPU asserting output shapes + no NaNs, for all 10
+assigned architectures, plus a decode-step smoke."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.distributed.sharding import ShardingRules
+from repro.launch.specs import _model_module
+from repro.models import transformer as tfm
+from repro.train import adamw, make_train_step, warmup_cosine
+
+B, S = 2, 64
+RULES = ShardingRules.make(None)
+
+
+def _batch(cfg, rng):
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks,
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)),
+                                      jnp.float32)
+    if cfg.family == "vlm" and cfg.frontend_positions:
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.frontend_positions, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_train_step(arch_id, rng):
+    cfg = get_arch(arch_id).reduced
+    mod = _model_module(cfg)
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw(warmup_cosine(1e-3, 5, 50))
+    loss_fn = lambda p, b: mod.loss_fn(p, b, cfg, RULES)
+    step = jax.jit(make_train_step(loss_fn, opt))
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    batch = _batch(cfg, rng)
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), (arch_id, loss)
+    assert int(state["step"]) == 1
+    # output (= updated params) finite
+    for leaf in jax.tree_util.tree_leaves(state["params"])[:5]:
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    # loss-shape sanity: logits head dims
+    lv, m = loss_fn(state["params"], batch)
+    assert np.isfinite(float(lv))
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_arch_smoke_decode_step(arch_id, rng):
+    cfg = get_arch(arch_id).reduced
+    mod = _model_module(cfg)
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    token = jnp.ones((B, 1), jnp.int32)
+    caches = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), mod.cache_spec(cfg, B, S)
+    )
+    logits, new_caches = jax.jit(
+        lambda p, t, c, n: mod.decode_step(p, t, c, n, cfg, RULES)
+    )(params, token, caches, jnp.int32(3))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch_id
+    # cache was actually written
+    changed = jax.tree.map(
+        lambda a, b: bool((np.asarray(a) != np.asarray(b)).any()), caches, new_caches
+    )
+    assert any(jax.tree_util.tree_leaves(changed)), arch_id
+
+
+def test_vlm_prefix_changes_loss(rng):
+    cfg = get_arch("internvl2-76b").reduced
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, rng)
+    l1, _ = tfm.loss_fn(params, batch, cfg, RULES)
+    batch2 = dict(batch, prefix_embeds=batch["prefix_embeds"] * 2.0)
+    l2, _ = tfm.loss_fn(params, batch2, cfg, RULES)
+    assert float(l1) != float(l2)  # image tokens influence text loss

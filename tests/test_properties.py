@@ -1,0 +1,83 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data import encoding as enc
+from repro.kernels import ops, ref
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@_settings
+@given(
+    vals=st.lists(st.floats(-1e6, 1e6, width=32), min_size=1, max_size=200),
+    bounds=st.lists(st.floats(-1e6, 1e6, width=32), min_size=1, max_size=64),
+)
+def test_bucketize_bounds_and_monotonicity(vals, bounds):
+    v = np.array(vals, np.float32)[None]
+    b = np.sort(np.array(bounds, np.float32))[None]
+    out = np.asarray(ops.bucketize(v, b))[0]
+    m = b.shape[1]
+    assert out.min() >= 0 and out.max() <= m  # ids within [0, m]
+    # monotonicity: larger value -> >= bucket id
+    order = np.argsort(v[0], kind="stable")
+    assert (np.diff(out[order]) >= 0).all()
+
+
+@_settings
+@given(
+    ids=st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=200),
+    seed=st.integers(0, 2**32 - 1),
+    d=st.integers(1, 2**31 - 1),
+)
+def test_sigridhash_range_determinism(ids, seed, d):
+    v = np.array(ids, np.int32)[None]
+    a = np.asarray(ops.sigridhash(v, [seed], [d]))[0]
+    b = np.asarray(ref.sigridhash(jnp.asarray(v[0]), seed, d))
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < d
+
+
+@_settings
+@given(
+    data=st.data(),
+    width=st.integers(1, 32),
+)
+def test_bitpack_roundtrip(data, width):
+    n = data.draw(st.integers(1, 300))
+    vals = data.draw(
+        st.lists(st.integers(0, 2**width - 1), min_size=n, max_size=n)
+    )
+    v = np.array(vals, np.uint64)
+    packed = enc.bitpack(v, width)
+    out = enc.bitunpack(packed, n, width)
+    np.testing.assert_array_equal(out, v.astype(np.uint32))
+
+
+@_settings
+@given(vals=st.lists(st.floats(width=32, allow_nan=False), min_size=1, max_size=300))
+def test_bytesplit_roundtrip(vals):
+    v = np.array(vals, np.float32)
+    words, n = enc.bytesplit_encode(v)
+    np.testing.assert_array_equal(enc.bytesplit_decode(words, n), v)
+
+
+@_settings
+@given(
+    rows=st.integers(1, 64),
+    lens=st.data(),
+)
+def test_lengths_mask_invariant(rows, lens):
+    """Lengths decoded from a partition always bound the padded ids."""
+    from repro.data.synth import RMDataConfig, SyntheticRecSysSource
+
+    cfg = RMDataConfig("t", 2, 3, 4, 8, 1, 16, 1 << 12, 256, rows_per_partition=rows)
+    src = SyntheticRecSysSource(cfg, rows=rows)
+    raw = src.raw(lens.draw(st.integers(0, 5)))
+    assert (raw.sparse_lengths >= 1).all()
+    assert (raw.sparse_lengths <= cfg.max_sparse_len).all()
+    mask = np.arange(cfg.max_sparse_len)[None, None] >= raw.sparse_lengths[..., None]
+    assert (np.where(mask, raw.sparse_values, 0) == 0).all()
