@@ -1,10 +1,11 @@
 """Fig. 5 / Fig. 12 — per-stage mini-batch preprocessing latency.
 
-Per RM: time each ETL stage of the unfused (Disagg/CPU-style) pipeline and
-the fused PreSto pipeline on identical encoded partitions.  The paper's
-observation to reproduce: feature generation + normalization (Bucketize /
-SigridHash / Log) dominate (~79% on RM2-5) and the fused ISP path removes
-the inter-stage traffic.
+Per RM: lower the operator graph all-host (the Disagg/CPU-style multi-pass
+pipeline) and time each lowered graph stage, then time the all-ISP (fused
+PreSto) and cost-model hybrid lowerings end-to-end on identical encoded
+partitions.  The paper's observation to reproduce: feature generation +
+normalization (Bucketize / SigridHash / Log) dominate (~79% on RM2-5) and
+the fused ISP path removes the inter-stage traffic.
 """
 
 from __future__ import annotations
@@ -12,47 +13,54 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import BENCH_ROWS, emit, rm_fixture, time_call
-from repro.core.preprocess import preprocess_pages, stage_functions
+from repro.core.costmodel import choose_placement
+from repro.core.opgraph import lower_transform, time_stages
+
+# graph-stage kinds that are "Transform" work (vs Extract/decode and batch
+# formation) for the paper's transform-fraction claim
+_TRANSFORM_KINDS = {"bucketize", "sigridhash", "lognorm"}
 
 
 def run(rms=("rm1", "rm2", "rm5")) -> dict:
     results = {}
     for rm in rms:
         src, spec, pages = rm_fixture(rm)
-        stages = stage_functions(spec)
 
-        t_decode = time_call(stages["extract_decode"], pages)
-        dense_raw, sparse_raw = stages["extract_decode"](pages)
-        t_bucket = time_call(stages["gen_bucketize"], dense_raw)
-        bucket_ids = stages["gen_bucketize"](dense_raw)
-        t_hash = time_call(stages["norm_sigridhash"], sparse_raw, bucket_ids)
-        hashed, gen_hashed = stages["norm_sigridhash"](sparse_raw, bucket_ids)
-        t_log = time_call(stages["norm_log"], dense_raw)
-        dense_norm = stages["norm_log"](dense_raw)
-        t_form = time_call(
-            stages["form_minibatch"], pages, dense_norm, hashed, gen_hashed
+        host_plan = lower_transform(spec, "unfused")
+        stage_times = time_stages(host_plan, pages)
+        unfused_total = sum(stage_times.values())
+        transform_s = sum(
+            stage_times[st.name]
+            for st in host_plan.stages
+            if st.kind in _TRANSFORM_KINDS
         )
-        unfused_total = t_decode + t_bucket + t_hash + t_log + t_form
-
-        fused = jax.jit(lambda p: preprocess_pages(p, spec, mode="fused"))
-        t_fused = time_call(fused, pages)
-
-        transform_frac = (t_bucket + t_hash + t_log) / unfused_total
-        speedup = unfused_total / t_fused
-        for stage, t in [
-            ("extract_decode", t_decode), ("gen_bucketize", t_bucket),
-            ("norm_sigridhash", t_hash), ("norm_log", t_log),
-            ("form_minibatch", t_form),
-        ]:
-            emit(f"latency/{rm}/{stage}", t * 1e6,
-                 f"frac={t / unfused_total:.3f}")
+        transform_frac = transform_s / unfused_total
+        for st in host_plan.stages:
+            t = stage_times[st.name]
+            emit(f"latency/{rm}/{st.name}", t * 1e6,
+                 f"kind={st.kind} frac={t / unfused_total:.3f}")
         emit(f"latency/{rm}/unfused_total", unfused_total * 1e6,
              f"transform_frac={transform_frac:.3f}")
+
+        fused_plan = lower_transform(spec, "fused")
+        fused = jax.jit(fused_plan.execute)
+        t_fused = time_call(fused, pages)
+        speedup = unfused_total / t_fused
         emit(f"latency/{rm}/fused_total", t_fused * 1e6,
              f"fused_speedup={speedup:.2f}x rows={BENCH_ROWS}")
+
+        placements = choose_placement(spec, BENCH_ROWS)
+        hybrid_plan = lower_transform(spec, placements)
+        t_hybrid = time_call(jax.jit(hybrid_plan.execute), pages)
+        host_fams = ",".join(sorted(hybrid_plan.host_families())) or "-"
+        emit(f"latency/{rm}/hybrid_total", t_hybrid * 1e6,
+             f"host_families={host_fams}")
+
         results[rm] = {
             "unfused_s": unfused_total, "fused_s": t_fused,
+            "hybrid_s": t_hybrid, "hybrid_host_families": host_fams,
             "transform_frac": transform_frac, "speedup": speedup,
+            "stages_us": {k: v * 1e6 for k, v in stage_times.items()},
         }
     return results
 

@@ -58,6 +58,24 @@ def run() -> dict:
         "T": plan.train_throughput, "P": plan.worker_throughput,
         "workers": plan.workers_required,
     }
+
+    # per-placement-group provisioning on the hybrid engine: ISP units and
+    # host workers are separate resources, each sized ceil(T/P_group)
+    hpipe = TrainingPipeline(
+        PreStoEngine(spec, mesh=None, placement="hybrid"), store, step
+    )
+    gplan = hpipe.provision_by_placement(state)
+    groups = " ".join(
+        f"{g}={gplan.group_units[g]}(P={gplan.group_throughput[g]:.0f})"
+        for g in sorted(gplan.group_units)
+    )
+    emit("provisioning/measured_by_placement", 0.0,
+         f"T={gplan.train_throughput:.0f} {groups}")
+    results["measured_by_placement"] = {
+        "T": gplan.train_throughput,
+        "group_units": gplan.group_units,
+        "group_throughput": gplan.group_throughput,
+    }
     return results
 
 

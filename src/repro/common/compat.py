@@ -1,0 +1,82 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets current jax but must run on older installs (e.g. 0.4.x):
+
+* ``jax.shard_map``      — lived in ``jax.experimental.shard_map`` with
+  ``check_rep``/``auto`` instead of ``check_vma``/``axis_names``.
+* ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)`` —
+  absent on older jax; see ``repro.launch.mesh.make_mesh``.
+
+Every call site goes through these wrappers so the feature probe lives in
+exactly one place.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _shard_map_impl():
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn  # jax < 0.6
+    return fn, frozenset(inspect.signature(fn).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=False):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    ``axis_names`` (partial-manual) maps to the old ``auto=`` complement;
+    ``check_vma`` maps to the old ``check_rep``.
+    """
+    fn, params = _shard_map_impl()
+    kwargs = {}
+    if "check_vma" in params:
+        kwargs["check_vma"] = check_vma
+    elif "check_rep" in params:
+        kwargs["check_rep"] = check_vma
+    if axis_names is not None:
+        if "axis_names" in params:
+            kwargs["axis_names"] = axis_names
+        elif "auto" in params:
+            kwargs["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` with the psum(1) idiom as the old-jax fallback."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def all_gather(x, axis_name, *, axis_index=None):
+    """``jax.lax.all_gather`` (stacked, axis 0), usable in partial-manual
+    shard_map regions on old jax.
+
+    Old jax/XLA (0.4.x) hard-crashes the SPMD partitioner on gather/permute
+    collectives inside a partial-manual region (only the psum family
+    survives), so there we emulate: each shard scatters its operand into its
+    slot of a zeroed (n, ...) buffer and the buffers are psum'd — slots are
+    disjoint, so the sum IS the gather, and the all-reduce keeps the operand
+    dtype on the wire (e.g. int8 compressed grads).  The fallback needs the
+    shard's own ``axis_index`` passed in as data (``jax.lax.axis_index`` is
+    also unsupported there); callers that may run on old jax must supply it.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.lax.all_gather(x, axis_name)
+    if axis_index is None:
+        raise ValueError(
+            "compat.all_gather on old jax requires axis_index (pass the "
+            "shard's index in as shard_map data)"
+        )
+    n = axis_size(axis_name)
+    buf = jnp.zeros((n,) + x.shape, x.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, x[None], (axis_index,) + (0,) * x.ndim)
+    return jax.lax.psum(buf, axis_name)

@@ -1,14 +1,30 @@
 # The paper's primary contribution: storage-centric (ISP) data preprocessing
-# for RecSys training, as a composable JAX module.
+# for RecSys training, as a composable JAX module.  The Transform itself is
+# an operator graph (opgraph) lowered per placement; presto/disagg/hybrid
+# placement and fusion are compiler decisions, not separate code paths.
 from repro.core.costmodel import (
     Comparison,
     DeviceModel,
+    PlacementCostModel,
+    choose_placement,
     cost_efficiency,
     energy_efficiency,
     tco_usd,
 )
+from repro.core.opgraph import (
+    FAMILIES,
+    OpGraph,
+    build_transform_graph,
+    lower,
+    lower_transform,
+    resolve_placements,
+)
 from repro.core.pipeline import PipelineStats, TrainingPipeline
-from repro.core.planner import ProvisioningPlan, measure_throughput
+from repro.core.planner import (
+    PlacementProvisioning,
+    ProvisioningPlan,
+    measure_throughput,
+)
 from repro.core.preprocess import (
     minibatch_shape_dtypes,
     pages_from_partition,
@@ -22,13 +38,21 @@ from repro.core.spec import TransformSpec
 __all__ = [
     "Comparison",
     "DeviceModel",
+    "FAMILIES",
+    "OpGraph",
     "PipelineStats",
+    "PlacementCostModel",
+    "PlacementProvisioning",
     "PreStoEngine",
     "ProvisioningPlan",
     "TrainingPipeline",
     "TransformSpec",
+    "build_transform_graph",
+    "choose_placement",
     "cost_efficiency",
     "energy_efficiency",
+    "lower",
+    "lower_transform",
     "measure_throughput",
     "minibatch_pspec",
     "minibatch_shape_dtypes",
@@ -36,6 +60,7 @@ __all__ = [
     "pages_pspec",
     "pages_shape_dtypes",
     "preprocess_pages",
+    "resolve_placements",
     "stage_functions",
     "tco_usd",
 ]

@@ -1,4 +1,5 @@
-"""CapEx/OpEx cost-efficiency + energy models (paper §V-C, Fig. 14/15).
+"""Cost models: CapEx/OpEx efficiency (paper §V-C, Fig. 14/15) and the
+per-column-family placement chooser used by the ``hybrid`` execution mode.
 
     cost_efficiency = throughput x duration / (CapEx + OpEx)
     OpEx            = sum(power x duration x electricity)
@@ -8,11 +9,25 @@ per SmartSSD, vendor-list CapEx for servers/cards.  The same machinery
 expresses the TPU-adapted deployment (preprocessing shards co-resident with
 training chips) so Fig. 15's conclusions can be checked under our hardware
 assumptions, separately from the paper-faithful constants.
+
+Placement choice (``choose_placement``): per column family, compare the ISP
+roofline — max(stream the encoded pages, run the chain at the ISP unit's
+compute rate) — against the host alternative — move encoded pages in and
+train-ready tensors out over the link, then run at host compute rate.  The
+family goes wherever it finishes first.  Byte-heavy/compute-light chains
+(decode-dominated) favor ISP; compute-heavy/byte-light chains (Bucketize's
+binary search over large boundary tables) favor the host, mirroring the
+per-operator CPU-vs-accelerator selection of Zhu et al.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.core import opgraph
+from repro.core.spec import TransformSpec
 
 HOURS_3Y = 3 * 365 * 24
 ELECTRICITY_USD_PER_KWH = 0.0733  # [42], [43]
@@ -65,6 +80,84 @@ def energy_efficiency(
 ) -> float:
     """samples per joule (throughput/W), the Fig. 15(a) metric."""
     return throughput / max(units * device.power_w, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Per-column-family placement (hybrid mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementCostModel:
+    """Bytes-moved vs compute roofline constants for one deployment.
+
+    Defaults sketch a SmartSSD-class ISP unit behind a 25 Gb/s effective
+    link to CPU preprocessing servers; they are deliberately round numbers —
+    the *shape* of the decision (decode-heavy -> ISP, search-heavy -> host)
+    is what the tests pin down, not the constants.
+    """
+
+    link_bytes_per_s: float = 3e9  # host hop: NIC, per direction
+    isp_stream_bytes_per_s: float = 8e9  # SSD->FPGA internal stream
+    isp_ops_per_s: float = 5e9  # ISP unit compute roofline
+    host_ops_per_s: float = 100e9  # one provisioned CPU worker
+
+
+DEFAULT_PLACEMENT_MODEL = PlacementCostModel()
+
+# abstract op weights (ops per produced value) per operator kind; bucketize
+# is a binary search so its weight is log2 of the boundary-table size.
+_DECODE_OPS = 1.0
+_LOGNORM_OPS = 2.0
+_SIGRIDHASH_OPS = 8.0
+
+
+def family_compute_ops(spec: TransformSpec, rows: int) -> Dict[str, float]:
+    """Abstract compute ops per family for one partition of `rows`."""
+    cfg = spec.cfg
+    bucket_ops = math.log2(max(cfg.bucket_size, 2))
+    return {
+        "dense": rows * cfg.n_dense * (_DECODE_OPS + _LOGNORM_OPS),
+        "sparse": rows * cfg.n_sparse * cfg.max_sparse_len
+        * (_DECODE_OPS + _SIGRIDHASH_OPS),
+        "gen": rows * cfg.n_generated
+        * (_DECODE_OPS + bucket_ops + _SIGRIDHASH_OPS),
+        "lengths": rows * cfg.n_sparse * _DECODE_OPS,
+        "labels": rows * _DECODE_OPS,
+    }
+
+
+def placement_costs(
+    spec: TransformSpec,
+    rows: Optional[int] = None,
+    model: PlacementCostModel = DEFAULT_PLACEMENT_MODEL,
+) -> Dict[str, Dict[str, float]]:
+    """Per family: modeled seconds under each placement ({family: {isp, host}})."""
+    rows = rows or spec.cfg.rows_per_partition
+    page_b = opgraph.family_page_bytes(spec, rows)
+    out_b = opgraph.family_batch_bytes(spec, rows)
+    ops = family_compute_ops(spec, rows)
+    costs = {}
+    for fam in opgraph.FAMILIES:
+        isp = max(
+            page_b[fam] / model.isp_stream_bytes_per_s,
+            ops[fam] / model.isp_ops_per_s,
+        )
+        host = (page_b[fam] + out_b[fam]) / model.link_bytes_per_s + (
+            ops[fam] / model.host_ops_per_s
+        )
+        costs[fam] = {"isp": isp, "host": host}
+    return costs
+
+
+def choose_placement(
+    spec: TransformSpec,
+    rows: Optional[int] = None,
+    model: PlacementCostModel = DEFAULT_PLACEMENT_MODEL,
+) -> Dict[str, str]:
+    """The hybrid placement: each family goes wherever it finishes first."""
+    return {
+        fam: min(c, key=c.get) for fam, c in placement_costs(spec, rows, model).items()
+    }
 
 
 @dataclasses.dataclass

@@ -1,0 +1,501 @@
+"""Operator-graph IR for the ETL Transform, with placement-aware lowering.
+
+The Transform (encoded pages -> train-ready mini-batch) is declared ONCE as a
+graph of typed operators over *column families* — independent groups of
+columns that flow through their own decode->transform chain:
+
+    family    pages consumed     chain                              batch key
+    dense     dense_words        Decode(bytesplit) -> LogNorm       dense
+    sparse    sparse_words       Decode(bitpack)   -> SigridHash    multi_hot_ids
+    gen       gen_words [1]      Decode -> Bucketize -> SigridHash  one_hot_ids
+    lengths   length_words       Decode(lengths)                    lengths
+    labels    label_words        Decode(labels)                     labels
+
+    [1] gen_words = the sourced dense planes (``spec.generated_source``),
+        bound by ``prepare_env`` so the family is independent of `dense`.
+
+A *placement* assigns each family to ``"isp"`` (the in-storage unit) or
+``"host"`` (a CPU-style preprocessing server).  ``lower`` turns graph +
+placement into an ordered stage list:
+
+* an ISP-placed chain whose kind tuple appears in the op->kernel registry
+  (``repro.kernels.FUSED_KERNELS``) lowers to ONE fused Pallas kernel —
+  one read of encoded bytes, one write of tensors (the PreSto pipeline);
+* a host-placed chain lowers to one stage per operator (the Disagg-style
+  multi-pass baseline, also what the per-stage latency breakdown times).
+
+The lowered plan is what every public entry point executes:
+``preprocess_pages(mode=...)``, ``stage_functions`` and ``PreStoEngine``
+are thin wrappers that build/lower this graph.  ``PreStoEngine`` renders a
+family's host placement as collective-permutes on the data axis for exactly
+that family's pages and outputs — so a ``hybrid`` placement moves only the
+bytes of the families it actually sends to hosts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spec import TransformSpec
+from repro.kernels import FUSED_KERNELS
+from repro.kernels import ops as K
+from repro.kernels import ref as R
+
+ISP = "isp"
+HOST = "host"
+FAMILIES = ("dense", "sparse", "gen", "lengths", "labels")
+
+# column family -> page values consumed / mini-batch keys produced.  The
+# PreStoEngine uses these to hop exactly one family's traffic when that
+# family is host-placed.
+FAMILY_PAGE_VALUES: Dict[str, Tuple[str, ...]] = {
+    "dense": ("dense_words",),
+    "sparse": ("sparse_words",),
+    "gen": ("gen_words",),
+    "lengths": ("length_words",),
+    "labels": ("label_words",),
+}
+FAMILY_BATCH_KEYS: Dict[str, Tuple[str, ...]] = {
+    "dense": ("dense",),
+    "sparse": ("multi_hot_ids",),
+    "gen": ("one_hot_ids",),
+    "lengths": ("lengths",),
+    "labels": ("labels",),
+}
+
+
+# ---------------------------------------------------------------------------
+# Nodes
+
+
+@dataclasses.dataclass(frozen=True)
+class OpNode:
+    """One typed operator: consumes named values, produces one named value."""
+
+    name: str
+    family: str
+    inputs: Tuple[str, ...]
+    output: str
+
+    @property
+    def kind(self) -> str:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Decode(OpNode):
+    encoding: str = "bytesplit"  # bytesplit | bitpack | lengths | labels
+    width: int = 0  # bits per value (bitpack / lengths)
+
+    @property
+    def kind(self) -> str:
+        return f"decode.{self.encoding}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucketize(OpNode):
+    @property
+    def kind(self) -> str:
+        return "bucketize"
+
+
+@dataclasses.dataclass(frozen=True)
+class SigridHash(OpNode):
+    table: str = "sparse"  # which (seeds, max) bank of the spec: sparse | gen
+
+    @property
+    def kind(self) -> str:
+        return "sigridhash"
+
+
+@dataclasses.dataclass(frozen=True)
+class LogNorm(OpNode):
+    @property
+    def kind(self) -> str:
+        return "lognorm"
+
+
+@dataclasses.dataclass(frozen=True)
+class FormBatch(OpNode):
+    @property
+    def kind(self) -> str:
+        return "formbatch"
+
+
+# ---------------------------------------------------------------------------
+# Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class OpGraph:
+    """Nodes + the page values bound externally; edges are value names."""
+
+    nodes: Tuple[OpNode, ...]
+    page_inputs: Tuple[str, ...]
+
+    def __post_init__(self):
+        produced = set(self.page_inputs)
+        for n in self.nodes:  # nodes must already be topo-ordered
+            missing = [i for i in n.inputs if i not in produced]
+            if missing:
+                raise ValueError(f"node {n.name} consumes unknown values {missing}")
+            if n.output in produced:
+                raise ValueError(f"value {n.output} produced twice")
+            produced.add(n.output)
+
+    def node(self, name: str) -> OpNode:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def family_chain(self, family: str) -> Tuple[OpNode, ...]:
+        """The family's operators, in dependency order (graph order)."""
+        return tuple(n for n in self.nodes if n.family == family)
+
+    @property
+    def families(self) -> Tuple[str, ...]:
+        seen: List[str] = []
+        for n in self.nodes:
+            if n.family not in seen and not isinstance(n, FormBatch):
+                seen.append(n.family)
+        return tuple(seen)
+
+
+def build_transform_graph(spec: TransformSpec) -> OpGraph:
+    """The standard RecSys ETL Transform (paper Fig. 1) as an OpGraph."""
+    cfg = spec.cfg
+    nodes = (
+        Decode("decode_dense", "dense", ("dense_words",), "dense_raw",
+               encoding="bytesplit"),
+        LogNorm("lognorm_dense", "dense", ("dense_raw",), "dense_norm"),
+        Decode("decode_sparse", "sparse", ("sparse_words",), "sparse_raw",
+               encoding="bitpack", width=cfg.id_width),
+        SigridHash("hash_sparse", "sparse", ("sparse_raw",), "sparse_hashed",
+                   table="sparse"),
+        Decode("decode_gen", "gen", ("gen_words",), "gen_raw",
+               encoding="bytesplit"),
+        Bucketize("bucketize_gen", "gen", ("gen_raw",), "bucket_ids"),
+        SigridHash("hash_gen", "gen", ("bucket_ids",), "gen_hashed",
+                   table="gen"),
+        Decode("decode_lengths", "lengths", ("length_words",), "lengths_i32",
+               encoding="lengths", width=cfg.len_width),
+        Decode("decode_labels", "labels", ("label_words",), "labels_f32",
+               encoding="labels"),
+        FormBatch(
+            "form_batch", "batch",
+            ("dense_norm", "sparse_hashed", "lengths_i32", "labels_f32",
+             "gen_hashed"),
+            "minibatch",
+        ),
+    )
+    return OpGraph(
+        nodes=nodes,
+        page_inputs=("dense_words", "sparse_words", "length_words",
+                     "label_words", "gen_words"),
+    )
+
+
+def prepare_env(pages: Dict[str, jax.Array], spec: TransformSpec) -> Dict[str, Any]:
+    """Bind graph page inputs from the staged page arrays.
+
+    ``gen_words`` (the generated features' source planes) is a static gather
+    of dense pages — computed here so the gen family never depends on the
+    dense family's placement.
+    """
+    env = dict(pages)
+    src = jnp.asarray(np.asarray(spec.generated_source, np.int32))
+    env["gen_words"] = jnp.take(pages["dense_words"], src, axis=0)
+    return env
+
+
+# ---------------------------------------------------------------------------
+# Placement resolution
+
+
+def resolve_placements(mode, spec: TransformSpec, rows: int | None = None) -> Dict[str, str]:
+    """mode -> {family: "isp"|"host"}.
+
+    str modes: "fused"/"presto"/"isp" (all ISP), "unfused"/"disagg"/"host"
+    (all host), or "hybrid" (per-family choice by the cost model).  A dict is
+    taken verbatim (validated).
+    """
+    if isinstance(mode, dict):
+        unknown = set(mode) - set(FAMILIES)
+        if unknown:
+            raise ValueError(f"unknown column families {sorted(unknown)}")
+        bad = {f: p for f, p in mode.items() if p not in (ISP, HOST)}
+        if bad:
+            raise ValueError(f"placements must be 'isp' or 'host', got {bad}")
+        out = {f: ISP for f in FAMILIES}
+        out.update(mode)
+        return out
+    if mode in ("fused", "presto", ISP):
+        return {f: ISP for f in FAMILIES}
+    if mode in ("unfused", "disagg", HOST):
+        return {f: HOST for f in FAMILIES}
+    if mode == "hybrid":
+        from repro.core.costmodel import choose_placement  # lazy: avoids cycle
+
+        return choose_placement(spec, rows)
+    raise ValueError(f"unknown mode/placement {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (shared by the cost model and the collective tests)
+
+
+def family_page_bytes(spec: TransformSpec, rows: int) -> Dict[str, int]:
+    """Encoded bytes each family reads, per partition of `rows`."""
+    cfg = spec.cfg
+    return {
+        "dense": cfg.n_dense * rows * 4,  # bytesplit: 4 plane bytes / value
+        "sparse": cfg.n_sparse * (rows * cfg.max_sparse_len // 32)
+        * cfg.id_width * 4,
+        "gen": cfg.n_generated * rows * 4,  # sourced dense planes
+        "lengths": cfg.n_sparse * (rows // 32) * cfg.len_width * 4,
+        "labels": rows * 4,
+    }
+
+
+def family_batch_bytes(spec: TransformSpec, rows: int) -> Dict[str, int]:
+    """Train-ready tensor bytes each family writes, per partition of `rows`."""
+    cfg = spec.cfg
+    return {
+        "dense": rows * cfg.n_dense * 4,
+        "sparse": rows * cfg.n_sparse * cfg.max_sparse_len * 4,
+        "gen": rows * cfg.n_generated * 4,
+        "lengths": rows * cfg.n_sparse * 4,
+        "labels": rows * 4,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+
+
+@dataclasses.dataclass
+class Stage:
+    """One executable unit of the lowered plan (a fused kernel or one op)."""
+
+    name: str
+    kind: str
+    family: str
+    placement: str  # "isp" | "host" | "local" (pure assembly)
+    inputs: Tuple[str, ...]
+    outputs: Tuple[str, ...]
+    fn: Callable[..., tuple]
+    node_names: Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class LoweredPlan:
+    spec: TransformSpec
+    placements: Dict[str, str]
+    stages: List[Stage]
+    graph: OpGraph
+
+    def execute_env(self, env: Dict[str, Any]) -> Dict[str, jax.Array]:
+        env = dict(env)
+        for st in self.stages:
+            vals = st.fn(*(env[k] for k in st.inputs))
+            env.update(zip(st.outputs, vals))
+        return env["minibatch"]
+
+    def execute(self, pages: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        return self.execute_env(prepare_env(pages, self.spec))
+
+    def stage(self, name: str) -> Stage:
+        for st in self.stages:
+            if st.name == name:
+                return st
+        raise KeyError(name)
+
+    def host_families(self) -> Tuple[str, ...]:
+        return tuple(f for f in FAMILIES if self.placements.get(f) == HOST)
+
+
+def _op_fn(node: OpNode, spec: TransformSpec, interpret) -> Callable[..., tuple]:
+    """Standalone pass for one operator (host lowering)."""
+    if isinstance(node, Decode):
+        if node.encoding == "bytesplit":
+            return lambda w: (K.decode_bytesplit(w, interpret=interpret),)
+        if node.encoding == "bitpack":
+            width = node.width
+            return lambda w: (K.decode_bitpack(w, width=width, interpret=interpret),)
+        if node.encoding == "lengths":
+            width = node.width
+
+            def decode_lengths(w):
+                lens = R.bitunpack_grouped(w, width)  # (S, G, 32)
+                return (lens.reshape(lens.shape[0], -1).T.astype(jnp.int32),)
+
+            return decode_lengths
+        if node.encoding == "labels":
+            return lambda w: (jax.lax.bitcast_convert_type(w, jnp.float32),)
+        raise ValueError(f"unknown decode encoding {node.encoding}")
+    if isinstance(node, Bucketize):
+        return lambda v: (K.bucketize(v, spec.bucket_boundaries, interpret=interpret),)
+    if isinstance(node, SigridHash):
+        seeds, maxv = (
+            (spec.sparse_seeds, spec.sparse_max)
+            if node.table == "sparse"
+            else (spec.gen_seeds, spec.gen_max)
+        )
+        return lambda v: (K.sigridhash(v, seeds, maxv, interpret=interpret),)
+    if isinstance(node, LogNorm):
+        return lambda v: (K.lognorm(v, interpret=interpret),)
+    if isinstance(node, FormBatch):
+        cfg = spec.cfg
+
+        def form_batch(dense_norm, sparse_hashed, lengths_i32, labels_f32,
+                       gen_hashed):
+            rows = labels_f32.shape[0]
+            return ({
+                "dense": dense_norm.T,
+                "multi_hot_ids": sparse_hashed.reshape(
+                    cfg.n_sparse, rows, cfg.max_sparse_len
+                ).transpose(1, 0, 2),
+                "lengths": lengths_i32,
+                "one_hot_ids": gen_hashed.T,
+                "labels": labels_f32,
+            },)
+
+        return form_batch
+    raise TypeError(f"unknown node type {type(node).__name__}")
+
+
+def _fused_fn(kinds: Tuple[str, ...], family: str, spec: TransformSpec,
+              interpret) -> Callable[..., tuple]:
+    """Bind one fused Pallas kernel to the spec params its chain needs."""
+    kernel = FUSED_KERNELS[kinds]
+    cfg = spec.cfg
+    if family == "dense":
+        return lambda w: (kernel(w, interpret=interpret),)
+    if family == "sparse":
+        return lambda w: (
+            kernel(w, spec.sparse_seeds, spec.sparse_max, width=cfg.id_width,
+                   interpret=interpret),
+        )
+    if family == "gen":
+        return lambda w: (
+            kernel(w, spec.bucket_boundaries, spec.gen_seeds, spec.gen_max,
+                   interpret=interpret),
+        )
+    raise ValueError(f"no fused binding for family {family}")
+
+
+def lower(
+    graph: OpGraph,
+    spec: TransformSpec,
+    placements: Dict[str, str],
+    *,
+    interpret: bool | None = None,
+) -> LoweredPlan:
+    """Graph + per-family placement -> ordered stage list.
+
+    ISP-placed chains whose kind tuple is registered in FUSED_KERNELS become
+    one fused-kernel stage; everything else lowers to one stage per op.
+    """
+    stages: List[Stage] = []
+    for family in graph.families:
+        chain = graph.family_chain(family)
+        place = placements.get(family, ISP)
+        kinds = tuple(n.kind for n in chain)
+        if place == ISP and kinds in FUSED_KERNELS:
+            stages.append(
+                Stage(
+                    name=f"fused_{family}",
+                    kind="fused:" + "+".join(kinds),
+                    family=family,
+                    placement=ISP,
+                    inputs=chain[0].inputs,
+                    outputs=(chain[-1].output,),
+                    fn=_fused_fn(kinds, family, spec, interpret),
+                    node_names=tuple(n.name for n in chain),
+                )
+            )
+        else:
+            for n in chain:
+                stages.append(
+                    Stage(
+                        name=n.name,
+                        kind=n.kind,
+                        family=family,
+                        placement=place,
+                        inputs=n.inputs,
+                        outputs=(n.output,),
+                        fn=_op_fn(n, spec, interpret),
+                        node_names=(n.name,),
+                    )
+                )
+    form = graph.node("form_batch")
+    stages.append(
+        Stage(
+            name=form.name,
+            kind=form.kind,
+            family=form.family,
+            placement="local",
+            inputs=form.inputs,
+            outputs=(form.output,),
+            fn=_op_fn(form, spec, None),
+            node_names=(form.name,),
+        )
+    )
+    return LoweredPlan(spec=spec, placements=dict(placements), stages=stages,
+                       graph=graph)
+
+
+def lower_transform(
+    spec: TransformSpec, mode="fused", *, interpret: bool | None = None
+) -> LoweredPlan:
+    """Convenience: build + lower the standard Transform in one call."""
+    return lower(
+        build_transform_graph(spec), spec, resolve_placements(mode, spec),
+        interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage timing (latency breakdown + per-placement-group provisioning)
+
+
+def time_stages(
+    plan: LoweredPlan,
+    pages: Dict[str, jax.Array],
+    *,
+    iters: int = 3,
+    warmup: int = 1,
+) -> Dict[str, float]:
+    """Best-of-`iters` wall time per lowered stage, threading real values."""
+    env = prepare_env(pages, plan.spec)
+    times: Dict[str, float] = {}
+    for st in plan.stages:
+        fn = jax.jit(st.fn)
+        args = [env[k] for k in st.inputs]
+        out = None
+        for _ in range(max(warmup, 1)):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        times[st.name] = best
+        env.update(zip(st.outputs, out))
+    return times
+
+
+def group_times_by_placement(plan: LoweredPlan, times: Dict[str, float]) -> Dict[str, float]:
+    """Aggregate per-stage seconds into placement groups (isp/host/local)."""
+    groups: Dict[str, float] = {}
+    for st in plan.stages:
+        groups[st.placement] = groups.get(st.placement, 0.0) + times[st.name]
+    return groups

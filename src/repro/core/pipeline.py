@@ -22,7 +22,12 @@ from typing import Callable, Iterable, Optional
 
 import jax
 
-from repro.core.planner import ProvisioningPlan, measure_throughput
+from repro.core.opgraph import group_times_by_placement, time_stages
+from repro.core.planner import (
+    PlacementProvisioning,
+    ProvisioningPlan,
+    measure_throughput,
+)
 from repro.core.presto import PreStoEngine
 from repro.data.loader import PrefetchLoader
 from repro.data.storage import PartitionedStore
@@ -68,9 +73,8 @@ class TrainingPipeline:
         jax.block_until_ready(mb)
         return mb
 
-    def provision(self, state, partition_for_probe: int = 0) -> ProvisioningPlan:
-        """Paper step 2: measure T with dummy batches, P per worker, plan T/P."""
-        probe = self._produce(partition_for_probe)
+    def _measure_train_throughput(self, state, probe):
+        """Paper step 2's T: stress the train step with one probe batch."""
         rows = int(probe["labels"].shape[0])
         state_holder = [state]
 
@@ -79,11 +83,33 @@ class TrainingPipeline:
             state_holder[0] = new_state
             return metrics
 
-        t_meas = measure_throughput(train_once, rows, iters=5, warmup=2)
+        return measure_throughput(train_once, rows, iters=5, warmup=2), rows
+
+    def provision(self, state, partition_for_probe: int = 0) -> ProvisioningPlan:
+        """Paper step 2: measure T with dummy batches, P per worker, plan T/P."""
+        probe = self._produce(partition_for_probe)
+        t_meas, rows = self._measure_train_throughput(state, probe)
         p_meas = measure_throughput(
             lambda: self._produce(partition_for_probe), rows, iters=3, warmup=1
         )
         return ProvisioningPlan.derive(t_meas.samples_per_s, p_meas.samples_per_s)
+
+    def provision_by_placement(
+        self, state, partition_for_probe: int = 0
+    ) -> PlacementProvisioning:
+        """Per-placement-group T/P: time the engine's lowered graph stages,
+        aggregate per group (isp / host / local assembly), provision each
+        group's units independently — ISP units and host workers are
+        different resources in hybrid placement."""
+        pages = self.engine.stage_partition(self.store, partition_for_probe)
+        pages = jax.tree.map(jax.numpy.asarray, pages)
+        probe = self._preprocess(pages)
+        jax.block_until_ready(probe)
+        t_meas, rows = self._measure_train_throughput(state, probe)
+        plan = self.engine.lowered_plan
+        groups = group_times_by_placement(plan, time_stages(plan, pages))
+        group_P = {g: rows / max(t, 1e-9) for g, t in groups.items()}
+        return PlacementProvisioning.derive(t_meas.samples_per_s, group_P)
 
     def run(
         self,

@@ -5,6 +5,12 @@ The train manager stress-tests the accelerator's max training throughput T
 preprocessing worker's throughput P; the job is provisioned ceil(T/P)
 preprocessing workers so the trainer never starves.
 
+With the operator-graph lowering, a job's Transform may span several
+*placement groups* (ISP units vs host workers in hybrid placement); each
+group is provisioned independently from its own measured group throughput
+(``PlacementProvisioning``) — ISP units and CPU workers are separate
+resources, so ceil(T/P) applies per group.
+
 Also reproduces the paper's *CPU-baseline* provisioning (Fig. 4): cores
 required = T / per-core-throughput, using per-RM per-core throughputs derived
 from the paper's published breakdown.
@@ -15,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable
+from typing import Callable, Dict
 
 import jax
 
@@ -36,6 +42,27 @@ class ProvisioningPlan:
     @staticmethod
     def derive(T: float, P: float) -> "ProvisioningPlan":
         return ProvisioningPlan(T, P, max(1, math.ceil(T / P)))
+
+
+@dataclasses.dataclass
+class PlacementProvisioning:
+    """Per-placement-group provisioning for one job (hybrid-aware T/P)."""
+
+    train_throughput: float  # T (samples/s)
+    group_throughput: Dict[str, float]  # group -> P (samples/s per unit)
+    group_units: Dict[str, int]  # group -> ceil(T/P)
+
+    @staticmethod
+    def derive(T: float, group_P: Dict[str, float]) -> "PlacementProvisioning":
+        return PlacementProvisioning(
+            T,
+            dict(group_P),
+            {g: max(1, math.ceil(T / P)) for g, P in group_P.items()},
+        )
+
+    @property
+    def total_units(self) -> int:
+        return sum(self.group_units.values())
 
 
 def measure_throughput(

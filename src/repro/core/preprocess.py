@@ -1,13 +1,18 @@
-"""The ETL Transform graph: encoded pages -> train-ready mini-batch.
+"""The ETL Transform: encoded pages -> train-ready mini-batch.
 
-Two execution modes over identical semantics:
+The Transform itself is declared once as an operator graph
+(``repro.core.opgraph``) and *lowered* per placement; everything in this
+module is a thin wrapper over that lowering:
 
-* ``fused``   — the PreSto path: decode+transform fused per column family
-                (one HBM read of encoded bytes, one write of tensors).
-* ``unfused`` — the Disagg/CPU-style multi-step path (decode, then each
-                transform as its own pass) used for the per-stage latency
-                breakdown (paper Fig. 5 / Fig. 12) and as the ablation
-                baseline.
+* ``preprocess_pages(mode="fused")``   — all families on ISP: decode+transform
+  fused per column family (one HBM read of encoded bytes, one write of
+  tensors) — the PreSto path.
+* ``preprocess_pages(mode="unfused")`` — all families on host: the
+  Disagg/CPU-style multi-step path (decode, then each transform as its own
+  pass), used for the per-stage latency breakdown (paper Fig. 5 / Fig. 12).
+* ``preprocess_pages(mode="hybrid")``  — per-family placement chosen by the
+  cost model (bytes-moved vs compute roofline, ``core.costmodel``); a dict
+  ``{family: "isp"|"host"}`` is also accepted.
 
 Everything here is jit-able and shard_map-able; shapes are static given a
 ``PartitionSchema`` + ``TransformSpec``.
@@ -21,10 +26,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.opgraph import (
+    build_transform_graph,
+    lower,
+    resolve_placements,
+)
 from repro.core.spec import TransformSpec
 from repro.data.columnar import Partition
 from repro.kernels import ops as K
-from repro.kernels import ref as R
 
 MiniBatch = Dict[str, jax.Array]
 
@@ -73,24 +82,14 @@ def pages_shape_dtypes(spec: TransformSpec, rows: int) -> Dict[str, jax.ShapeDty
 
 
 # ---------------------------------------------------------------------------
-# Transform graph
-
-
-def _decode_lengths(length_words: jax.Array, spec: TransformSpec, rows: int) -> jax.Array:
-    """(n_sparse, rows/32, lw) -> (rows, n_sparse) i32.  Tiny; pure jnp."""
-    lens = R.bitunpack_grouped(length_words, spec.cfg.len_width)  # (S, G, 32)
-    return lens.reshape(spec.cfg.n_sparse, rows).T.astype(jnp.int32)
-
-
-def _decode_labels(label_words: jax.Array) -> jax.Array:
-    return jax.lax.bitcast_convert_type(label_words, jnp.float32)
+# Transform entry points (all lowered from the operator graph)
 
 
 def preprocess_pages(
     pages: Dict[str, jax.Array],
     spec: TransformSpec,
     *,
-    mode: str = "fused",
+    mode="fused",
     interpret: bool | None = None,
 ) -> MiniBatch:
     """Full Transform for one partition shard. Returns the train-ready batch.
@@ -102,67 +101,9 @@ def preprocess_pages(
       one_hot_ids    (rows, n_generated) i32  — Bucketize+SigridHash generated
       labels         (rows,) f32
     """
-    cfg = spec.cfg
-    rows = pages["label_words"].shape[0]
-    L = cfg.max_sparse_len
-
-    src = jnp.asarray(np.asarray(spec.generated_source, np.int32))
-    if mode == "fused":
-        # -- PreSto ISP path: decode fused with transform ---------------------
-        dense_norm = K.fused_dense(pages["dense_words"], interpret=interpret)
-        hashed = K.fused_sparse(
-            pages["sparse_words"],
-            spec.sparse_seeds,
-            spec.sparse_max,
-            width=cfg.id_width,
-            interpret=interpret,
-        )
-        # feature GENERATION fully fused: decode+Bucketize+SigridHash in one
-        # kernel over the sourced dense columns (SPerf preprocess it.1)
-        gen_hashed = K.fused_gen(
-            jnp.take(pages["dense_words"], src, axis=0),
-            spec.bucket_boundaries,
-            spec.gen_seeds,
-            spec.gen_max,
-            interpret=interpret,
-        )
-        return {
-            "dense": dense_norm.T,
-            "multi_hot_ids": hashed.reshape(cfg.n_sparse, rows, L).transpose(1, 0, 2),
-            "lengths": _decode_lengths(pages["length_words"], spec, rows),
-            "one_hot_ids": gen_hashed.T,
-            "labels": _decode_labels(pages["label_words"]),
-        }
-    elif mode == "unfused":
-        # -- Disagg-style multi-pass path ------------------------------------
-        dense_raw = K.decode_bytesplit(pages["dense_words"], interpret=interpret)
-        sparse_raw = K.decode_bitpack(
-            pages["sparse_words"], width=cfg.id_width, interpret=interpret
-        )
-        dense_norm = K.lognorm(dense_raw, interpret=interpret)
-        hashed = K.sigridhash(
-            sparse_raw, spec.sparse_seeds, spec.sparse_max, interpret=interpret
-        )
-        gen_inputs = jnp.take(dense_raw, src, axis=0)  # (n_gen, rows) raw
-    else:
-        raise ValueError(mode)
-
-    # -- Feature generation: Bucketize sourced dense cols, then normalize ----
-    bucket_ids = K.bucketize(
-        gen_inputs, spec.bucket_boundaries, interpret=interpret
-    )  # (n_gen, rows) in [0, m]
-    gen_hashed = K.sigridhash(
-        bucket_ids, spec.gen_seeds, spec.gen_max, interpret=interpret
-    )
-
-    # -- Mini-batch formation (step 3 of Fig. 1) -------------------------------
-    return {
-        "dense": dense_norm.T,  # (rows, n_dense)
-        "multi_hot_ids": hashed.reshape(cfg.n_sparse, rows, L).transpose(1, 0, 2),
-        "lengths": _decode_lengths(pages["length_words"], spec, rows),
-        "one_hot_ids": gen_hashed.T,  # (rows, n_gen)
-        "labels": _decode_labels(pages["label_words"]),
-    }
+    placements = resolve_placements(mode, spec)
+    plan = lower(build_transform_graph(spec), spec, placements, interpret=interpret)
+    return plan.execute(pages)
 
 
 def minibatch_shape_dtypes(spec: TransformSpec, rows: int) -> MiniBatch:
@@ -183,45 +124,37 @@ def minibatch_shape_dtypes(spec: TransformSpec, rows: int) -> MiniBatch:
 
 
 def stage_functions(spec: TransformSpec, *, interpret: bool | None = None):
-    """Individually jit-able callables per ETL stage, for stage timing."""
-    cfg = spec.cfg
+    """Individually jit-able callables per ETL stage, for stage timing.
+
+    Thin adapter over the all-host lowering: every body is a lowered graph
+    stage (no transform logic lives here), regrouped into the paper's
+    stage names.
+    """
+    plan = lower(
+        build_transform_graph(spec), spec, resolve_placements("unfused", spec),
+        interpret=interpret,
+    )
+    fns = {st.name: st.fn for st in plan.stages}
+    src = jnp.asarray(np.asarray(spec.generated_source, np.int32))
 
     def extract_decode(pages):
-        dense_raw = K.decode_bytesplit(pages["dense_words"], interpret=interpret)
-        sparse_raw = K.decode_bitpack(
-            pages["sparse_words"], width=cfg.id_width, interpret=interpret
-        )
+        dense_raw = fns["decode_dense"](pages["dense_words"])[0]
+        sparse_raw = fns["decode_sparse"](pages["sparse_words"])[0]
         return dense_raw, sparse_raw
 
     def gen_bucketize(dense_raw):
-        src = jnp.asarray(np.asarray(spec.generated_source, np.int32))
-        return K.bucketize(
-            jnp.take(dense_raw, src, axis=0),
-            spec.bucket_boundaries,
-            interpret=interpret,
-        )
+        return fns["bucketize_gen"](jnp.take(dense_raw, src, axis=0))[0]
 
     def norm_sigridhash(sparse_raw, bucket_ids):
-        h = K.sigridhash(
-            sparse_raw, spec.sparse_seeds, spec.sparse_max, interpret=interpret
-        )
-        g = K.sigridhash(bucket_ids, spec.gen_seeds, spec.gen_max, interpret=interpret)
-        return h, g
+        return fns["hash_sparse"](sparse_raw)[0], fns["hash_gen"](bucket_ids)[0]
 
     def norm_log(dense_raw):
-        return K.lognorm(dense_raw, interpret=interpret)
+        return fns["lognorm_dense"](dense_raw)[0]
 
     def form_minibatch(pages, dense_norm, hashed, gen_hashed):
-        rows = pages["label_words"].shape[0]
-        return {
-            "dense": dense_norm.T,
-            "multi_hot_ids": hashed.reshape(
-                cfg.n_sparse, rows, cfg.max_sparse_len
-            ).transpose(1, 0, 2),
-            "lengths": _decode_lengths(pages["length_words"], spec, rows),
-            "one_hot_ids": gen_hashed.T,
-            "labels": _decode_labels(pages["label_words"]),
-        }
+        lengths = fns["decode_lengths"](pages["length_words"])[0]
+        labels = fns["decode_labels"](pages["label_words"])[0]
+        return fns["form_batch"](dense_norm, hashed, lengths, labels, gen_hashed)[0]
 
     return {
         "extract_decode": jax.jit(extract_decode),

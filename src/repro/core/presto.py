@@ -1,6 +1,7 @@
-"""PreStoEngine: storage-centric vs. disaggregated preprocessing placement.
+"""PreStoEngine: storage-centric vs. disaggregated vs. hybrid placement.
 
-The paper's two system design points, rendered in SPMD:
+The paper's two system design points, plus the per-family generalization,
+rendered in SPMD:
 
 * ``presto`` (Fig. 8)   — every mesh shard preprocesses the partition rows it
   already owns; output batch sharding == input page sharding, so the compiled
@@ -14,14 +15,22 @@ The paper's two system design points, rendered in SPMD:
   copy-in/copy-out traffic and are measurable in the compiled HLO
   (see benchmarks/bench_comm.py and EXPERIMENTS.md §Dry-run).
 
-Both modes compose with the training step into ONE jit program
-(`repro.train.step.make_train_step_with_ingest`), which is the end-to-end
+* ``hybrid``            — per-column-family placement chosen by the cost
+  model (``core.costmodel.choose_placement``) or passed explicitly: ISP
+  families run the fused kernels locally (zero collectives); host families
+  run the multi-pass kernels behind the two disagg hops — but only THEIR
+  pages and outputs ride the permutes, so the HLO's collective bytes are
+  exactly the host-placed families' traffic.
+
+All placements execute the same operator graph (``core.opgraph``) — the
+engine only decides per-family lowering (fused vs multi-pass) and which
+family's traffic hops.  Both compose with the training step into ONE jit
+program (`repro.train.step.make_train_step_with_ingest`), the end-to-end
 "online preprocessing feeds training" pipeline of Fig. 1.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional
 
 import jax
@@ -30,14 +39,28 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import shard_map
+from repro.core.opgraph import (
+    FAMILIES,
+    FAMILY_BATCH_KEYS,
+    FAMILY_PAGE_VALUES,
+    HOST,
+    ISP,
+    LoweredPlan,
+    build_transform_graph,
+    lower,
+    prepare_env,
+    resolve_placements,
+)
 from repro.core.preprocess import (
     MiniBatch,
     pages_from_partition,
     pages_shape_dtypes,
-    preprocess_pages,
 )
 from repro.core.spec import TransformSpec
 from repro.data.storage import PartitionedStore
+
+PLACEMENTS = ("presto", "disagg", "hybrid")
 
 
 def pages_pspec() -> Dict[str, P]:
@@ -68,53 +91,104 @@ class PreStoEngine:
         spec: TransformSpec,
         mesh: Optional[Mesh] = None,
         *,
-        placement: str = "presto",
-        kernel_mode: str = "fused",
+        placement="presto",
+        kernel_mode: Optional[str] = None,
+        family_placements: Optional[Dict[str, str]] = None,
         interpret: bool | None = None,
     ):
-        assert placement in ("presto", "disagg")
+        if isinstance(placement, dict):
+            family_placements, placement = dict(placement), "hybrid"
+        assert placement in PLACEMENTS, placement
         self.spec = spec
         self.mesh = mesh
         self.placement = placement
+        if placement == "hybrid":
+            self.family_placements = resolve_placements(
+                family_placements if family_placements is not None else "hybrid",
+                spec,
+            )
+        else:
+            uniform = ISP if placement == "presto" else HOST
+            self.family_placements = {f: uniform for f in FAMILIES}
+        # kernel_mode: "fused"/"unfused" force the kernel lowering regardless
+        # of comm placement (presto/disagg historically both defaulted to the
+        # fused kernels); None follows the family placements.
         self.kernel_mode = kernel_mode
         self.interpret = interpret
+        self._plan: Optional[LoweredPlan] = None
+
+    @property
+    def lowered_plan(self) -> LoweredPlan:
+        """The shared opgraph lowering every execution path runs through."""
+        if self._plan is None:
+            if self.kernel_mode is not None:
+                kernel_placements = resolve_placements(self.kernel_mode, self.spec)
+            elif self.placement == "disagg":
+                # seed-compatible default: disagg moves the batch but still
+                # runs the fused kernels on the preprocessing shard
+                kernel_placements = resolve_placements("fused", self.spec)
+            else:
+                kernel_placements = self.family_placements
+            self._plan = lower(
+                build_transform_graph(self.spec),
+                self.spec,
+                kernel_placements,
+                interpret=self.interpret,
+            )
+        return self._plan
+
+    def host_families(self) -> tuple[str, ...]:
+        return tuple(f for f in FAMILIES if self.family_placements[f] == HOST)
 
     # -- single-shard (local) path -------------------------------------------
     def preprocess_local(self, pages: Dict[str, jax.Array]) -> MiniBatch:
-        return preprocess_pages(
-            pages, self.spec, mode=self.kernel_mode, interpret=self.interpret
-        )
+        return self.lowered_plan.execute(pages)
 
     # -- sharded global path ---------------------------------------------------
     def preprocess_global(self, pages: Dict[str, jax.Array]) -> MiniBatch:
         """Preprocess a global batch of encoded pages on the mesh.
 
-        In presto placement, the body is pure local compute. In disagg
-        placement, pages hop +1 on the data axis before compute and the
-        mini-batch hops -1 after, modeling the disaggregated pool's
-        copy-in/copy-out (the hops are real collective-permutes in the HLO).
+        ISP-placed families are pure local compute.  Host-placed families'
+        pages hop +1 on the data axis before compute and their mini-batch
+        keys hop -1 after, modeling the disaggregated pool's copy-in/copy-out
+        (the hops are real collective-permutes in the HLO).  ``presto`` = no
+        host families (zero collectives); ``disagg`` = all host families.
         """
         if self.mesh is None:
             return self.preprocess_local(pages)
         mesh = self.mesh
         data_axis = "data"
         n_data = mesh.shape[data_axis]
+        host_fams = self.host_families()
+        plan = self.lowered_plan
 
         def body(pages):
-            if self.placement == "disagg" and n_data > 1:
+            env = prepare_env(pages, self.spec)
+            if host_fams and n_data > 1:
                 perm_in = [(i, (i + 1) % n_data) for i in range(n_data)]
-                pages = jax.tree.map(
-                    lambda x: jax.lax.ppermute(x, data_axis, perm_in), pages
-                )
-            mb = self.preprocess_local(pages)
-            if self.placement == "disagg" and n_data > 1:
+                # when dense pages hop anyway, gen's source planes are
+                # recomputed from them on the far side instead of hopped —
+                # disagg then moves exactly the seed's four page arrays
+                skip_gen = "gen" in host_fams and "dense" in host_fams
+                for fam in host_fams:
+                    if fam == "gen" and skip_gen:
+                        continue
+                    for k in FAMILY_PAGE_VALUES[fam]:
+                        env[k] = jax.lax.ppermute(env[k], data_axis, perm_in)
+                if skip_gen:
+                    src = jnp.asarray(
+                        np.asarray(self.spec.generated_source, np.int32)
+                    )
+                    env["gen_words"] = jnp.take(env["dense_words"], src, axis=0)
+            mb = plan.execute_env(env)
+            if host_fams and n_data > 1:
                 perm_out = [(i, (i - 1) % n_data) for i in range(n_data)]
-                mb = jax.tree.map(
-                    lambda x: jax.lax.ppermute(x, data_axis, perm_out), mb
-                )
+                for fam in host_fams:
+                    for k in FAMILY_BATCH_KEYS[fam]:
+                        mb[k] = jax.lax.ppermute(mb[k], data_axis, perm_out)
             return mb
 
-        return jax.shard_map(
+        return shard_map(
             body,
             mesh=mesh,
             in_specs=(pages_pspec(),),

@@ -48,3 +48,11 @@ class TransformSpec:
     def table_sizes(self) -> np.ndarray:
         """Embedding rows per table (multi-hot tables first, then generated)."""
         return np.concatenate([self.sparse_max, self.gen_max]).astype(np.int64)
+
+    # -- operator-graph view ---------------------------------------------------
+
+    def graph(self):
+        """This Transform as the declarative operator graph (core.opgraph)."""
+        from repro.core.opgraph import build_transform_graph
+
+        return build_transform_graph(self)

@@ -27,6 +27,12 @@ class WorkQueue:
         self._lock = threading.Lock()
         self.straggler_timeout = straggler_timeout
         self.reissues = 0
+        self.total = len(self._pending)  # distinct partitions at creation
+
+    def remaining(self) -> int:
+        """Partitions not yet completed (pending + inflight), under the lock."""
+        with self._lock:
+            return len(self._pending) + len(self._inflight)
 
     def claim(self) -> Optional[int]:
         with self._lock:
@@ -89,7 +95,7 @@ class PrefetchLoader:
         self._stop = threading.Event()
         self._started = False
         self._produced = 0
-        self._total = len(self.work._pending)
+        self._total = self.work.total
 
     def start(self) -> "PrefetchLoader":
         self._started = True
@@ -113,7 +119,25 @@ class PrefetchLoader:
         if not self._started:
             self.start()
         while self._produced < self._total:
-            pid, batch = self.out.get()
+            try:
+                pid, batch = self.out.get(timeout=0.5)
+            except queue.Empty:
+                if self._stop.is_set():
+                    return
+                # Liveness: if every worker has exited but work is undone and
+                # nothing is queued, a worker died mid-produce — blocking on
+                # get() forever would hang the trainer.
+                if (
+                    not any(t.is_alive() for t in self._threads)
+                    and self.out.empty()
+                ):
+                    if self.work.remaining() == 0:
+                        return  # nothing left and nothing queued: clean end
+                    raise RuntimeError(
+                        "PrefetchLoader workers exited with "
+                        f"{self.work.remaining()} partitions unfinished"
+                    )
+                continue
             self._produced += 1
             yield pid, batch
 

@@ -16,7 +16,29 @@ from repro.kernels.ops import (
     sigridhash,
 )
 
+# -- op -> kernel registry -----------------------------------------------------
+# Consulted by the opgraph lowering (repro.core.opgraph): OP_KERNELS maps a
+# single operator kind to its standalone pass; FUSED_KERNELS maps a chain of
+# operator kinds (one column family's decode->transform chain) to the single
+# Pallas kernel that executes the whole chain in one HBM round-trip — a chain
+# is ISP-fusable iff its kind tuple has an entry here.
+OP_KERNELS = {
+    "decode.bytesplit": decode_bytesplit,
+    "decode.bitpack": decode_bitpack,
+    "bucketize": bucketize,
+    "sigridhash": sigridhash,
+    "lognorm": lognorm,
+}
+
+FUSED_KERNELS = {
+    ("decode.bytesplit", "lognorm"): fused_dense,
+    ("decode.bitpack", "sigridhash"): fused_sparse,
+    ("decode.bytesplit", "bucketize", "sigridhash"): fused_gen,
+}
+
 __all__ = [
+    "FUSED_KERNELS",
+    "OP_KERNELS",
     "bucketize",
     "decode_bitpack",
     "decode_bytesplit",

@@ -4,21 +4,37 @@ Single pod : (16, 16) = 256 v5e chips, axes (data, model)
 Multi pod  : (2, 16, 16) = 512 chips, axes (pod, data, model); `pod` is the
              outer DCN-connected pure-DP axis.
 
-A FUNCTION, not a module constant: importing this module must never touch
+FUNCTIONS, not module constants: importing this module must never touch
 jax device state (the dry-run sets XLA_FLAGS before any jax init).
+
+``make_mesh`` is the version-compat constructor every mesh in the repo goes
+through: newer jax wants explicit ``axis_types`` (all Auto here), older jax
+(<= 0.4.x) has neither ``jax.sharding.AxisType`` nor the kwarg.
 """
 
 from __future__ import annotations
 
+import inspect
+
 import jax
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """Build a Mesh, passing ``axis_types`` only where the install supports it."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if hasattr(jax.sharding, "AxisType") and (
+        "axis_types" in inspect.signature(jax.make_mesh).parameters
+    ):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=None, axes=None):
@@ -31,6 +47,4 @@ def make_host_mesh(shape=None, axes=None):
             shape, axes = (2, n // 2), ("data", "model")
         else:
             shape, axes = (1, n), ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)

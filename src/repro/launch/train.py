@@ -122,7 +122,8 @@ def main() -> None:
     ap.add_argument("--rm", default="rm1")
     ap.add_argument("--arch", default="mamba2-1.3b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--placement", choices=["presto", "disagg"], default="presto")
+    ap.add_argument("--placement", choices=["presto", "disagg", "hybrid"],
+                    default="presto")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--partitions", type=int, default=64)
     ap.add_argument("--rows", type=int, default=0)

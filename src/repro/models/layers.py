@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import shard_map
+
 from repro.distributed.sharding import ShardingRules
 
 # ---------------------------------------------------------------------------
@@ -232,25 +234,35 @@ def blockwise_attention(
         m0 = jnp.full((B, K, G, q_block), -1e30, jnp.float32)
         l0 = jnp.zeros((B, K, G, q_block), jnp.float32)
         a0 = jnp.zeros((B, K, G, q_block, D), jnp.float32)
-        ks = (kr, vr, jnp.arange(nk), segk) if segk is not None else (
-            kr,
-            vr,
-            jnp.arange(nk),
-        )
-        if segk is not None:
-            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), ks)
+        # single-block KV: no loop — avoids while-loop overhead AND nested
+        # scans, which old XLA cannot partition in partial-manual regions
+        if nk == 1:
+            (m, l, acc), _ = kv_step(
+                (m0, l0, a0),
+                (kr[0], vr[0], jnp.int32(0), segk[0] if segk is not None else None),
+            )
+        elif segk is not None:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), (kr, vr, jnp.arange(nk), segk)
+            )
         else:
             (m, l, acc), _ = jax.lax.scan(
-                lambda c, x: kv_step(c, (x[0], x[1], x[2], None)), (m0, l0, a0), ks
+                lambda c, x: kv_step(c, (x[0], x[1], x[2], None)),
+                (m0, l0, a0),
+                (kr, vr, jnp.arange(nk)),
             )
         out = acc / jnp.maximum(l[..., None], 1e-30)
         return None, out.astype(q.dtype)
 
-    qs = (qr, jnp.arange(nq), segq) if segq is not None else (qr, jnp.arange(nq))
-    if segq is not None:
-        _, outs = jax.lax.scan(q_step, None, qs)
+    if nq == 1:
+        _, out1 = q_step(None, (qr[0], jnp.int32(0), segq[0] if segq is not None else None))
+        outs = out1[None]
+    elif segq is not None:
+        _, outs = jax.lax.scan(q_step, None, (qr, jnp.arange(nq), segq))
     else:
-        _, outs = jax.lax.scan(lambda c, x: q_step(c, (x[0], x[1], None)), None, qs)
+        _, outs = jax.lax.scan(
+            lambda c, x: q_step(c, (x[0], x[1], None)), None, (qr, jnp.arange(nq))
+        )
     # outs: (nq, B, K, G, Qb, D) -> (B, Sq, H, D)
     return outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, K * G, D)
 
@@ -342,7 +354,7 @@ def cp_decode_attention(
         out = acc_glob / jnp.maximum(l_glob[..., None], 1e-30)
         return out.reshape(B, 1, H, D).astype(q.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None), P()),

@@ -29,6 +29,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common.compat import shard_map
+
 from repro.distributed.sharding import ShardingRules
 from repro.models.layers import ParamDef, Schema, load_weight
 
@@ -128,7 +130,7 @@ def _moe_apply_a2a(params, x: jax.Array, cfg, rules: ShardingRules,
         return out, jax.lax.pmean(aux, axis)
 
     w3 = P(axis, None, None)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body,
         mesh=mesh,
         axis_names={axis},

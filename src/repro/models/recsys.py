@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import shard_map
+
 from repro.data.synth import RMDataConfig
 from repro.distributed.sharding import ShardingRules
 from repro.models.layers import (
@@ -144,7 +146,7 @@ def embedding_bag(
     if mesh is None:
         return bag(params_tables, multi_ids, mask, one_ids)
     batch_axes = rules.mapping.get("batch")
-    return jax.shard_map(
+    return shard_map(
         bag,
         mesh=mesh,
         in_specs=(

@@ -284,9 +284,13 @@ def chunked_xent(
         return (tot + nll.sum(), cnt + mx.sum()), None
 
     blk_fn = jax.checkpoint(blk) if cfg.remat != "none" else blk
-    (tot, cnt), _ = jax.lax.scan(
-        blk_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hb, lb, mb)
-    )
+    zero = (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if nb == 1:
+        # single block: skip the loop (also keeps scans un-nested, which old
+        # XLA requires inside partial-manual shard_map regions)
+        (tot, cnt), _ = blk_fn(zero, (hb[0], lb[0], mb[0]))
+    else:
+        (tot, cnt), _ = jax.lax.scan(blk_fn, zero, (hb, lb, mb))
     return tot / jnp.maximum(cnt, 1.0)
 
 

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.common import compat
+
 
 def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """g -> (q int8, scale f32 scalar, residual)."""
@@ -37,18 +39,21 @@ def init_error_state(params: Any) -> Any:
 
 
 def crosspod_compressed_mean(
-    grads: Any, err: Any, axis: str = "pod"
+    grads: Any, err: Any, axis: str = "pod", axis_index: Any = None
 ) -> Tuple[Any, Any]:
     """Inside a shard_map manual over `axis`: compressed mean of grads.
 
     grads are pod-local means; returns (global mean approx, new error state).
+    ``axis_index`` (this shard's position on `axis`, as traced data) is
+    required on old jax — see ``compat.all_gather``.
     """
-    npods = jax.lax.axis_size(axis)
+    npods = compat.axis_size(axis)
 
     def one(g, e):
         q, scale, residual = quantize_int8(g + e)
-        q_all = jax.lax.all_gather(q, axis)  # (npods, ...) int8 over DCN
-        s_all = jax.lax.all_gather(scale, axis)  # (npods,)
+        # int8 over DCN (s8 collective operands in the compiled HLO)
+        q_all = compat.all_gather(q, axis, axis_index=axis_index)  # (npods, ...)
+        s_all = compat.all_gather(scale, axis, axis_index=axis_index)  # (npods,)
         deq = q_all.astype(jnp.float32) * s_all.reshape(
             (npods,) + (1,) * g.ndim
         )

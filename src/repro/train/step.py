@@ -24,6 +24,8 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import shard_map
+
 from repro.distributed.sharding import ShardingRules
 from repro.train.compression import crosspod_compressed_mean, init_error_state
 from repro.train.optimizer import Optimizer
@@ -167,11 +169,15 @@ def make_compressed_train_step(
     def train_step(state, batch):
         batch_specs = batch_pspec_fn(batch)
 
-        def pod_body(params, opt, step, err, batch_pod):
+        def pod_body(pod_ids, params, opt, step, err, batch_pod):
             (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, batch_pod
             )
-            grads, err = crosspod_compressed_mean(grads, err, "pod")
+            # pod_ids is P("pod")-sharded arange: pod_ids[0] is this pod's
+            # index, needed by the old-jax all_gather fallback (see compat)
+            grads, err = crosspod_compressed_mean(
+                grads, err, "pod", axis_index=pod_ids[0]
+            )
             updates, opt, om = optimizer.update(grads, opt, params)
             params = apply_updates(params, updates)
             return params, opt, step + 1, err, {**metrics, **om}
@@ -195,14 +201,15 @@ def make_compressed_train_step(
         )
         replicated = jax.tree.map(lambda _: P(), state["params"])
         opt_rep = jax.tree.map(lambda _: P(), state["opt"])
-        out = jax.shard_map(
+        pod_ids = jnp.arange(npods, dtype=jnp.int32)
+        out = shard_map(
             pod_body,
             mesh=mesh,
             axis_names={"pod"},
-            in_specs=(replicated, opt_rep, P(), replicated, batch_specs),
+            in_specs=(P("pod"), replicated, opt_rep, P(), replicated, batch_specs),
             out_specs=(replicated, opt_rep, P(), replicated, metric_specs),
             check_vma=False,
-        )(state["params"], state["opt"], state["step"], state["err"], batch)
+        )(pod_ids, state["params"], state["opt"], state["step"], state["err"], batch)
         params, opt, step, err, metrics = out
         return dict(params=params, opt=opt, step=step, err=err), metrics
 

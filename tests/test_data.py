@@ -72,6 +72,30 @@ def test_prefetch_loader_delivers_all():
     assert sorted(seen) == list(range(10))
 
 
+def test_work_queue_remaining_public():
+    q = WorkQueue([0, 1, 2])
+    assert q.total == 3 and q.remaining() == 3
+    a = q.claim()
+    assert q.remaining() == 3  # claimed-but-inflight still counts
+    q.complete(a)
+    assert q.remaining() == 2
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning"
+)
+def test_prefetch_loader_worker_death_raises():
+    """A worker dying mid-produce must not hang the consumer forever."""
+
+    def explode(pid):
+        raise RuntimeError("storage device on fire")
+
+    loader = PrefetchLoader(range(4), explode, num_workers=2, depth=2)
+    with pytest.raises(RuntimeError, match="unfinished"):
+        for _ in loader:
+            pass
+
+
 def test_token_synth_deterministic_sharding():
     synth = TokenSynthesizer(1000, 128, seed=1)
     a = synth.shard_batch(3, 7, 4)

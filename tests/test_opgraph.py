@@ -1,0 +1,167 @@
+"""Operator-graph IR: structure, registry-driven lowering, placement parity,
+cost-model placement, and per-placement-group provisioning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_recsys
+from repro.core import opgraph
+from repro.core.costmodel import choose_placement, placement_costs
+from repro.core.opgraph import (
+    FAMILIES,
+    build_transform_graph,
+    lower,
+    lower_transform,
+    resolve_placements,
+    time_stages,
+    group_times_by_placement,
+)
+from repro.core.planner import PlacementProvisioning
+from repro.core.preprocess import pages_from_partition
+from repro.core.presto import PreStoEngine
+from repro.core.spec import TransformSpec
+from repro.data.synth import SyntheticRecSysSource
+from repro.kernels import FUSED_KERNELS
+
+
+@pytest.fixture(scope="module")
+def rm():
+    """The recsys_rm config (reduced rm1) — the acceptance-criteria fixture."""
+    rcfg = get_recsys("rm1", reduced=True)
+    src = SyntheticRecSysSource(rcfg.data, rows=256)
+    spec = TransformSpec.from_source(src)
+    pages = {k: jnp.asarray(v) for k, v in
+             pages_from_partition(src.partition(0), spec).items()}
+    return src, spec, pages
+
+
+def test_graph_structure(rm):
+    _, spec, _ = rm
+    g = build_transform_graph(spec)
+    assert g.families == FAMILIES
+    # every family is a linear chain ending in the value form_batch consumes
+    form = g.node("form_batch")
+    for fam in FAMILIES:
+        chain = g.family_chain(fam)
+        assert chain, fam
+        for a, b in zip(chain, chain[1:]):
+            assert b.inputs == (a.output,), (fam, a.name, b.name)
+        assert chain[-1].output in form.inputs
+    # spec exposes the same graph
+    assert [n.name for n in spec.graph().nodes] == [n.name for n in g.nodes]
+
+
+def test_graph_rejects_bad_wiring(rm):
+    _, spec, _ = rm
+    g = build_transform_graph(spec)
+    bad = tuple(
+        n if n.name != "hash_sparse"
+        else opgraph.SigridHash("hash_sparse", "sparse", ("nonexistent",),
+                                "sparse_hashed", table="sparse")
+        for n in g.nodes
+    )
+    with pytest.raises(ValueError, match="unknown values"):
+        opgraph.OpGraph(nodes=bad, page_inputs=g.page_inputs)
+
+
+def test_registry_drives_fusion(rm):
+    _, spec, _ = rm
+    plan = lower_transform(spec, "fused")
+    fused = {st.family: st for st in plan.stages if st.kind.startswith("fused:")}
+    # exactly the chains registered in FUSED_KERNELS fuse (dense/sparse/gen);
+    # lengths/labels have no fused kernel and stay per-op even on ISP
+    assert set(fused) == {"dense", "sparse", "gen"}
+    g = build_transform_graph(spec)
+    for fam, st in fused.items():
+        kinds = tuple(n.kind for n in g.family_chain(fam))
+        assert kinds in FUSED_KERNELS
+        assert st.node_names == tuple(n.name for n in g.family_chain(fam))
+    host_plan = lower_transform(spec, "unfused")
+    assert not any(st.kind.startswith("fused:") for st in host_plan.stages)
+
+
+def test_placement_parity_recsys_rm(rm):
+    """Acceptance: presto/disagg/hybrid produce bitwise-identical batches."""
+    _, spec, pages = rm
+    plans = {
+        "fused": lower_transform(spec, "fused"),
+        "unfused": lower_transform(spec, "unfused"),
+        "hybrid": lower_transform(spec, "hybrid"),
+        "mixed": lower_transform(
+            spec, {"dense": "host", "gen": "host", "labels": "host"}
+        ),
+    }
+    outs = {name: p.execute(pages) for name, p in plans.items()}
+    ref = outs["fused"]
+    for name, mb in outs.items():
+        for k in ref:
+            np.testing.assert_array_equal(
+                np.asarray(ref[k]), np.asarray(mb[k]), err_msg=f"{name}/{k}"
+            )
+
+
+def test_engine_placements_parity_recsys_rm(rm):
+    """Acceptance: PreStoEngine(placement=hybrid) == presto == disagg."""
+    _, spec, pages = rm
+    outs = {
+        pl: PreStoEngine(spec, mesh=None, placement=pl).jit_preprocess()(pages)
+        for pl in ("presto", "disagg", "hybrid")
+    }
+    ref = outs["presto"]
+    for pl, mb in outs.items():
+        for k in ref:
+            np.testing.assert_array_equal(
+                np.asarray(ref[k]), np.asarray(mb[k]), err_msg=f"{pl}/{k}"
+            )
+
+
+def test_resolve_placements(rm):
+    _, spec, _ = rm
+    assert set(resolve_placements("fused", spec).values()) == {"isp"}
+    assert set(resolve_placements("unfused", spec).values()) == {"host"}
+    part = resolve_placements({"gen": "host"}, spec)
+    assert part["gen"] == "host"
+    assert all(part[f] == "isp" for f in FAMILIES if f != "gen")
+    with pytest.raises(ValueError, match="unknown column families"):
+        resolve_placements({"nope": "host"}, spec)
+    with pytest.raises(ValueError, match="'isp' or 'host'"):
+        resolve_placements({"gen": "gpu"}, spec)
+    with pytest.raises(ValueError, match="unknown mode"):
+        resolve_placements("warp", spec)
+
+
+def test_cost_model_placement_shape(rm):
+    """The chooser is deterministic, covers every family, and follows the
+    bytes-vs-compute logic: the compute-heavy/byte-light gen chain leaves
+    ISP before the byte-heavy dense/sparse chains do."""
+    _, spec, _ = rm
+    for s in (spec,):
+        pl = choose_placement(s)
+        assert set(pl) == set(FAMILIES)
+        assert set(pl.values()) <= {"isp", "host"}
+        assert pl == choose_placement(s)  # deterministic
+    costs = placement_costs(spec)
+    # gen's host-affinity (isp/host cost ratio) dominates dense's: bucketize's
+    # binary search is pure compute while its bytes are tiny
+    gen_ratio = costs["gen"]["isp"] / costs["gen"]["host"]
+    dense_ratio = costs["dense"]["isp"] / costs["dense"]["host"]
+    assert gen_ratio > dense_ratio
+
+
+def test_stage_timing_groups(rm):
+    _, spec, pages = rm
+    plan = lower_transform(spec, {"gen": "host"})
+    times = time_stages(plan, pages, iters=1, warmup=1)
+    assert set(times) == {st.name for st in plan.stages}
+    groups = group_times_by_placement(plan, times)
+    assert set(groups) == {"isp", "host", "local"}
+    assert all(t >= 0 for t in groups.values())
+
+
+def test_placement_provisioning_math():
+    plan = PlacementProvisioning.derive(1000.0, {"isp": 400.0, "host": 2500.0})
+    assert plan.group_units == {"isp": 3, "host": 1}
+    assert plan.total_units == 4
+    assert plan.group_throughput["isp"] == 400.0
