@@ -5,14 +5,27 @@ ratio is the hardware-independent fraction).  Fleet-scale Disagg(N) follows
 the paper's own analytical model: per-worker throughput scales linearly with
 N workers; the paper's published equivalence (ISP unit ~ cores) anchors the
 cross-hardware comparison in bench_provisioning / bench_tco.
+
+``--multi-tenant`` benches the service surface instead: J jobs sharing one
+``PreprocessingService`` pool vs the same jobs run solo, reporting per-job
+and aggregate rows/s (the multi-user deployment the T/P planner provisions).
 """
 
 from __future__ import annotations
+
+import argparse
+import threading
+import time
 
 import jax
 
 from benchmarks.common import BENCH_ROWS, emit, rm_fixture, time_call
 from repro.core.preprocess import preprocess_pages
+from repro.core.presto import PreStoEngine
+from repro.core.service import JobSpec, PreprocessingService
+from repro.core.spec import TransformSpec
+from repro.data.storage import PartitionedStore
+from repro.data.synth import RM_CONFIGS, SyntheticRecSysSource
 
 
 def run(rms=("rm1", "rm2", "rm5")) -> dict:
@@ -35,5 +48,82 @@ def run(rms=("rm1", "rm2", "rm5")) -> dict:
     return results
 
 
+def run_multi_tenant(
+    rm: str = "rm1",
+    *,
+    jobs: int = 2,
+    workers: int = 2,
+    partitions_per_job: int = 4,
+    rows: int = BENCH_ROWS,
+) -> dict:
+    """Service-level throughput: J tenants on one pool vs each tenant solo."""
+    workers = max(workers, jobs)  # admission floor: one unit per tenant
+    src = SyntheticRecSysSource(RM_CONFIGS[rm], rows=rows)
+    spec = TransformSpec.from_source(src)
+    store = PartitionedStore(jobs * partitions_per_job, num_devices=4, source=src)
+    engine = PreStoEngine(spec)  # shared jit cache: solo and shared runs
+    ranges = {
+        f"{rm}-t{j}": range(j * partitions_per_job, (j + 1) * partitions_per_job)
+        for j in range(jobs)
+    }
+
+    def job_spec(name: str) -> JobSpec:
+        return JobSpec(name=name, partitions=ranges[name], engine=engine,
+                       store=store, units=workers)
+
+    def drain(session, sink: dict) -> None:
+        t0 = time.perf_counter()
+        sink["batches"] = sum(1 for _ in session)
+        sink["wall_s"] = time.perf_counter() - t0
+
+    engine.produce_batch(store, 0)  # compile outside the timed region
+    solo_rows_s = {}
+    for name in ranges:
+        with PreprocessingService(num_workers=workers) as svc:
+            sink: dict = {}
+            drain(svc.submit(job_spec(name)), sink)
+        solo_rows_s[name] = rows * sink["batches"] / sink["wall_s"]
+        emit(f"throughput/{rm}/solo/{name}", sink["wall_s"] * 1e6 / sink["batches"],
+             f"rows_per_s={solo_rows_s[name]:.0f}")
+
+    with PreprocessingService(num_workers=workers) as svc:
+        sinks = {name: {} for name in ranges}
+        t0 = time.perf_counter()
+        threads = [
+            threading.Thread(target=drain, args=(svc.submit(job_spec(n)), sinks[n]))
+            for n in ranges
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        shared_wall = time.perf_counter() - t0
+
+    total_batches = sum(s["batches"] for s in sinks.values())
+    agg_rows_s = rows * total_batches / shared_wall
+    for name, sink in sinks.items():
+        emit(f"throughput/{rm}/shared/{name}", sink["wall_s"] * 1e6 / sink["batches"],
+             f"rows_per_s={rows * sink['batches'] / sink['wall_s']:.0f}")
+    emit(f"throughput/{rm}/shared/aggregate", shared_wall * 1e6 / total_batches,
+         f"rows_per_s={agg_rows_s:.0f} jobs={jobs} workers={workers}")
+    return {"solo_rows_s": solo_rows_s, "aggregate_rows_s": agg_rows_s}
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--multi-tenant", action="store_true",
+                    help="bench the shared-pool service surface")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: small rows/partitions")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=2)
+    args = ap.parse_args()
+    if args.multi_tenant:
+        run_multi_tenant(
+            jobs=args.jobs,
+            workers=args.workers,
+            partitions_per_job=2 if args.smoke else 4,
+            rows=256 if args.smoke else BENCH_ROWS,
+        )
+    else:
+        run()

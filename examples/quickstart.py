@@ -1,8 +1,9 @@
-"""Quickstart: the PreSto pipeline in ~40 lines.
+"""Quickstart: the PreSto pipeline in ~40 lines, as a service client.
 
-Generates one encoded columnar partition (the paper's mini-batch unit),
-preprocesses it with the fused ISP kernels (decode+Bucketize+SigridHash+Log
-in VMEM), and takes a few DLRM training steps on the result.
+Submits one job to a `PreprocessingService` (the shared ISP pool): the
+service's workers Extract encoded columnar partitions and Transform them
+with the fused ISP kernels (decode+Bucketize+SigridHash+Log in VMEM); the
+returned `Session` streams train-ready mini-batches that a DLRM consumes.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_recsys
-from repro.core import PreStoEngine, TransformSpec, pages_from_partition
+from repro.core import JobSpec, PreprocessingService, TransformSpec
+from repro.data.storage import PartitionedStore
 from repro.data.synth import SyntheticRecSysSource
 from repro.distributed.sharding import ShardingRules
 from repro.models import recsys as RS
@@ -19,30 +21,35 @@ from repro.train import adamw, make_train_step, warmup_cosine
 
 
 def main() -> None:
-    # 1. storage: a synthetic RM1-style dataset, one 512-row partition
+    # 1. storage: a synthetic RM1-style dataset, five 512-row partitions
     rcfg = get_recsys("rm1", reduced=True)
     src = SyntheticRecSysSource(rcfg.data, rows=512)
     spec = TransformSpec.from_source(src)
-    part = src.partition(0)
-    print(f"partition: {part.nbytes()/1e6:.2f} MB encoded columnar pages")
+    store = PartitionedStore(5, num_devices=4, source=src)
+    print(f"partition: {src.partition(0).nbytes()/1e6:.2f} MB encoded columnar pages")
 
-    # 2. Transform: fused ISP kernels -> train-ready mini-batch
-    engine = PreStoEngine(spec)
-    pages = {k: jnp.asarray(v) for k, v in pages_from_partition(part, spec).items()}
-    mb = engine.jit_preprocess()(pages)
-    print("mini-batch:", {k: tuple(v.shape) for k, v in mb.items()})
+    # 2. Transform-as-a-service: submit the job, stream mini-batches
+    service = PreprocessingService(num_workers=2)
+    session = service.submit(JobSpec(
+        name="quickstart", spec=spec, store=store,
+        partitions=range(5), placement="presto"))
 
-    # 3. Load + train: DLRM consumes the mini-batch
+    # 3. Load + train: DLRM consumes the session's stream
     rules = ShardingRules.make(None)
     params = RS.init_params(jax.random.PRNGKey(0), rcfg)
     opt = adamw(warmup_cosine(1e-3, 5, 100))
     step = jax.jit(make_train_step(lambda p, b: RS.loss_fn(p, b, rcfg, rules), opt))
     state = {"params": params, "opt": opt.init(params),
              "step": jnp.zeros((), jnp.int32)}
-    for i in range(5):
+    for i, (pid, mb) in enumerate(session):
         state, metrics = step(state, mb)
-        print(f"step {i}: loss={float(metrics['loss']):.4f} "
+        print(f"step {i} (partition {pid}): loss={float(metrics['loss']):.4f} "
               f"acc={float(metrics['accuracy']):.3f}")
+    st = session.stats()
+    print(f"session: {st.delivered}/{st.total} batches, "
+          f"{st.achieved_samples_per_s:.0f} samples/s, "
+          f"starvation {st.starvation:.2f}")
+    service.close()
 
 
 if __name__ == "__main__":

@@ -1,13 +1,13 @@
 """End-to-end driver: train a ~100M-parameter DLRM for a few hundred steps
 through the full PreSto pipeline (Fig. 1): Extract (columnar store) ->
-Transform (fused ISP kernels, producer threads) -> Load (input queue) ->
-train (consumer), with T/P provisioning, checkpointing, and restart safety.
+Transform (fused ISP kernels, shared service pool) -> Load (session stream)
+-> train (consumer), with T/P provisioning driving the job's QoS target,
+checkpointing, and restart safety.
 
     PYTHONPATH=src python examples/train_recsys_e2e.py [--steps 200]
 """
 
 import argparse
-import dataclasses
 import tempfile
 import time
 
@@ -15,7 +15,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PreStoEngine, TrainingPipeline, TransformSpec
+from repro.core import (
+    JobSpec,
+    PreprocessingService,
+    PreStoEngine,
+    TrainingPipeline,
+    TransformSpec,
+)
 from repro.data.storage import PartitionedStore
 from repro.data.synth import RMDataConfig, SyntheticRecSysSource
 from repro.distributed.sharding import ShardingRules
@@ -49,30 +55,41 @@ def main() -> None:
     state = {"params": params, "opt": opt.init(params),
              "step": jnp.zeros((), jnp.int32)}
 
-    pipe = TrainingPipeline(engine, store, step, num_workers=args.workers)
+    pipe = TrainingPipeline(engine, store, step)
     plan = pipe.provision(state)
     print(f"provisioning: T={plan.train_throughput:.0f} rows/s, "
           f"P={plan.worker_throughput:.0f} rows/s/worker -> "
           f"{plan.workers_required} preprocessing workers (paper step 2: T/P)")
 
+    # the provisioned pool, as a service; the job's QoS target is the
+    # measured training throughput T, so demand converges to ceil(T/P)
+    service = PreprocessingService(num_workers=args.workers)
+    session = service.submit(JobSpec(
+        name="rm1-100m", engine=engine, store=store,
+        partitions=range(args.steps + 8),
+        target_samples_per_s=plan.train_throughput))
+
     with tempfile.TemporaryDirectory() as ckdir:
         ckpt = CheckpointManager(ckdir, keep=2)
         t0 = time.time()
-        state, stats, metrics = pipe.run(
-            state, range(args.steps + 8), max_steps=args.steps
+        state, stats, metrics = pipe.run_session(
+            state, session, max_steps=args.steps
         )
         ckpt.save(int(state["step"]), state)
         ckpt.wait()
         wall = time.time() - t0
         losses = [m["loss"] for m in metrics]
         k = max(len(losses) // 10, 1)
+        sess_stats = session.stats()
         print(f"trained {stats.steps} steps ({stats.steps*args.rows} samples) "
               f"in {wall:.0f}s; consumer-util {stats.utilization:.2f}; "
-              f"straggler re-issues {stats.reissues}")
+              f"straggler re-issues {stats.reissues}; "
+              f"QoS demand {sess_stats.demand_units} unit(s)")
         print(f"loss: first10={np.mean(losses[:k]):.4f} "
               f"last10={np.mean(losses[-k:]):.4f} (should decrease)")
         print(f"checkpoint at step {ckpt.latest_step()} -> restart-safe")
         assert np.mean(losses[-k:]) < np.mean(losses[:k]), "loss did not improve"
+    service.close()
 
 
 if __name__ == "__main__":

@@ -21,9 +21,12 @@ from repro.core.opgraph import (
 )
 from repro.core.pipeline import PipelineStats, TrainingPipeline
 from repro.core.planner import (
+    AdmissionError,
     PlacementProvisioning,
+    PoolPlan,
     ProvisioningPlan,
     measure_throughput,
+    plan_pool,
 )
 from repro.core.preprocess import (
     minibatch_shape_dtypes,
@@ -33,18 +36,30 @@ from repro.core.preprocess import (
     stage_functions,
 )
 from repro.core.presto import PreStoEngine, minibatch_pspec, pages_pspec
+from repro.core.service import (
+    JobSpec,
+    PreprocessingService,
+    Session,
+    SessionStats,
+)
 from repro.core.spec import TransformSpec
 
 __all__ = [
+    "AdmissionError",
     "Comparison",
     "DeviceModel",
     "FAMILIES",
+    "JobSpec",
     "OpGraph",
     "PipelineStats",
     "PlacementCostModel",
     "PlacementProvisioning",
+    "PoolPlan",
     "PreStoEngine",
+    "PreprocessingService",
     "ProvisioningPlan",
+    "Session",
+    "SessionStats",
     "TrainingPipeline",
     "TransformSpec",
     "build_transform_graph",
@@ -59,6 +74,7 @@ __all__ = [
     "pages_from_partition",
     "pages_pspec",
     "pages_shape_dtypes",
+    "plan_pool",
     "preprocess_pages",
     "resolve_placements",
     "stage_functions",

@@ -1,23 +1,36 @@
-"""Producer-consumer training pipeline (paper Fig. 9).
+"""Training-side client of a preprocessing Session (paper Fig. 9 consumer).
 
-TrainingPipeline glues together:
-  train manager    — owns the input queue, feeds the accelerator step;
-  preprocess mgr   — spawns preprocessing workers (PrefetchLoader threads)
-                     that Extract partitions from the store and Transform
-                     them via a PreStoEngine;
-  provisioning     — T/P measurement then worker count (core.planner).
+TrainingPipeline is the train manager: it drains one ``core.service.Session``
+(the input queue) into the accelerator step and accounts utilization the way
+the paper's Fig. 3 does — consumer utilization = time inside train steps /
+wall time; starvation = time blocked on the queue.
 
-Utilization accounting mirrors the paper's Fig. 3: consumer utilization =
-time spent inside train steps / wall time; starvation = time blocked on the
-queue.  (On this 1-core container the absolute numbers are not TPU numbers —
-the *pipeline mechanics* are what is exercised; fleet-scale throughput uses
-the analytical model, exactly like the paper's §V-B methodology.)
+New API (multi-tenant, shared pool):
+
+    service = PreprocessingService(num_workers=4)
+    session = service.submit(JobSpec(name="job", spec=spec, store=store,
+                                     partitions=range(64)))
+    pipe = TrainingPipeline(train_step=step)
+    state, stats, metrics = pipe.run_session(state, session)
+
+Deprecated single-job shim (identical behavior, warns): the original
+``TrainingPipeline(engine, store, train_step)`` constructor plus ``run()``,
+which now spins up a private one-job ``PreprocessingService`` per call.
+
+Provisioning (paper §IV-B steps 2-3) stays here: ``provision`` measures T
+with a probe batch and P per worker; ``provision_by_placement`` times the
+lowered graph stages per placement group (core.planner does the ceil(T/P)).
+
+(On this 1-core container the absolute numbers are not TPU numbers — the
+*pipeline mechanics* are what is exercised; fleet-scale throughput uses the
+analytical model, exactly like the paper's §V-B methodology.)
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Iterable, Optional
 
 import jax
@@ -29,7 +42,7 @@ from repro.core.planner import (
     measure_throughput,
 )
 from repro.core.presto import PreStoEngine
-from repro.data.loader import PrefetchLoader
+from repro.core.service import JobSpec, PreprocessingService, Session
 from repro.data.storage import PartitionedStore
 
 
@@ -49,9 +62,9 @@ class PipelineStats:
 class TrainingPipeline:
     def __init__(
         self,
-        engine: PreStoEngine,
-        store: PartitionedStore,
-        train_step: Callable,  # (state, minibatch) -> (state, metrics)
+        engine: Optional[PreStoEngine] = None,
+        store: Optional[PartitionedStore] = None,
+        train_step: Optional[Callable] = None,  # (state, minibatch) -> (state, metrics)
         *,
         num_workers: int = 2,
         queue_depth: int = 4,
@@ -63,15 +76,11 @@ class TrainingPipeline:
         self.num_workers = num_workers
         self.queue_depth = queue_depth
         self.straggler_timeout = straggler_timeout
-        self._preprocess = engine.jit_preprocess()
 
     def _produce(self, pid: int):
         """One preprocessing worker's job: Extract + Transform one partition."""
-        pages = self.engine.stage_partition(self.store, pid)
-        pages = jax.tree.map(jax.numpy.asarray, pages)
-        mb = self._preprocess(pages)
-        jax.block_until_ready(mb)
-        return mb
+        assert self.engine is not None and self.store is not None
+        return self.engine.produce_batch(self.store, pid)
 
     def _measure_train_throughput(self, state, probe):
         """Paper step 2's T: stress the train step with one probe batch."""
@@ -103,7 +112,7 @@ class TrainingPipeline:
         different resources in hybrid placement."""
         pages = self.engine.stage_partition(self.store, partition_for_probe)
         pages = jax.tree.map(jax.numpy.asarray, pages)
-        probe = self._preprocess(pages)
+        probe = self.engine.jit_preprocess_cached()(pages)
         jax.block_until_ready(probe)
         t_meas, rows = self._measure_train_throughput(state, probe)
         plan = self.engine.lowered_plan
@@ -111,26 +120,27 @@ class TrainingPipeline:
         group_P = {g: rows / max(t, 1e-9) for g, t in groups.items()}
         return PlacementProvisioning.derive(t_meas.samples_per_s, group_P)
 
-    def run(
+    # -- the train-manager loop ------------------------------------------------
+
+    def run_session(
         self,
         state,
-        partition_ids: Iterable[int],
+        session: Session,
         *,
         max_steps: Optional[int] = None,
     ) -> tuple[object, PipelineStats, list]:
+        """Drain a Session into the train step (the Fig. 9 consumer loop).
+
+        Stops after ``max_steps`` (cancelling the rest of the job so its pool
+        units go back to other tenants) or when the session is exhausted.
+        """
+        assert self.train_step is not None, "run_session needs a train_step"
         stats = PipelineStats()
         metrics_log: list = []
-        loader = PrefetchLoader(
-            partition_ids,
-            self._produce,
-            num_workers=self.num_workers,
-            depth=self.queue_depth,
-            straggler_timeout=self.straggler_timeout,
-        ).start()
         wall0 = time.perf_counter()
         try:
             q0 = time.perf_counter()
-            for pid, mb in loader:
+            for pid, mb in session:
                 stats.starved_time_s += time.perf_counter() - q0
                 t0 = time.perf_counter()
                 state, metrics = self.train_step(state, mb)
@@ -142,7 +152,49 @@ class TrainingPipeline:
                     break
                 q0 = time.perf_counter()
         finally:
-            loader.stop()
+            if not session.done:
+                session.cancel()
         stats.wall_time_s = time.perf_counter() - wall0
-        stats.reissues = loader.work.reissues
+        stats.reissues = session.stats().reissues
         return state, stats, metrics_log
+
+    # -- deprecated single-job shim --------------------------------------------
+
+    def run(
+        self,
+        state,
+        partition_ids: Iterable[int],
+        *,
+        max_steps: Optional[int] = None,
+    ) -> tuple[object, PipelineStats, list]:
+        """Deprecated: private-pool single-job execution (identical behavior).
+
+        Spins up an ephemeral one-job PreprocessingService; prefer submitting
+        a JobSpec to a shared service and calling ``run_session``.
+        """
+        if self.engine is None or self.store is None:
+            raise ValueError(
+                "run() requires the deprecated TrainingPipeline(engine, store, "
+                "train_step) construction; submit a JobSpec to a "
+                "PreprocessingService and use run_session() instead"
+            )
+        warnings.warn(
+            "TrainingPipeline.run(partition_ids) with a private worker pool is "
+            "deprecated; submit a JobSpec to a PreprocessingService and use "
+            "run_session()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        with PreprocessingService(num_workers=self.num_workers) as service:
+            session = service.submit(
+                JobSpec(
+                    name="training-pipeline",
+                    partitions=list(partition_ids),
+                    engine=self.engine,
+                    store=self.store,
+                    units=self.num_workers,
+                    queue_depth=self.queue_depth,
+                    straggler_timeout=self.straggler_timeout,
+                )
+            )
+            return self.run_session(state, session, max_steps=max_steps)

@@ -11,6 +11,12 @@ group is provisioned independently from its own measured group throughput
 (``PlacementProvisioning``) — ISP units and CPU workers are separate
 resources, so ceil(T/P) applies per group.
 
+At the service level (``core.service``) many jobs share ONE provisioned
+pool: ``plan_pool`` performs admission control (every job is guaranteed one
+unit or is rejected) and splits the pool's units across jobs proportionally
+to their ceil(T/P) demands, re-planned whenever jobs join, leave, or
+re-estimate P.
+
 Also reproduces the paper's *CPU-baseline* provisioning (Fig. 4): cores
 required = T / per-core-throughput, using per-RM per-core throughputs derived
 from the paper's published breakdown.
@@ -63,6 +69,64 @@ class PlacementProvisioning:
     @property
     def total_units(self) -> int:
         return sum(self.group_units.values())
+
+
+class AdmissionError(RuntimeError):
+    """The shared pool cannot guarantee the 1-unit QoS floor for a new job."""
+
+
+@dataclasses.dataclass
+class PoolPlan:
+    """Unit allocation of one shared worker/ISP pool across admitted jobs.
+
+    ``demand_units`` is each job's ceil(T/P) requirement (or an explicit
+    hint); ``shares`` is what the pool actually grants: every admitted job is
+    guaranteed one unit (the admission floor), and surplus capacity is split
+    proportionally to residual demand, never exceeding a job's demand.
+    """
+
+    capacity: int
+    demand_units: Dict[str, int]
+    shares: Dict[str, int]
+
+    @property
+    def oversubscribed(self) -> bool:
+        """True when aggregate demand exceeds the pool — jobs run degraded."""
+        return sum(self.demand_units.values()) > self.capacity
+
+
+def plan_pool(capacity: int, demand_units: Dict[str, int]) -> PoolPlan:
+    """Admission control + per-job unit allocation for a shared pool.
+
+    Raises ``AdmissionError`` when the jobs cannot each be guaranteed one
+    unit.  Otherwise allocates: 1 unit per job, then the surplus by largest
+    remainder proportional to residual demand (capped at each job's demand —
+    leftover capacity beyond aggregate demand stays idle for future jobs).
+    """
+    if len(demand_units) > capacity:
+        raise AdmissionError(
+            f"pool of {capacity} unit(s) cannot guarantee 1 unit to each of "
+            f"{len(demand_units)} job(s)"
+        )
+    demands = {j: max(1, int(d)) for j, d in demand_units.items()}
+    shares = {j: 1 for j in demands}
+    residual = {j: d - 1 for j, d in demands.items()}
+    surplus = capacity - len(shares)
+    total_res = sum(residual.values())
+    alloc = min(surplus, total_res)
+    if alloc > 0:
+        quotas = {j: alloc * residual[j] / total_res for j in residual}
+        floors = {j: math.floor(q) for j, q in quotas.items()}
+        for j, f in floors.items():
+            shares[j] += f
+        leftover = alloc - sum(floors.values())
+        for j in sorted(residual, key=lambda j: quotas[j] - floors[j], reverse=True):
+            if leftover <= 0:
+                break
+            if shares[j] < demands[j]:
+                shares[j] += 1
+                leftover -= 1
+    return PoolPlan(capacity, dict(demand_units), shares)
 
 
 def measure_throughput(

@@ -31,6 +31,7 @@ program (`repro.train.step.make_train_step_with_ingest`), the end-to-end
 
 from __future__ import annotations
 
+import threading
 from typing import Dict, Optional
 
 import jax
@@ -116,6 +117,8 @@ class PreStoEngine:
         self.kernel_mode = kernel_mode
         self.interpret = interpret
         self._plan: Optional[LoweredPlan] = None
+        self._jit_cached = None
+        self._jit_lock = threading.Lock()
 
     @property
     def lowered_plan(self) -> LoweredPlan:
@@ -210,10 +213,36 @@ class PreStoEngine:
             self.preprocess_global, in_shardings=(in_sh,), out_shardings=out_sh
         )
 
+    def jit_preprocess_cached(self):
+        """The compiled preprocessing step, built once per engine.
+
+        Sessions, provisioning probes, and pool workers all reuse the same
+        compiled program, so a job's service-fed batches are bitwise
+        identical to its single-tenant batches.  Locked: concurrent first
+        use by pool workers must not build two jit wrappers (two compiles).
+        """
+        with self._jit_lock:
+            if self._jit_cached is None:
+                self._jit_cached = self.jit_preprocess()
+        return self._jit_cached
+
     # -- staging ----------------------------------------------------------------
     def stage_partition(self, store: PartitionedStore, pid: int) -> Dict[str, np.ndarray]:
         """Extract(Read): fetch + lay out one partition's pages (host side)."""
         return pages_from_partition(store.read(pid), self.spec)
+
+    def produce_batch(self, store: PartitionedStore, pid: int) -> MiniBatch:
+        """Extract + Transform one partition into a device-ready mini-batch.
+
+        The unit of work one preprocessing worker performs (pool-shared or
+        private); deterministic in (store, pid), which is what makes
+        straggler re-issue and duplicate-drop safe.
+        """
+        pages = self.stage_partition(store, pid)
+        pages = jax.tree.map(jnp.asarray, pages)
+        mb = self.jit_preprocess_cached()(pages)
+        jax.block_until_ready(mb)
+        return mb
 
     def pages_struct(self, rows: int) -> Dict[str, jax.ShapeDtypeStruct]:
         return pages_shape_dtypes(self.spec, rows)

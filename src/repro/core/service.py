@@ -1,0 +1,498 @@
+"""Preprocessing-as-a-service: a shared worker/ISP pool serving many jobs.
+
+The paper's deployment end-game — and the disaggregated-DPP model of Meta's
+production ingestion stack — is preprocessing as a *service*: one provisioned
+fleet of ISP units shared across training jobs, with per-job admission and
+unit allocation, instead of a private worker pool hand-wired into each
+trainer.  This module is that public surface:
+
+    service = PreprocessingService(num_workers=8)
+    session = service.submit(JobSpec(
+        name="rm1", spec=spec, store=store, partitions=range(64),
+        placement="presto", target_samples_per_s=50_000))
+    for pid, minibatch in session:          # backpressured stream
+        state, metrics = train_step(state, minibatch)
+
+* ``JobSpec`` — what a train manager hands the service at job launch: the
+  RecSys Transform (a ``TransformSpec`` or a prebuilt ``PreStoEngine``), the
+  partition range, placement mode, and QoS target (samples/s).
+* ``Session`` — a backpressured streaming iterator of mini-batch futures in
+  claim order (``futures()`` for the raw future stream; iterating resolves
+  them to ``(pid, minibatch)``), with ``stats()``, ``cancel()``, and
+  ``drain()``.
+* ``PreprocessingService`` — owns the one worker pool.  Admission control
+  and per-job unit shares come from ``core.planner.plan_pool`` (ceil(T/P)
+  demand per job, re-planned whenever jobs join, leave, or re-estimate their
+  per-worker throughput P); pool workers feed every session's
+  ``data.loader.SessionQueue``.  Shares are work-conserving: idle capacity
+  may serve any job beyond its share, but a job with work never gets less
+  than its share.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as FutureTimeoutError
+from queue import Empty
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple, Union
+
+from repro.core.planner import AdmissionError, PoolPlan, plan_pool
+from repro.core.presto import PreStoEngine
+from repro.core.spec import TransformSpec
+from repro.data.loader import SessionQueue
+from repro.data.storage import PartitionedStore
+
+__all__ = [
+    "AdmissionError",
+    "JobSpec",
+    "PreprocessingService",
+    "Session",
+    "SessionStats",
+]
+
+MAX_DEMAND_UNITS = 64  # sanity cap on a single job's ceil(T/P) estimate
+
+
+@dataclasses.dataclass
+class JobSpec:
+    """One training job's preprocessing contract with the service."""
+
+    name: str
+    partitions: Iterable[int]
+    spec: Optional[TransformSpec] = None
+    store: Optional[PartitionedStore] = None
+    placement: Union[str, Dict[str, str]] = "presto"
+    target_samples_per_s: Optional[float] = None  # QoS; None = best effort
+    units: Optional[int] = None  # explicit demand override (else T/P estimate)
+    queue_depth: int = 4
+    straggler_timeout: float = 30.0
+    engine: Optional[PreStoEngine] = None  # prebuilt (shares its jit cache)
+    produce_fn: Optional[Callable[[int], Any]] = None  # override / test hook
+
+    def build_produce(self) -> Tuple[Callable[[int], Any], Optional[PreStoEngine]]:
+        """Resolve the per-partition production callable for this job."""
+        if self.produce_fn is not None:
+            return self.produce_fn, self.engine
+        engine = self.engine
+        if engine is None:
+            if self.spec is None:
+                raise ValueError(
+                    f"JobSpec {self.name!r} needs a spec, an engine, or a produce_fn"
+                )
+            engine = PreStoEngine(self.spec, placement=self.placement)
+        if self.store is None:
+            raise ValueError(f"JobSpec {self.name!r} needs a store")
+        store = self.store
+        return (lambda pid: engine.produce_batch(store, pid)), engine
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Point-in-time accounting for one session (paper Fig. 3 metrics)."""
+
+    job: str
+    total: int
+    produced: int = 0  # winner completions by pool workers
+    delivered: int = 0  # batches handed to the consumer
+    reissues: int = 0  # straggler backup claims
+    duplicates_dropped: int = 0  # straggler losers discarded
+    rows_delivered: int = 0
+    produce_time_s: float = 0.0  # pool-worker seconds spent on this job
+    wait_time_s: float = 0.0  # consumer seconds blocked on the stream
+    wall_time_s: float = 0.0
+    demand_units: int = 1
+    share: int = 0
+    target_samples_per_s: Optional[float] = None
+    worker_samples_per_s: float = 0.0  # measured per-worker P
+    cancelled: bool = False
+    done: bool = False
+
+    @property
+    def achieved_samples_per_s(self) -> float:
+        return self.rows_delivered / max(self.wall_time_s, 1e-9)
+
+    @property
+    def starvation(self) -> float:
+        """Fraction of the session's wall time the consumer spent blocked."""
+        return self.wait_time_s / max(self.wall_time_s, 1e-9)
+
+
+def _batch_rows(batch: Any) -> int:
+    try:
+        return int(batch["labels"].shape[0])
+    except Exception:
+        return 0
+
+
+class Session:
+    """One job's handle on the service: a backpressured mini-batch stream.
+
+    Single-consumer: iterate the session (or its ``futures()``) from one
+    thread.  Iteration yields ``(pid, minibatch)`` in claim order, ends after
+    every partition is delivered, and re-raises a worker's production error.
+    """
+
+    def __init__(self, service: "PreprocessingService", job: JobSpec):
+        self._service = service
+        self.job = job
+        self.name = job.name
+        self._produce_fn, self.engine = job.build_produce()
+        self._queue = SessionQueue(
+            job.partitions,
+            depth=job.queue_depth,
+            straggler_timeout=job.straggler_timeout,
+        )
+        self.total = self._queue.total
+        # guarded by service._lock:
+        self.share = 0
+        self._active_workers = 0
+        self._demand = max(1, job.units or 1)
+        # guarded by self._slock:
+        self._slock = threading.Lock()
+        self._produced = 0
+        self._handed = 0  # futures taken off the delivery queue (any stream)
+        self._delivered = 0
+        self._duplicates = 0
+        self._rows_delivered = 0
+        self._produce_time = 0.0
+        self._wait_time = 0.0
+        self._p_est: Optional[float] = None
+        self._t0 = time.perf_counter()
+        self._t_end: Optional[float] = None
+
+    # -- consumer side ---------------------------------------------------------
+
+    @property
+    def cancelled(self) -> bool:
+        return self._queue.cancelled.is_set()
+
+    @property
+    def done(self) -> bool:
+        """Every partition delivered to the consumer."""
+        with self._slock:
+            return self._delivered >= self.total
+
+    def _next_future(self) -> Optional[Future]:
+        """Take the next undelivered future off the stream (None = stream end).
+
+        The hand-off count is session state, not per-iterator, so a partially
+        consumed session can be re-iterated (or ``drain()``-ed) and resumes
+        where the previous loop stopped.
+        """
+        while not self.cancelled:
+            with self._slock:
+                if self._handed >= self.total:
+                    return None
+            try:
+                fut = self._queue.out.get(timeout=0.25)
+            except Empty:
+                self._check_liveness()
+                continue
+            with self._slock:
+                self._handed += 1
+            return fut
+        return None
+
+    def futures(self) -> Iterator[Future]:
+        """The raw stream: mini-batch futures in claim order.
+
+        Taking a future transfers ownership: it counts as delivered for
+        backpressure, so pacing beyond ``queue_depth`` outstanding claims is
+        the raw consumer's responsibility.  Delivery stats (and ``done``)
+        are recorded when each future resolves.  Shares the delivery queue
+        with plain iteration — use one stream or the other.
+        """
+        while True:
+            fut = self._next_future()
+            if fut is None:
+                return
+            self._queue.mark_delivered()
+            self._service._wake()
+            fut.add_done_callback(self._account_delivery)
+            yield fut
+
+    def _account_delivery(self, fut: Future) -> None:
+        """Delivery accounting for the raw-future stream (on resolution)."""
+        if fut.cancelled() or fut.exception() is not None:
+            return
+        _pid, batch = fut.result()
+        with self._slock:
+            self._delivered += 1
+            self._rows_delivered += _batch_rows(batch)
+            if self._delivered >= self.total:
+                self._t_end = time.perf_counter()
+
+    def __iter__(self) -> Iterator[Tuple[int, Any]]:
+        while True:
+            t0 = time.perf_counter()
+            fut = self._next_future()
+            if fut is None:
+                return
+            while True:
+                if self.cancelled:
+                    return
+                try:
+                    pid, batch = fut.result(timeout=0.25)
+                    break
+                except FutureTimeoutError:
+                    self._check_liveness()
+            # pacing signal only once the batch is resolved and in the
+            # consumer's hands: at most queue_depth batches sit materialized
+            self._queue.mark_delivered()
+            self._service._wake()
+            with self._slock:
+                self._wait_time += time.perf_counter() - t0
+                self._delivered += 1
+                self._rows_delivered += _batch_rows(batch)
+                if self._delivered >= self.total:
+                    self._t_end = time.perf_counter()
+            yield pid, batch
+
+    def drain(self) -> int:
+        """Consume and discard the rest of the stream; returns batches eaten.
+
+        After ``cancel()`` this returns immediately; otherwise it blocks
+        until the job's remaining partitions are produced (an end-of-job
+        barrier that keeps pool accounting exact)."""
+        n = 0
+        for _ in self:
+            n += 1
+        return n
+
+    def cancel(self) -> None:
+        """Stop the stream: pool workers stop claiming for this session,
+        undelivered results are discarded, and the pool is rebalanced."""
+        if self.cancelled:
+            return
+        self._queue.cancel()
+        with self._slock:
+            if self._t_end is None:
+                self._t_end = time.perf_counter()
+        self._service._retire(self)
+
+    def stats(self) -> SessionStats:
+        with self._slock:
+            wall = (self._t_end or time.perf_counter()) - self._t0
+            return SessionStats(
+                job=self.name,
+                total=self.total,
+                produced=self._produced,
+                delivered=self._delivered,
+                reissues=self._queue.work.reissues,
+                duplicates_dropped=self._duplicates,
+                rows_delivered=self._rows_delivered,
+                produce_time_s=self._produce_time,
+                wait_time_s=self._wait_time,
+                wall_time_s=wall,
+                demand_units=self._demand,
+                share=self.share,
+                target_samples_per_s=self.job.target_samples_per_s,
+                worker_samples_per_s=self._p_est or 0.0,
+                cancelled=self.cancelled,
+                done=self._delivered >= self.total,
+            )
+
+    def _check_liveness(self) -> None:
+        if self._service.closed:
+            with self._slock:
+                undelivered = self.total - self._delivered
+            raise RuntimeError(
+                f"preprocessing service closed with {undelivered} batches "
+                f"undelivered for job {self.name!r}"
+            )
+
+    # -- pool-worker side ------------------------------------------------------
+
+    def _on_produced(self, pid: int, batch: Any, dt: float) -> None:
+        winner = self._queue.complete(pid, batch)
+        rows = _batch_rows(batch)
+        demand_changed = False
+        with self._slock:
+            self._produce_time += dt
+            if not winner:
+                self._duplicates += 1
+            else:
+                self._produced += 1
+                if rows and dt > 0:
+                    p = rows / dt
+                    self._p_est = p if self._p_est is None else 0.5 * self._p_est + 0.5 * p
+        if winner and self.job.target_samples_per_s and self._p_est:
+            # QoS re-estimate: demand = ceil(target / measured per-worker P)
+            new_demand = max(
+                1,
+                min(
+                    MAX_DEMAND_UNITS,
+                    math.ceil(self.job.target_samples_per_s / self._p_est),
+                ),
+            )
+            with self._service._lock:
+                if new_demand != self._demand:
+                    self._demand = new_demand
+                    demand_changed = True
+        if demand_changed:
+            self._service._rebalance()
+
+    def _on_produce_error(self, pid: int, exc: BaseException) -> None:
+        self._queue.complete_error(pid, exc)  # duplicate losers are dropped
+
+
+class PreprocessingService:
+    """The shared preprocessing pool: submit jobs, stream their batches.
+
+    One fixed pool of ``num_workers`` worker threads (the provisioned
+    ISP-unit fleet) serves every admitted session.  The scheduler is a
+    two-pass round-robin: pass 1 respects each session's allocated share
+    (QoS isolation), pass 2 is work-conserving (idle units serve any
+    claimable session).  Backpressure is per-session (``SessionQueue``), so
+    one slow consumer never idles the pool.
+    """
+
+    def __init__(self, num_workers: int = 2, *, start: bool = True):
+        assert num_workers >= 1, "pool needs at least one worker"
+        self.num_workers = num_workers
+        self._sessions: List[Session] = []
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._wake_cv = threading.Condition()
+        self._rr = 0
+        self.plan: Optional[PoolPlan] = None
+        self._threads = [
+            threading.Thread(target=self._worker_loop, daemon=True, name=f"presto-pool-{i}")
+            for i in range(num_workers)
+        ]
+        self._started = False
+        if start:
+            self.start()
+
+    def start(self) -> "PreprocessingService":
+        if not self._started:
+            self._started = True
+            for t in self._threads:
+                t.start()
+        return self
+
+    @property
+    def closed(self) -> bool:
+        return self._stop.is_set()
+
+    def __enter__(self) -> "PreprocessingService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _wake(self) -> None:
+        """Nudge idle pool workers (new work, freed slot, or pacing signal)."""
+        with self._wake_cv:
+            self._wake_cv.notify_all()
+
+    def close(self) -> None:
+        """Stop the pool.  Sessions still streaming see a RuntimeError."""
+        self._stop.set()
+        self._wake()
+        me = threading.current_thread()
+        for t in self._threads:
+            if t.is_alive() and t is not me:
+                t.join(timeout=5.0)
+
+    # -- job lifecycle ---------------------------------------------------------
+
+    def submit(self, job: JobSpec) -> Session:
+        """Admit a job and return its Session (raises AdmissionError)."""
+        if self.closed:
+            raise RuntimeError("preprocessing service is closed")
+        with self._lock:
+            if any(s.name == job.name for s in self._sessions):
+                raise ValueError(f"job name {job.name!r} already active")
+            demands = {s.name: s._demand for s in self._sessions}
+            demands[job.name] = max(1, job.units or 1)
+            plan = plan_pool(self.num_workers, demands)  # admission control
+            session = Session(self, job)
+            self._sessions.append(session)
+            self._apply(plan)
+        self._wake()
+        return session
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "workers": self.num_workers,
+                "active_jobs": [s.name for s in self._sessions],
+                "shares": dict(self.plan.shares) if self.plan else {},
+                "oversubscribed": bool(self.plan and self.plan.oversubscribed),
+            }
+
+    def _apply(self, plan: PoolPlan) -> None:
+        self.plan = plan
+        for s in self._sessions:
+            s.share = plan.shares.get(s.name, 0)
+
+    def _rebalance(self) -> None:
+        with self._lock:
+            demands = {s.name: s._demand for s in self._sessions}
+            self._apply(plan_pool(self.num_workers, demands))
+
+    def _retire(self, session: Session) -> None:
+        """Drop a finished/cancelled session from scheduling and rebalance."""
+        with self._lock:
+            if session in self._sessions:
+                self._sessions.remove(session)
+                self._rebalance()
+        self._wake()  # freed units may unblock other tenants' pass-1 claims
+
+    # -- the pool --------------------------------------------------------------
+
+    def _next_task(self) -> Optional[Tuple[Session, Tuple[int, Future]]]:
+        with self._lock:
+            n = len(self._sessions)
+            for enforce_share in (True, False):
+                for i in range(n):
+                    sess = self._sessions[(self._rr + i) % n]
+                    if sess.cancelled:
+                        continue
+                    if enforce_share and sess._active_workers >= max(sess.share, 1):
+                        continue
+                    claimed = sess._queue.claim()
+                    if claimed is None:
+                        continue
+                    sess._active_workers += 1
+                    self._rr = (self._rr + i + 1) % n
+                    return sess, claimed
+            return None
+
+    def _prune(self) -> None:
+        with self._lock:
+            finished = [
+                s for s in self._sessions if s.cancelled or s._queue.exhausted
+            ]
+        for s in finished:
+            self._retire(s)
+
+    def _worker_loop(self) -> None:
+        while not self._stop.is_set():
+            task = self._next_task()
+            if task is None:
+                self._prune()
+                # idle: sleep until nudged (submit / freed slot / pacing
+                # signal); the timeout keeps straggler-timeout scans alive
+                with self._wake_cv:
+                    self._wake_cv.wait(timeout=0.05)
+                continue
+            sess, (pid, _fut) = task
+            t0 = time.perf_counter()
+            try:
+                batch = sess._produce_fn(pid)
+            except BaseException as exc:  # noqa: BLE001 — consumer re-raises
+                sess._on_produce_error(pid, exc)
+            else:
+                sess._on_produced(pid, batch, time.perf_counter() - t0)
+            finally:
+                with self._lock:
+                    sess._active_workers -= 1
+                if sess._queue.exhausted:
+                    self._retire(sess)
+                self._wake()  # a share slot freed (or the job just finished)

@@ -17,7 +17,7 @@ from repro.data.columnar import (
 )
 from repro.data.synth import RawBatch, SyntheticRecSysSource, make_rm_source
 from repro.data.storage import PartitionedStore
-from repro.data.loader import PrefetchLoader, WorkQueue
+from repro.data.loader import PrefetchLoader, SessionQueue, WorkQueue
 from repro.data.tokens import TokenSynthesizer, lm_input_batch
 
 __all__ = [
@@ -28,6 +28,7 @@ __all__ = [
     "PartitionedStore",
     "PrefetchLoader",
     "RawBatch",
+    "SessionQueue",
     "SyntheticRecSysSource",
     "TokenSynthesizer",
     "WorkQueue",

@@ -1,4 +1,4 @@
-"""Host-side async loader: prefetch queue + work stealing + straggler re-issue.
+"""Host-side async loading: work queue + straggler re-issue + per-session queues.
 
 The producer-consumer model of the paper's software architecture (Fig. 9):
 preprocessing workers fill an input queue that the train manager drains.  At
@@ -7,21 +7,36 @@ the work queue supports *speculative re-issue*: if a claimed partition has
 not completed within `straggler_timeout`, another worker may claim a backup
 copy; first completion wins, duplicates are dropped (partitions are
 deterministic, so duplicate results are identical — re-issue is always safe).
+
+Two delivery mechanisms sit on top of ``WorkQueue``:
+
+* ``PrefetchLoader``  — the single-tenant convenience: private threads owned
+  by one consumer, delivering batches in completion order.
+* ``SessionQueue``    — the multi-tenant generalization used by
+  ``core.service.PreprocessingService``: production is done by EXTERNAL pool
+  workers shared across sessions; delivery is a stream of futures in claim
+  order, and fresh claims are refused while ``depth`` futures are undelivered
+  (backpressure) — straggler re-issues stay allowed so liveness never depends
+  on a slow consumer.
 """
 
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, Iterable, List, Optional
+from concurrent.futures import Future
+from typing import Any, Callable, Deque, Dict, Iterable, Optional, Tuple
 
 
 class WorkQueue:
     """Partition work queue with straggler re-issue (backup tasks)."""
 
     def __init__(self, partition_ids: Iterable[int], straggler_timeout: float = 30.0):
-        self._pending: List[int] = list(partition_ids)
+        # dedup, order-preserving: a repeated pid would complete once and then
+        # be dropped as a straggler duplicate, stranding its consumer forever
+        self._pending: Deque[int] = collections.deque(dict.fromkeys(partition_ids))
         self._inflight: Dict[int, float] = {}  # pid -> claim time
         self._done: set[int] = set()
         self._lock = threading.Lock()
@@ -34,10 +49,16 @@ class WorkQueue:
         with self._lock:
             return len(self._pending) + len(self._inflight)
 
-    def claim(self) -> Optional[int]:
+    def claim(self, *, reissue_only: bool = False) -> Optional[int]:
+        """Claim a partition; FIFO over pending, then straggler re-issue.
+
+        ``reissue_only=True`` skips fresh claims (used by backpressured
+        sessions: no new work may start, but an overdue straggler may still
+        be backed up so the stream's head future always resolves).
+        """
         with self._lock:
-            if self._pending:
-                pid = self._pending.pop(0)
+            if self._pending and not reissue_only:
+                pid = self._pending.popleft()
                 self._inflight[pid] = time.monotonic()
                 return pid
             # steal: re-issue the longest-overdue inflight partition
@@ -68,6 +89,87 @@ class WorkQueue:
     def exhausted(self) -> bool:
         with self._lock:
             return not self._pending and not self._inflight
+
+
+class SessionQueue:
+    """Per-session queues for a shared preprocessing pool.
+
+    The claim/complete bookkeeping (straggler re-issue, duplicate drop) stays
+    in ``WorkQueue``; production is done by external pool workers.  The first
+    claim of a partition enqueues a ``Future`` on ``out`` (so delivery is in
+    claim order); re-issued claims reuse the existing future and the first
+    ``complete`` wins.  Backpressure: ``claim`` refuses fresh work while
+    ``depth`` claims are undelivered (``mark_delivered`` is the consumer's
+    pacing signal), so at most ``depth`` produced batches are ever held in
+    service-side structures.
+    """
+
+    def __init__(
+        self,
+        partition_ids: Iterable[int],
+        *,
+        depth: int = 4,
+        straggler_timeout: float = 30.0,
+    ):
+        self.work = WorkQueue(partition_ids, straggler_timeout)
+        self.depth = depth
+        self.out: "queue.Queue[Future]" = queue.Queue()
+        self._futures: Dict[int, Future] = {}  # claimed, not yet completed
+        self._lock = threading.Lock()
+        self.cancelled = threading.Event()
+        self.total = self.work.total
+        self._created = 0
+        self._delivered = 0
+
+    def claim(self) -> Optional[Tuple[int, Future]]:
+        """Pool-worker side: claim (pid, future), or None if nothing to do."""
+        with self._lock:
+            if self.cancelled.is_set():
+                return None
+            backpressured = self._created - self._delivered >= self.depth
+            pid = self.work.claim(reissue_only=backpressured)
+            if pid is None:
+                return None
+            fut = self._futures.get(pid)
+            if fut is None:
+                fut = Future()
+                fut.set_running_or_notify_cancel()
+                self._futures[pid] = fut
+                self._created += 1
+                self.out.put(fut)
+            return pid, fut
+
+    def mark_delivered(self) -> None:
+        """Consumer pacing signal: one claimed batch has left the stream."""
+        with self._lock:
+            self._delivered += 1
+
+    def complete(self, pid: int, batch: Any) -> bool:
+        """First completion wins and resolves the future; duplicates dropped."""
+        if not self.work.complete(pid):
+            return False
+        with self._lock:
+            # drop our reference: once delivered, the batch's lifetime is the
+            # consumer's (memory stays bounded by depth, not job size)
+            fut = self._futures.pop(pid)
+        fut.set_result((pid, batch))
+        return True
+
+    def complete_error(self, pid: int, exc: BaseException) -> bool:
+        """Propagate a producer failure to the consumer (winner-only)."""
+        if not self.work.complete(pid):
+            return False
+        with self._lock:
+            fut = self._futures.pop(pid)
+        fut.set_exception(exc)
+        return True
+
+    @property
+    def exhausted(self) -> bool:
+        return self.work.exhausted
+
+    def cancel(self) -> None:
+        self.cancelled.set()
 
 
 class PrefetchLoader:
@@ -113,7 +215,14 @@ class PrefetchLoader:
                 continue
             batch = self.produce_fn(pid)
             if self.work.complete(pid):  # drop duplicate straggler results
-                self.out.put((pid, batch))
+                # Timed put: a plain blocking put() would ignore stop()
+                # forever when the consumer goes away with the queue full.
+                while not self._stop.is_set():
+                    try:
+                        self.out.put((pid, batch), timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
 
     def __iter__(self):
         if not self._started:
@@ -143,3 +252,7 @@ class PrefetchLoader:
 
     def stop(self) -> None:
         self._stop.set()
+        me = threading.current_thread()
+        for t in self._threads:
+            if t.is_alive() and t is not me:
+                t.join(timeout=5.0)

@@ -27,6 +27,7 @@ def train_recsys(args) -> dict:
     from repro.configs.registry import get_recsys
     from repro.core.pipeline import TrainingPipeline
     from repro.core.presto import PreStoEngine
+    from repro.core.service import JobSpec, PreprocessingService
     from repro.core.spec import TransformSpec
     from repro.data.storage import PartitionedStore
     from repro.data.synth import SyntheticRecSysSource
@@ -51,12 +52,15 @@ def train_recsys(args) -> dict:
              "step": jnp.zeros((), jnp.int32)}
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    pipeline = TrainingPipeline(engine, store, step,
-                                num_workers=args.workers)
+    pipeline = TrainingPipeline(train_step=step)
     t0 = time.time()
-    state, stats, metrics = pipeline.run(
-        state, range(args.partitions), max_steps=args.steps
-    )
+    with PreprocessingService(num_workers=args.workers) as service:
+        session = service.submit(JobSpec(
+            name=f"{rcfg.name}-{args.placement}", engine=engine, store=store,
+            partitions=range(args.partitions), units=args.workers))
+        state, stats, metrics = pipeline.run_session(
+            state, session, max_steps=args.steps
+        )
     wall = time.time() - t0
     if ckpt:
         ckpt.save(int(state["step"]), state)

@@ -72,6 +72,35 @@ def test_prefetch_loader_delivers_all():
     assert sorted(seen) == list(range(10))
 
 
+def test_work_queue_fifo_claim_order():
+    """Deque-backed pending preserves the original pop(0) FIFO semantics."""
+    q = WorkQueue(range(5))
+    assert [q.claim() for _ in range(5)] == list(range(5))
+    assert q.claim() is None  # nothing overdue -> nothing to steal
+    assert q.reissues == 0
+
+
+def test_work_queue_reissue_only_skips_pending():
+    q = WorkQueue([0, 1], straggler_timeout=0.0)
+    assert q.claim(reissue_only=True) is None  # pending work is not fresh-claimable
+    a = q.claim()
+    time.sleep(0.01)
+    assert q.claim(reissue_only=True) == a  # overdue straggler backup allowed
+    assert q.reissues == 1
+
+
+def test_prefetch_loader_stop_reaps_blocked_workers():
+    """A worker blocked on a full output queue must honor stop(): the old
+    blocking put() deadlocked shutdown when the consumer went away."""
+    loader = PrefetchLoader(range(8), lambda pid: pid, num_workers=2, depth=1)
+    loader.start()
+    time.sleep(0.2)  # queue (depth 1) fills; workers block in the put loop
+    t0 = time.time()
+    loader.stop()  # joins: must return promptly with every thread dead
+    assert time.time() - t0 < 2.0
+    assert not any(t.is_alive() for t in loader._threads)
+
+
 def test_work_queue_remaining_public():
     q = WorkQueue([0, 1, 2])
     assert q.total == 3 and q.remaining() == 3
