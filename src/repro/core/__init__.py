@@ -11,6 +11,12 @@ from repro.core.costmodel import (
     energy_efficiency,
     tco_usd,
 )
+from repro.core.featcache import (
+    CacheKey,
+    CacheStats,
+    FeatureCache,
+    default_spill_store,
+)
 from repro.core.opgraph import (
     FAMILIES,
     OpGraph,
@@ -46,9 +52,12 @@ from repro.core.spec import TransformSpec
 
 __all__ = [
     "AdmissionError",
+    "CacheKey",
+    "CacheStats",
     "Comparison",
     "DeviceModel",
     "FAMILIES",
+    "FeatureCache",
     "JobSpec",
     "OpGraph",
     "PipelineStats",
@@ -65,6 +74,7 @@ __all__ = [
     "build_transform_graph",
     "choose_placement",
     "cost_efficiency",
+    "default_spill_store",
     "energy_efficiency",
     "lower",
     "lower_transform",

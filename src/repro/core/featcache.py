@@ -1,0 +1,285 @@
+"""Content-addressed cache of preprocessed (train-ready) mini-batches.
+
+Production RecSys training re-preprocesses the *same* samples across jobs
+constantly (RecD; Meta's ingestion characterization) — so once PreSto runs as
+a multi-tenant service over one shared ISP pool, the highest-leverage saving
+left is to not recompute a mini-batch any tenant already produced.  This
+module is that saving:
+
+* ``CacheKey`` — content addressing.  A batch is identified by what went in
+  and what was done to it: the *partition fingerprint*
+  (``data.storage.PartitionedStore.partition_fingerprint`` — equal encoded
+  bytes ⇒ equal fingerprint, across store objects and tenants), the
+  *lowered-opgraph hash* (``core.opgraph.LoweredPlan.structural_hash`` —
+  stable across re-lowering), and the *placement* signature.  Because
+  preprocessing is deterministic in the key, a hit is bitwise identical to a
+  cold compute, which preserves the service's bitwise-identity guarantee
+  (``tests/test_service.py``).
+
+* ``FeatureCache`` — two tiers.  A bounded-memory LRU tier holds hot batches;
+  on eviction a batch spills (optionally) to
+  ``data.storage.CacheSpillStore``, which parks blocks on the simulated
+  storage devices and charges every byte moved to the same cost model as ISP
+  placement (``isp_stream_bytes_per_s``).  A spill hit is promoted back into
+  the LRU tier.  Misses fall through to recompute.
+
+* In-flight dedup.  Concurrent tenants racing to the same cold key would
+  both miss and both produce; ``begin``/``fulfill`` close that window — the
+  first prober becomes the *leader* (it produces), later probers *follow*
+  (their claims resolve from the leader's in-flight future, no produce).
+
+Wiring (see ``core.service``): the shared ``PreprocessingService`` owns ONE
+``FeatureCache``; each session probes it at claim time
+(``data.loader.SessionQueue`` short-circuits cached claims so pool workers
+never spend a produce on a hit), winners populate it, and
+``core.planner.plan_pool`` discounts a job's ceil(T/P) demand by its observed
+hit rate so units freed by hits rebalance to cold jobs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from concurrent.futures import Future
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.data.storage import CacheSpillStore
+
+__all__ = ["CacheKey", "CacheStats", "FeatureCache", "default_spill_store"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    """Content address of one preprocessed mini-batch."""
+
+    partition_fp: str  # PartitionedStore.partition_fingerprint(pid)
+    plan_hash: str  # LoweredPlan.structural_hash() of the lowered Transform
+    placement: str  # engine placement signature (comm placement included)
+
+    def block_id(self) -> str:
+        """Flat id used by the spill tier's per-device block files."""
+        return f"{self.partition_fp}-{self.plan_hash}-{self.placement}"
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Point-in-time accounting for one FeatureCache."""
+
+    hits: int = 0  # total hits (memory tier + spill tier)
+    spill_hits: int = 0  # hits served by the spill tier (subset of hits)
+    follows: int = 0  # probes that joined a leader's in-flight produce
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0  # LRU-tier evictions (spilled or dropped)
+    entries: int = 0  # LRU-tier entries right now
+    resident_bytes: int = 0  # LRU-tier bytes right now
+    spilled_entries: int = 0
+    spilled_bytes: int = 0
+    bytes_served: int = 0  # batch bytes returned by hits
+    spill_io_s: float = 0.0  # modeled seconds of spill-tier byte movement
+
+    @property
+    def probes(self) -> int:
+        return self.hits + self.follows + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of probes that needed no produce (hits + follows)."""
+        return (self.hits + self.follows) / self.probes if self.probes else 0.0
+
+
+def default_spill_store(
+    num_devices: int = 4,
+    *,
+    capacity_bytes: Optional[int] = None,
+    root: Optional[str] = None,
+    model=None,
+) -> CacheSpillStore:
+    """A spill tier charged at the ISP placement cost model's stream rate —
+    cache residency moves bytes on the same simulated devices, priced the
+    same way as the ISP units' own SSD->FPGA streams."""
+    from repro.core.costmodel import DEFAULT_PLACEMENT_MODEL  # lazy: no cycle
+
+    model = model or DEFAULT_PLACEMENT_MODEL
+    return CacheSpillStore(
+        num_devices,
+        capacity_bytes=capacity_bytes,
+        bytes_per_s=model.isp_stream_bytes_per_s,
+        root=root,
+    )
+
+
+def batch_nbytes(batch: Any) -> int:
+    """Size in bytes of one train-ready mini-batch (dict of arrays)."""
+    try:
+        return sum(int(np.asarray(v).nbytes) for v in batch.values())
+    except Exception:
+        return 0
+
+
+class FeatureCache:
+    """Bounded-memory LRU of train-ready batches, with an optional spill tier.
+
+    Thread-safe; shared by every session of a ``PreprocessingService``.
+    Sessions use ``begin``/``fulfill``/``abandon`` (claim-time probe with
+    in-flight dedup); ``get``/``put``/``peek`` are the tier primitives.  The
+    batch object is stored as produced (and spilled/restored as numpy), so a
+    hit returns values bitwise identical to the cold compute that populated
+    it.
+    """
+
+    def __init__(
+        self,
+        capacity_bytes: int = 256 << 20,
+        *,
+        spill: Optional[CacheSpillStore] = None,
+    ):
+        assert capacity_bytes > 0
+        self.capacity_bytes = capacity_bytes
+        self.spill = spill
+        self._lru: "OrderedDict[CacheKey, Tuple[Any, int]]" = OrderedDict()
+        self._resident = 0
+        self._inflight: Dict[CacheKey, Future] = {}  # leader produces
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._spill_hits = 0
+        self._follows = 0
+        self._misses = 0
+        self._insertions = 0
+        self._evictions = 0
+        self._bytes_served = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._lru)
+
+    def peek(self, key: CacheKey) -> Optional[Any]:
+        """Probe both tiers, counting a hit but never a miss (used by
+        straggler re-issues, which must fall through to a real produce
+        rather than follow the possibly-stuck in-flight leader)."""
+        with self._lock:
+            entry = self._lru.get(key)
+            if entry is not None:
+                self._lru.move_to_end(key)
+                self._hits += 1
+                self._bytes_served += entry[1]
+                # shallow copy: consumers may mutate their batch dict; the
+                # array buffers are shared (jax arrays are immutable)
+                return dict(entry[0])
+        if self.spill is not None:
+            block = self.spill.read(key.block_id())
+            if block is not None:
+                with self._lock:
+                    self._hits += 1
+                    self._spill_hits += 1
+                    self._bytes_served += batch_nbytes(block)
+                self.put(key, block)  # promote (insertion counted as such)
+                return block
+        return None
+
+    def get(self, key: CacheKey) -> Optional[Any]:
+        """The batch for `key`, or None.  Hits refresh LRU recency; spill
+        hits are promoted back into the memory tier."""
+        batch = self.peek(key)
+        if batch is None:
+            with self._lock:
+                self._misses += 1
+        return batch
+
+    def begin(self, key: CacheKey) -> Tuple[str, Any]:
+        """Claim-time probe with in-flight dedup.  Returns one of
+
+        * ``("hit", batch)``     — cached; use the batch, no produce.
+        * ``("follow", future)`` — another tenant is producing this exact
+          batch right now; resolve from its future, no produce.
+        * ``("produce", None)``  — the caller is the leader: produce, then
+          ``fulfill`` (or ``abandon`` on error) so followers resolve.
+        """
+        batch = self.peek(key)
+        if batch is not None:
+            return "hit", batch
+        with self._lock:
+            fut = self._inflight.get(key)
+            if fut is not None:
+                self._follows += 1
+                return "follow", fut
+            self._inflight[key] = Future()
+            self._misses += 1
+            return "produce", None
+
+    def fulfill(self, key: CacheKey, batch: Any) -> None:
+        """A produce of `key` completed: insert and resolve any followers."""
+        self.put(key, batch)
+        with self._lock:
+            fut = self._inflight.pop(key, None)
+        if fut is not None:
+            fut.set_result(batch)
+
+    def abandon(self, key: CacheKey, exc: Optional[BaseException] = None) -> None:
+        """The leader's produce failed (or was dropped): unblock followers.
+
+        With `exc`, followers see the error (preprocessing is deterministic
+        in the key, so their own produce would fail identically); without,
+        the future is cancelled and followers' straggler machinery re-issues
+        a real produce."""
+        with self._lock:
+            fut = self._inflight.pop(key, None)
+        if fut is None:
+            return
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.cancel()
+
+    def put(self, key: CacheKey, batch: Any) -> None:
+        """Insert (idempotent — concurrent winners of the same key collapse
+        to one entry), evicting LRU entries past the memory bound."""
+        nbytes = batch_nbytes(batch)
+        if nbytes <= 0 or nbytes > self.capacity_bytes:
+            return  # unsized or oversized batches are not cacheable
+        batch = dict(batch)  # detach from the producer's mutable dict
+        evicted = []
+        with self._lock:
+            old = self._lru.pop(key, None)
+            if old is not None:
+                self._resident -= old[1]
+            self._lru[key] = (batch, nbytes)
+            self._resident += nbytes
+            self._insertions += 1
+            while self._resident > self.capacity_bytes and len(self._lru) > 1:
+                old_key, (old_batch, old_bytes) = self._lru.popitem(last=False)
+                self._resident -= old_bytes
+                self._evictions += 1
+                evicted.append((old_key, old_batch))
+        if self.spill is not None:
+            for old_key, old_batch in evicted:
+                block_id = old_key.block_id()
+                if block_id in self.spill:
+                    continue  # content-addressed: the spilled copy (kept on
+                    # promote) is already byte-identical — skip the rewrite
+                self.spill.write(
+                    block_id,
+                    {k: np.asarray(v) for k, v in old_batch.items()},
+                )
+
+    def stats(self) -> CacheStats:
+        with self._lock:
+            stats = CacheStats(
+                hits=self._hits,
+                spill_hits=self._spill_hits,
+                follows=self._follows,
+                misses=self._misses,
+                insertions=self._insertions,
+                evictions=self._evictions,
+                entries=len(self._lru),
+                resident_bytes=self._resident,
+                bytes_served=self._bytes_served,
+            )
+        if self.spill is not None:
+            stats.spilled_entries = len(self.spill)
+            stats.spilled_bytes = self.spill.resident_bytes
+            stats.spill_io_s = self.spill.modeled_io_s
+        return stats

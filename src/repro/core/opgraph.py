@@ -35,6 +35,8 @@ bytes of the families it actually sends to hosts.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import time
 from typing import Any, Callable, Dict, List, Tuple
 
@@ -294,12 +296,54 @@ class Stage:
     node_names: Tuple[str, ...]
 
 
+def _spec_digest(spec: TransformSpec) -> str:
+    """Content digest of everything the Transform's output depends on."""
+    h = hashlib.sha256()
+    h.update(
+        json.dumps(dataclasses.asdict(spec.cfg), sort_keys=True, default=str).encode()
+    )
+    h.update(json.dumps([int(i) for i in spec.generated_source]).encode())
+    for arr in (
+        spec.bucket_boundaries,
+        spec.sparse_seeds,
+        spec.sparse_max,
+        spec.gen_seeds,
+        spec.gen_max,
+    ):
+        a = np.ascontiguousarray(np.asarray(arr))
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
 @dataclasses.dataclass
 class LoweredPlan:
     spec: TransformSpec
     placements: Dict[str, str]
     stages: List[Stage]
     graph: OpGraph
+
+    def structural_hash(self) -> str:
+        """Stable content hash of the lowered graph (survives re-lowering).
+
+        Covers the spec's transform parameters (boundaries, seeds, table
+        sizes, geometry), the per-family placements, and the lowered stage
+        structure (names, kinds, wiring) — but NOT the bound Python callables,
+        so two independent lowerings of the same spec+placement hash alike.
+        This is the ``lowered-opgraph hash`` component of a feature-cache key
+        (``core.featcache.CacheKey``)."""
+        h = hashlib.sha256()
+        h.update(_spec_digest(self.spec).encode())
+        h.update(json.dumps(sorted(self.placements.items())).encode())
+        for st in self.stages:
+            h.update(
+                json.dumps(
+                    [st.name, st.kind, st.family, st.placement,
+                     list(st.inputs), list(st.outputs), list(st.node_names)]
+                ).encode()
+            )
+        return h.hexdigest()[:16]
 
     def execute_env(self, env: Dict[str, Any]) -> Dict[str, jax.Array]:
         env = dict(env)

@@ -15,7 +15,10 @@ At the service level (``core.service``) many jobs share ONE provisioned
 pool: ``plan_pool`` performs admission control (every job is guaranteed one
 unit or is rejected) and splits the pool's units across jobs proportionally
 to their ceil(T/P) demands, re-planned whenever jobs join, leave, or
-re-estimate P.
+re-estimate P.  A job's demand is discounted by its observed feature-cache
+hit rate (``effective_demand_units``): batches served by the shared
+``core.featcache.FeatureCache`` need no produce units, so hot jobs free
+capacity that rebalances to cold ones.
 
 Also reproduces the paper's *CPU-baseline* provisioning (Fig. 4): cores
 required = T / per-core-throughput, using per-RM per-core throughputs derived
@@ -27,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 
@@ -88,20 +91,40 @@ class PoolPlan:
     capacity: int
     demand_units: Dict[str, int]
     shares: Dict[str, int]
+    effective_demand: Optional[Dict[str, int]] = None  # after hit-rate discount
 
     @property
     def oversubscribed(self) -> bool:
         """True when aggregate demand exceeds the pool — jobs run degraded."""
-        return sum(self.demand_units.values()) > self.capacity
+        demands = self.effective_demand or self.demand_units
+        return sum(demands.values()) > self.capacity
 
 
-def plan_pool(capacity: int, demand_units: Dict[str, int]) -> PoolPlan:
+def effective_demand_units(demand: int, hit_rate: float) -> int:
+    """ceil(T/P) demand discounted by the job's observed feature-cache hit
+    rate: a fraction `hit_rate` of the job's partitions arrive without a
+    produce, so the units needed to keep its trainer fed shrink by the same
+    fraction (never below the 1-unit QoS floor)."""
+    rate = min(max(hit_rate, 0.0), 1.0)
+    return max(1, math.ceil(max(1, int(demand)) * (1.0 - rate)))
+
+
+def plan_pool(
+    capacity: int,
+    demand_units: Dict[str, int],
+    hit_rates: Optional[Dict[str, float]] = None,
+) -> PoolPlan:
     """Admission control + per-job unit allocation for a shared pool.
 
     Raises ``AdmissionError`` when the jobs cannot each be guaranteed one
     unit.  Otherwise allocates: 1 unit per job, then the surplus by largest
     remainder proportional to residual demand (capped at each job's demand —
     leftover capacity beyond aggregate demand stays idle for future jobs).
+
+    ``hit_rates`` (job -> observed feature-cache hit rate) discounts each
+    job's demand via ``effective_demand_units`` before allocation: a job
+    whose partitions mostly arrive from the shared cache needs fewer produce
+    units, so the surplus it frees rebalances to cold jobs.
     """
     if len(demand_units) > capacity:
         raise AdmissionError(
@@ -109,6 +132,12 @@ def plan_pool(capacity: int, demand_units: Dict[str, int]) -> PoolPlan:
             f"{len(demand_units)} job(s)"
         )
     demands = {j: max(1, int(d)) for j, d in demand_units.items()}
+    if hit_rates:
+        demands = {
+            j: effective_demand_units(d, hit_rates.get(j, 0.0))
+            for j, d in demands.items()
+        }
+    effective = dict(demands)
     shares = {j: 1 for j in demands}
     residual = {j: d - 1 for j, d in demands.items()}
     surplus = capacity - len(shares)
@@ -126,7 +155,7 @@ def plan_pool(capacity: int, demand_units: Dict[str, int]) -> PoolPlan:
             if shares[j] < demands[j]:
                 shares[j] += 1
                 leftover -= 1
-    return PoolPlan(capacity, dict(demand_units), shares)
+    return PoolPlan(capacity, dict(demand_units), shares, effective)
 
 
 def measure_throughput(

@@ -31,6 +31,8 @@ program (`repro.train.step.make_train_step_with_ingest`), the end-to-end
 
 from __future__ import annotations
 
+import hashlib
+import json
 import threading
 from typing import Dict, Optional
 
@@ -142,6 +144,22 @@ class PreStoEngine:
 
     def host_families(self) -> tuple[str, ...]:
         return tuple(f for f in FAMILIES if self.family_placements[f] == HOST)
+
+    def cache_signature(self) -> str:
+        """Stable identity of this engine's Transform for feature-cache keys.
+
+        Combines the lowered plan's structural hash (spec parameters + kernel
+        placements + stage wiring) with the per-family comm placement (which
+        families' traffic hops), so two engines that produce bitwise-equal
+        batches for equal inputs — even engines built independently from an
+        equal spec — share cache entries, and any placement that changes
+        batch routing keys separately.  The engine-level placement *mode*
+        string is deliberately NOT hashed here: it rides as ``CacheKey``'s
+        third component (``core.service.JobSpec.cache_key_fn``)."""
+        h = hashlib.sha256()
+        h.update(self.lowered_plan.structural_hash().encode())
+        h.update(json.dumps(sorted(self.family_placements.items())).encode())
+        return h.hexdigest()[:16]
 
     # -- single-shard (local) path -------------------------------------------
     def preprocess_local(self, pages: Dict[str, jax.Array]) -> MiniBatch:

@@ -27,6 +27,14 @@ trainer.  This module is that public surface:
   ``data.loader.SessionQueue``.  Shares are work-conserving: idle capacity
   may serve any job beyond its share, but a job with work never gets less
   than its share.
+* The service may own ONE shared ``core.featcache.FeatureCache``
+  (``PreprocessingService(cache=FeatureCache(...))``): every cacheable
+  session probes it at claim time (a hit short-circuits the claim — no
+  produce, same bitwise batch) and populates it on produce, so concurrent
+  tenants over overlapping partitions deduplicate work; a job's planner
+  demand is discounted by its observed hit rate, freeing units for cold
+  jobs.  Jobs opt out per-``JobSpec`` (``use_cache=False``); produce_fn
+  overrides are never cached (opaque identity).
 """
 
 from __future__ import annotations
@@ -40,7 +48,13 @@ from concurrent.futures import TimeoutError as FutureTimeoutError
 from queue import Empty
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple, Union
 
-from repro.core.planner import AdmissionError, PoolPlan, plan_pool
+from repro.core.featcache import CacheKey, FeatureCache
+from repro.core.planner import (
+    AdmissionError,
+    PoolPlan,
+    effective_demand_units,
+    plan_pool,
+)
 from repro.core.presto import PreStoEngine
 from repro.core.spec import TransformSpec
 from repro.data.loader import SessionQueue
@@ -48,6 +62,7 @@ from repro.data.storage import PartitionedStore
 
 __all__ = [
     "AdmissionError",
+    "FeatureCache",
     "JobSpec",
     "PreprocessingService",
     "Session",
@@ -72,6 +87,7 @@ class JobSpec:
     straggler_timeout: float = 30.0
     engine: Optional[PreStoEngine] = None  # prebuilt (shares its jit cache)
     produce_fn: Optional[Callable[[int], Any]] = None  # override / test hook
+    use_cache: bool = True  # opt out of the service's shared feature cache
 
     def build_produce(self) -> Tuple[Callable[[int], Any], Optional[PreStoEngine]]:
         """Resolve the per-partition production callable for this job."""
@@ -89,6 +105,27 @@ class JobSpec:
         store = self.store
         return (lambda pid: engine.produce_batch(store, pid)), engine
 
+    def cache_key_fn(
+        self, engine: Optional[PreStoEngine]
+    ) -> Optional[Callable[[int], CacheKey]]:
+        """Content-address builder for this job's batches, or None when the
+        job is not cacheable (produce_fn overrides are opaque; no store means
+        no partition fingerprints)."""
+        if (
+            not self.use_cache
+            or self.produce_fn is not None
+            or engine is None
+            or self.store is None
+        ):
+            return None
+        store, plan_hash = self.store, engine.cache_signature()
+        placement = engine.placement
+
+        def key(pid: int) -> CacheKey:
+            return CacheKey(store.partition_fingerprint(pid), plan_hash, placement)
+
+        return key
+
 
 @dataclasses.dataclass
 class SessionStats:
@@ -100,6 +137,9 @@ class SessionStats:
     delivered: int = 0  # batches handed to the consumer
     reissues: int = 0  # straggler backup claims
     duplicates_dropped: int = 0  # straggler losers discarded
+    cache_hits: int = 0  # claims short-circuited by the shared feature cache
+    cache_misses: int = 0  # cache probes that fell through to a produce
+    effective_demand_units: int = 1  # demand after the hit-rate discount
     rows_delivered: int = 0
     produce_time_s: float = 0.0  # pool-worker seconds spent on this job
     wait_time_s: float = 0.0  # consumer seconds blocked on the stream
@@ -119,6 +159,11 @@ class SessionStats:
     def starvation(self) -> float:
         """Fraction of the session's wall time the consumer spent blocked."""
         return self.wait_time_s / max(self.wall_time_s, 1e-9)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        probes = self.cache_hits + self.cache_misses
+        return self.cache_hits / probes if probes else 0.0
 
 
 def _batch_rows(batch: Any) -> int:
@@ -141,10 +186,15 @@ class Session:
         self.job = job
         self.name = job.name
         self._produce_fn, self.engine = job.build_produce()
+        self._cache = service.cache if job.use_cache else None
+        self._cache_key = (
+            job.cache_key_fn(self.engine) if self._cache is not None else None
+        )
         self._queue = SessionQueue(
             job.partitions,
             depth=job.queue_depth,
             straggler_timeout=job.straggler_timeout,
+            lookup=self._cache_probe if self._cache_key is not None else None,
         )
         self.total = self._queue.total
         # guarded by service._lock:
@@ -160,6 +210,10 @@ class Session:
         self._rows_delivered = 0
         self._produce_time = 0.0
         self._wait_time = 0.0
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._cache_keys: Dict[int, CacheKey] = {}  # pid -> key, probe->produce
+        self._eff_demand = self._demand  # last hit-rate-discounted demand
         self._p_est: Optional[float] = None
         self._t0 = time.perf_counter()
         self._t_end: Optional[float] = None
@@ -289,6 +343,11 @@ class Session:
                 wait_time_s=self._wait_time,
                 wall_time_s=wall,
                 demand_units=self._demand,
+                cache_hits=self._cache_hits,
+                cache_misses=self._cache_misses,
+                effective_demand_units=effective_demand_units(
+                    self._demand, self._hit_rate_locked()
+                ),
                 share=self.share,
                 target_samples_per_s=self.job.target_samples_per_s,
                 worker_samples_per_s=self._p_est or 0.0,
@@ -307,8 +366,65 @@ class Session:
 
     # -- pool-worker side ------------------------------------------------------
 
+    def _cache_probe(self, pid: int, fresh: bool) -> Optional[Any]:
+        """SessionQueue's claim-time lookup into the shared feature cache.
+
+        A hit means another tenant (or an earlier run of this one) already
+        produced this exact batch — same partition bytes, same lowered
+        Transform, same placement — so the claim short-circuits without a
+        produce; a follow means that batch is being produced right now, so
+        the claim pends on the producer's future instead of duplicating the
+        work.  Straggler re-issues (``fresh=False``) only accept finished
+        hits: following the in-flight leader they are backing up would
+        defeat the re-issue.  Hit/miss counts feed the planner's demand
+        discount: when this session's discounted demand changes, the pool
+        re-plans so the units its hits freed go to cold jobs."""
+        key = self._cache_key(pid)
+        if not fresh:
+            # straggler backup: peek only (never follow the possibly-stuck
+            # leader), and keep it out of the hit-rate tallies — the fresh
+            # claim of this pid was already counted once
+            return self._cache.peek(key)
+        status, found = self._cache.begin(key)
+        with self._slock:
+            if status == "produce":
+                self._cache_misses += 1
+                # remembered for the produce's fulfill/abandon: the produce
+                # path must never recompute (and possibly re-raise) the key
+                self._cache_keys[pid] = key
+            else:
+                self._cache_hits += 1
+            eff = effective_demand_units(self._demand, self._hit_rate_locked())
+            changed = eff != self._eff_demand
+            self._eff_demand = eff
+        if changed:
+            self._service._request_replan()
+        return found
+
+    def _hit_rate_locked(self) -> float:
+        probes = self._cache_hits + self._cache_misses
+        return self._cache_hits / probes if probes else 0.0
+
+    def _hit_rate(self) -> float:
+        with self._slock:
+            return self._hit_rate_locked()
+
     def _on_produced(self, pid: int, batch: Any, dt: float) -> None:
         winner = self._queue.complete(pid, batch)
+        if winner and self._cache_key is not None:
+            # winner-only pop: a straggler loser racing here must not steal
+            # the key and suppress the winner's fulfill (which would leave
+            # the in-flight future dangling for every follower)
+            with self._slock:
+                key = self._cache_keys.pop(pid, None)
+            if key is not None:
+                # the first completion populates the cache and resolves any
+                # followers pending on this content's in-flight future; a
+                # broken cache must never take the worker thread down
+                try:
+                    self._cache.fulfill(key, batch)
+                except Exception:
+                    self._cache.abandon(key)
         rows = _batch_rows(batch)
         demand_changed = False
         with self._slock:
@@ -329,15 +445,25 @@ class Session:
                     math.ceil(self.job.target_samples_per_s / self._p_est),
                 ),
             )
+            new_eff = effective_demand_units(new_demand, self._hit_rate())
             with self._service._lock:
                 if new_demand != self._demand:
                     self._demand = new_demand
                     demand_changed = True
+            if demand_changed:
+                with self._slock:
+                    self._eff_demand = new_eff
         if demand_changed:
             self._service._rebalance()
 
     def _on_produce_error(self, pid: int, exc: BaseException) -> None:
-        self._queue.complete_error(pid, exc)  # duplicate losers are dropped
+        winner = self._queue.complete_error(pid, exc)  # duplicate losers drop
+        if winner and self._cache_key is not None:
+            with self._slock:
+                key = self._cache_keys.pop(pid, None)  # winner-only, as above
+            if key is not None:
+                # deterministic in the key: followers would fail identically
+                self._cache.abandon(key, exc)
 
 
 class PreprocessingService:
@@ -351,14 +477,22 @@ class PreprocessingService:
     one slow consumer never idles the pool.
     """
 
-    def __init__(self, num_workers: int = 2, *, start: bool = True):
+    def __init__(
+        self,
+        num_workers: int = 2,
+        *,
+        cache: Optional[FeatureCache] = None,
+        start: bool = True,
+    ):
         assert num_workers >= 1, "pool needs at least one worker"
         self.num_workers = num_workers
+        self.cache = cache  # ONE shared feature cache across every tenant
         self._sessions: List[Session] = []
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._wake_cv = threading.Condition()
         self._rr = 0
+        self._replan = False  # a session's hit-rate-discounted demand moved
         self.plan: Optional[PoolPlan] = None
         self._threads = [
             threading.Thread(target=self._worker_loop, daemon=True, name=f"presto-pool-{i}")
@@ -410,7 +544,8 @@ class PreprocessingService:
                 raise ValueError(f"job name {job.name!r} already active")
             demands = {s.name: s._demand for s in self._sessions}
             demands[job.name] = max(1, job.units or 1)
-            plan = plan_pool(self.num_workers, demands)  # admission control
+            rates = {s.name: s._hit_rate() for s in self._sessions}
+            plan = plan_pool(self.num_workers, demands, rates)  # admission
             session = Session(self, job)
             self._sessions.append(session)
             self._apply(plan)
@@ -419,22 +554,34 @@ class PreprocessingService:
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:
-            return {
+            out = {
                 "workers": self.num_workers,
                 "active_jobs": [s.name for s in self._sessions],
                 "shares": dict(self.plan.shares) if self.plan else {},
                 "oversubscribed": bool(self.plan and self.plan.oversubscribed),
             }
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out
 
     def _apply(self, plan: PoolPlan) -> None:
         self.plan = plan
         for s in self._sessions:
             s.share = plan.shares.get(s.name, 0)
 
+    def _request_replan(self) -> None:
+        """A session's effective demand moved (feature-cache hit rate shift);
+        re-plan lazily on the next scheduling round rather than here — the
+        caller may be deep inside a claim under several locks."""
+        self._replan = True
+        self._wake()
+
     def _rebalance(self) -> None:
         with self._lock:
+            self._replan = False
             demands = {s.name: s._demand for s in self._sessions}
-            self._apply(plan_pool(self.num_workers, demands))
+            rates = {s.name: s._hit_rate() for s in self._sessions}
+            self._apply(plan_pool(self.num_workers, demands, rates))
 
     def _retire(self, session: Session) -> None:
         """Drop a finished/cancelled session from scheduling and rebalance."""
@@ -447,22 +594,33 @@ class PreprocessingService:
     # -- the pool --------------------------------------------------------------
 
     def _next_task(self) -> Optional[Tuple[Session, Tuple[int, Future]]]:
-        with self._lock:
-            n = len(self._sessions)
-            for enforce_share in (True, False):
-                for i in range(n):
-                    sess = self._sessions[(self._rr + i) % n]
+        """Two-pass round-robin claim.  The claim itself — which may probe
+        the feature cache, hash a disk partition's bytes, or read a spilled
+        block — runs OUTSIDE the service lock: the worker reserves its
+        session slot first (so shares stay enforced while it probes) and
+        releases it if the claim comes back empty."""
+        if self._replan:
+            self._rebalance()  # pick up hit-rate-discounted demand shifts
+        for enforce_share in (True, False):
+            with self._lock:
+                n = len(self._sessions)
+                candidates = [self._sessions[(self._rr + i) % n] for i in range(n)]
+            for i, sess in enumerate(candidates):
+                with self._lock:
                     if sess.cancelled:
                         continue
                     if enforce_share and sess._active_workers >= max(sess.share, 1):
                         continue
-                    claimed = sess._queue.claim()
-                    if claimed is None:
-                        continue
-                    sess._active_workers += 1
-                    self._rr = (self._rr + i + 1) % n
-                    return sess, claimed
-            return None
+                    sess._active_workers += 1  # reserve before the claim
+                claimed = sess._queue.claim()
+                if claimed is None:
+                    with self._lock:
+                        sess._active_workers -= 1
+                    continue
+                with self._lock:
+                    self._rr = (self._rr + i + 1) % max(n, 1)
+                return sess, claimed
+        return None
 
     def _prune(self) -> None:
         with self._lock:

@@ -17,7 +17,9 @@ Two delivery mechanisms sit on top of ``WorkQueue``:
   workers shared across sessions; delivery is a stream of futures in claim
   order, and fresh claims are refused while ``depth`` futures are undelivered
   (backpressure) — straggler re-issues stay allowed so liveness never depends
-  on a slow consumer.
+  on a slow consumer.  An optional ``lookup`` hook (the shared
+  ``core.featcache.FeatureCache`` probe) short-circuits claims whose batch
+  is already cached: the future resolves without a produce.
 """
 
 from __future__ import annotations
@@ -110,6 +112,7 @@ class SessionQueue:
         *,
         depth: int = 4,
         straggler_timeout: float = 30.0,
+        lookup: Optional[Callable[[int, bool], Any]] = None,
     ):
         self.work = WorkQueue(partition_ids, straggler_timeout)
         self.depth = depth
@@ -120,24 +123,74 @@ class SessionQueue:
         self.total = self.work.total
         self._created = 0
         self._delivered = 0
+        # feature-cache probe: lookup(pid, fresh) -> None (produce), a batch
+        # (cached: complete immediately, no produce), or a Future (another
+        # tenant is producing this content: complete when it resolves).  The
+        # claim loop continues past short-circuited pids so the caller only
+        # ever receives a pid that actually needs a produce.
+        self.lookup = lookup
+        self.short_circuits = 0
 
     def claim(self) -> Optional[Tuple[int, Future]]:
-        """Pool-worker side: claim (pid, future), or None if nothing to do."""
-        with self._lock:
-            if self.cancelled.is_set():
-                return None
-            backpressured = self._created - self._delivered >= self.depth
-            pid = self.work.claim(reissue_only=backpressured)
-            if pid is None:
-                return None
-            fut = self._futures.get(pid)
-            if fut is None:
-                fut = Future()
-                fut.set_running_or_notify_cancel()
-                self._futures[pid] = fut
-                self._created += 1
-                self.out.put(fut)
+        """Pool-worker side: claim (pid, future), or None if nothing to do.
+
+        With a ``lookup`` bound, every claimed pid is probed first: cached
+        claims complete immediately, claims whose content another tenant is
+        already producing pend on that tenant's future (winner semantics
+        throughout — a re-issued claim whose twin is still producing resolves
+        from cache and the straggler's own result is dropped as a duplicate),
+        and claiming continues so the worker only ever receives a pid that
+        actually needs a produce."""
+        while True:
+            with self._lock:
+                if self.cancelled.is_set():
+                    return None
+                backpressured = self._created - self._delivered >= self.depth
+                pid = self.work.claim(reissue_only=backpressured)
+                if pid is None:
+                    return None
+                fut = self._futures.get(pid)
+                fresh = fut is None
+                if fresh:
+                    fut = Future()
+                    fut.set_running_or_notify_cancel()
+                    self._futures[pid] = fut
+                    self._created += 1
+                    self.out.put(fut)
+            if self.lookup is not None:
+                try:
+                    found = self.lookup(pid, fresh)
+                except Exception:
+                    found = None  # a broken cache probe degrades to a miss
+                if isinstance(found, Future):
+                    self._pend(pid, found)
+                    continue
+                if found is not None:
+                    if self.complete(pid, found):
+                        with self._lock:
+                            self.short_circuits += 1
+                    continue
             return pid, fut
+
+    def _pend(self, pid: int, donor: Future) -> None:
+        """Resolve `pid` from another tenant's in-flight produce of the same
+        content.  If the donor is cancelled (leader dropped without a
+        result), nothing completes here — the pid stays inflight and the
+        straggler timeout re-issues it to a real produce."""
+
+        def _done(d: Future) -> None:
+            if d.cancelled():
+                return
+            exc = d.exception()
+            if exc is not None:
+                self.complete_error(pid, exc)
+            # shallow copy: every follower gets its own batch dict (array
+            # buffers stay shared — they are immutable)
+            elif self.complete(pid, dict(d.result())):
+                with self._lock:
+                    self.short_circuits += 1
+
+        donor.add_done_callback(_done)
 
     def mark_delivered(self) -> None:
         """Consumer pacing signal: one claimed batch has left the stream."""

@@ -19,7 +19,9 @@ petabytes.
 
 from __future__ import annotations
 
+import hashlib
 import os
+import threading
 from typing import Callable, Dict, Iterable, List, Optional
 
 import numpy as np
@@ -44,6 +46,9 @@ class PartitionedStore:
         self.root = root
         self.placement = placement
         self._read_bytes = 0
+        # pid -> (stat signature | None, fingerprint); guarded by _fp_lock
+        self._fp_cache: Dict[int, tuple] = {}
+        self._fp_lock = threading.Lock()
 
     # -- ownership -----------------------------------------------------------
     def owner_of(self, partition_id: int) -> int:
@@ -79,6 +84,47 @@ class PartitionedStore:
     def bytes_read(self) -> int:
         return self._read_bytes
 
+    # -- content identity ------------------------------------------------------
+    def partition_fingerprint(self, partition_id: int) -> str:
+        """Content-addressed identity of one partition's encoded bytes.
+
+        Mirrors ``read()``'s precedence exactly: when a disk file exists it
+        IS the content (read() serves its bytes even on a sourced store), so
+        the fingerprint hashes the file bytes, revalidated against the
+        file's (mtime, size) so a rewritten partition never serves a stale
+        cache key.  Only fileless partitions fall back to the source's
+        deterministic (cfg, rows, seed, pid) identity.  Equal fingerprint ⇒
+        equal bytes, always — a mismatch between tenants can only cost a
+        missed dedup, never a wrong batch.  This is the ``partition
+        fingerprint`` component of a feature-cache key."""
+        path = self._path(partition_id) if self.root is not None else None
+        if path is not None and os.path.exists(path):
+            st = os.stat(path)
+            sig = (st.st_mtime_ns, st.st_size)
+            with self._fp_lock:
+                hit = self._fp_cache.get(partition_id)
+            if hit is not None and hit[0] == sig:
+                return hit[1]
+            h = hashlib.sha256()
+            with open(path, "rb") as f:
+                for chunk in iter(lambda: f.read(1 << 20), b""):
+                    h.update(chunk)
+            fp = h.hexdigest()[:16]
+            with self._fp_lock:
+                self._fp_cache[partition_id] = (sig, fp)
+            return fp
+        assert self.source is not None, "no disk file and no synthetic source"
+        with self._fp_lock:
+            hit = self._fp_cache.get(partition_id)
+        if hit is not None and hit[0] is None:
+            return hit[1]
+        fp = hashlib.sha256(
+            f"{self.source.fingerprint()}:{partition_id}".encode()
+        ).hexdigest()[:16]
+        with self._fp_lock:
+            self._fp_cache[partition_id] = (None, fp)
+        return fp
+
     def _path(self, pid: int) -> str:
         # deviceNN/ prefix models per-device directories of the storage array
         assert self.root is not None
@@ -86,3 +132,135 @@ class PartitionedStore:
         ddir = os.path.join(self.root, f"device{dev:03d}")
         os.makedirs(ddir, exist_ok=True)
         return os.path.join(ddir, f"part{pid:06d}.rp")
+
+
+class CacheSpillStore:
+    """Spill tier for the preprocessed-feature cache, on the simulated devices.
+
+    Blocks evicted from the cache's in-memory LRU tier land here: each block
+    (one train-ready mini-batch, as numpy arrays) is assigned to a simulated
+    storage device by key hash, mirroring ``PartitionedStore``'s per-device
+    ownership.  Residency is charged to the same byte-movement cost model as
+    ISP placement — every write and read accrues ``bytes / bytes_per_s``
+    modeled seconds (default: the ISP unit's internal SSD->FPGA stream rate,
+    ``core.costmodel.PlacementCostModel.isp_stream_bytes_per_s``), so a spill
+    hit is cheaper than recompute only when the cost model says so.
+
+    With ``root`` set, blocks live as one ``.npz`` file per block under
+    per-device directories (restart-survivable); otherwise they live in
+    per-device dicts (pure simulation).  Thread-safe.
+    """
+
+    def __init__(
+        self,
+        num_devices: int = 4,
+        *,
+        capacity_bytes: Optional[int] = None,
+        bytes_per_s: float = 8e9,
+        root: Optional[str] = None,
+    ):
+        assert num_devices >= 1
+        self.num_devices = num_devices
+        self.capacity_bytes = capacity_bytes
+        self.bytes_per_s = bytes_per_s
+        self.root = root
+        self._devices: List[Dict[str, Dict[str, np.ndarray]]] = [
+            {} for _ in range(num_devices)
+        ]
+        self._sizes: Dict[str, int] = {}  # key -> block bytes (insertion order)
+        self._resident = 0  # running sum of _sizes values
+        self._lock = threading.Lock()
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.modeled_io_s = 0.0
+
+    def owner_of(self, key: str) -> int:
+        return int(hashlib.sha256(key.encode()).hexdigest()[:8], 16) % self.num_devices
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return self._resident
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._sizes)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._sizes
+
+    def _block_path(self, key: str) -> str:
+        assert self.root is not None
+        ddir = os.path.join(self.root, f"device{self.owner_of(key):03d}")
+        os.makedirs(ddir, exist_ok=True)
+        return os.path.join(ddir, f"cache_{key}.npz")
+
+    def write(self, key: str, arrays: Dict[str, np.ndarray]) -> int:
+        """Spill one block; returns its size in bytes.  Oldest blocks are
+        dropped when a capacity bound is set (the spill tier is a cache of a
+        cache — recompute is always available underneath)."""
+        def frozen(v: np.ndarray) -> np.ndarray:
+            # blocks are served to many tenants: never mutable.  A read-only
+            # VIEW leaves the caller's own array untouched, zero-copy.
+            a = np.asarray(v)
+            if a.flags.writeable:
+                a = a.view()
+                a.setflags(write=False)
+            return a
+
+        arrays = {k: frozen(v) for k, v in arrays.items()}
+        nbytes = sum(int(a.nbytes) for a in arrays.values())
+        if self.root is not None:
+            np.savez(self._block_path(key), **arrays)
+        dropped: List[str] = []
+        with self._lock:
+            if self.root is None:
+                self._devices[self.owner_of(key)][key] = arrays
+            old_bytes = self._sizes.pop(key, None)
+            if old_bytes is not None:
+                self._resident -= old_bytes
+            self._sizes[key] = nbytes
+            self._resident += nbytes
+            self.bytes_written += nbytes
+            self.modeled_io_s += nbytes / self.bytes_per_s
+            if self.capacity_bytes is not None:
+                while self._resident > self.capacity_bytes and len(self._sizes) > 1:
+                    old = next(iter(self._sizes))
+                    if old == key:
+                        break
+                    self._resident -= self._sizes.pop(old)
+                    self._devices[self.owner_of(old)].pop(old, None)
+                    dropped.append(old)
+        if self.root is not None:
+            for old in dropped:
+                try:
+                    os.remove(self._block_path(old))
+                except OSError:
+                    pass
+        return nbytes
+
+    def read(self, key: str) -> Optional[Dict[str, np.ndarray]]:
+        """Fetch one spilled block (None if absent), charging modeled I/O."""
+        with self._lock:
+            nbytes = self._sizes.get(key)
+            if nbytes is None:
+                return None
+            if self.root is None:
+                block = self._devices[self.owner_of(key)].get(key)
+                if block is None:
+                    return None
+                self.bytes_read += nbytes
+                self.modeled_io_s += nbytes / self.bytes_per_s
+                return dict(block)
+        try:
+            with np.load(self._block_path(key)) as z:
+                block = {k: z[k] for k in z.files}
+        except OSError:
+            return None  # evicted between the size check and the load
+        for a in block.values():
+            a.setflags(write=False)
+        with self._lock:
+            self.bytes_read += nbytes
+            self.modeled_io_s += nbytes / self.bytes_per_s
+        return block

@@ -11,6 +11,8 @@ what makes straggler re-issue and elastic restart trivially correct.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 from typing import Dict
 
 import numpy as np
@@ -113,6 +115,20 @@ class SyntheticRecSysSource:
         self.generated_source = (
             np.arange(cfg.n_generated, dtype=np.int32) % max(cfg.n_dense, 1)
         )
+
+    def fingerprint(self) -> str:
+        """Content identity of the dataset this source generates.
+
+        Generation is deterministic in (cfg, rows, seed), so that triple IS
+        the content: two sources built with equal parameters produce bitwise-
+        equal partitions and must fingerprint alike (this is what lets two
+        tenants with separate store objects share feature-cache entries)."""
+        payload = json.dumps(
+            {"cfg": dataclasses.asdict(self.cfg), "rows": self.rows,
+             "seed": self.seed},
+            sort_keys=True,
+        )
+        return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
     # -- raw (decoded) view ------------------------------------------------
     def raw(self, partition_id: int) -> RawBatch:

@@ -5,7 +5,13 @@ Drives the preprocessing-as-a-service surface end to end: a
 its own partition range, placement, and (optional) QoS target; every tenant
 is drained by its own consumer thread that simulates a trainer (a fixed
 per-batch train time).  Prints the paper's Fig. 3 accounting per job —
-utilization, starvation, straggler re-issues — plus the pool's unit shares.
+utilization, starvation, straggler re-issues, feature-cache hits — plus the
+pool's unit shares.
+
+With ``--cache`` the pool carries a shared content-addressed feature cache
+(``core.featcache``): tenants of the same RM generate identical partition
+content (deterministic synthetic sources), so overlapping work deduplicates
+across tenants even though every job builds its own store object.
 
     PYTHONPATH=src python -m repro.launch.serve_preprocess --jobs 2 --reduced
 """
@@ -18,10 +24,31 @@ import threading
 import time
 
 from repro.configs.registry import get_recsys
+from repro.core.featcache import FeatureCache, default_spill_store
 from repro.core.service import JobSpec, PreprocessingService
 from repro.core.spec import TransformSpec
 from repro.data.storage import PartitionedStore
 from repro.data.synth import SyntheticRecSysSource
+
+EPILOG = """\
+multi-tenant flags:
+  --jobs N --workers M       N tenants share a pool of M units (admission
+                             guarantees each tenant 1 unit or rejects it)
+  --qos S                    per-job QoS target in samples/s; demand is
+                             re-estimated as ceil(target / measured P)
+cache flags:
+  --cache                    shared content-addressed feature cache across
+                             tenants (keys: partition fingerprint x lowered
+                             opgraph hash x placement)
+  --cache-mb MB              in-memory LRU tier bound (default 256 MB)
+  --spill-devices K          add a spill tier on K simulated storage devices
+                             (evictions land there; 0 = no spill tier)
+
+examples:
+  PYTHONPATH=src python -m repro.launch.serve_preprocess --jobs 2 --reduced
+  PYTHONPATH=src python -m repro.launch.serve_preprocess \\
+      --jobs 3 --reduced --cache --cache-mb 64 --spill-devices 4
+"""
 
 
 def _consume(session, consume_s: float, result: dict) -> None:
@@ -41,7 +68,9 @@ def _consume(session, consume_s: float, result: dict) -> None:
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+    ap = argparse.ArgumentParser(
+        description=__doc__, epilog=EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--jobs", type=int, default=2, help="concurrent tenants")
     ap.add_argument("--workers", type=int, default=None,
                     help="pool size (default: jobs + 1)")
@@ -57,10 +86,21 @@ def main(argv=None) -> None:
                     help="per-job QoS target (samples/s); default best-effort")
     ap.add_argument("--consume-ms", type=float, default=5.0,
                     help="simulated train-step time per batch")
+    ap.add_argument("--cache", action="store_true",
+                    help="shared content-addressed feature cache")
+    ap.add_argument("--cache-mb", type=int, default=256,
+                    help="cache memory-tier bound in MB (default 256)")
+    ap.add_argument("--spill-devices", type=int, default=0,
+                    help="spill tier on K simulated devices (0 = none)")
     args = ap.parse_args(argv)
 
     workers = args.workers if args.workers is not None else args.jobs + 1
-    service = PreprocessingService(num_workers=workers)
+    cache = None
+    if args.cache:
+        spill = (default_spill_store(args.spill_devices)
+                 if args.spill_devices > 0 else None)
+        cache = FeatureCache(args.cache_mb << 20, spill=spill)
+    service = PreprocessingService(num_workers=workers, cache=cache)
     sessions, results, threads = [], [], []
     rms = itertools.cycle(args.rm)
     for j in range(args.jobs):
@@ -95,7 +135,8 @@ def main(argv=None) -> None:
     wall = time.perf_counter() - wall0
 
     print(f"\n{'job':<12} {'batches':>7} {'rows/s':>9} {'util':>6} "
-          f"{'starve':>7} {'reissue':>7} {'dupes':>6} {'share/demand':>13}")
+          f"{'starve':>7} {'reissue':>7} {'dupes':>6} {'hits':>5} "
+          f"{'share/demand':>13}")
     for session, result in zip(sessions, results):
         st = session.stats()
         util = result["busy_s"] / max(result["wall_s"], 1e-9)
@@ -103,12 +144,19 @@ def main(argv=None) -> None:
         assert result["batches"] == st.total
         print(f"{st.job:<12} {st.delivered:>7} {st.achieved_samples_per_s:>9.0f} "
               f"{util:>6.2f} {st.starvation:>7.2f} {st.reissues:>7} "
-              f"{st.duplicates_dropped:>6} "
-              f"{st.share:>7}/{st.demand_units}")
+              f"{st.duplicates_dropped:>6} {st.cache_hits:>5} "
+              f"{st.share:>7}/{st.effective_demand_units}")
     service.close()
     total_rows = sum(s.stats().rows_delivered for s in sessions)
     print(f"\naggregate: {total_rows} rows in {wall:.1f}s "
           f"({total_rows / max(wall, 1e-9):.0f} rows/s across tenants)")
+    if cache is not None:
+        cs = cache.stats()
+        print(f"cache: hits={cs.hits} follows={cs.follows} misses={cs.misses} "
+              f"hit_rate={cs.hit_rate:.2f} entries={cs.entries} "
+              f"resident={cs.resident_bytes / 1e6:.1f}MB "
+              f"spilled={cs.spilled_entries} ({cs.spilled_bytes / 1e6:.1f}MB, "
+              f"{cs.spill_io_s * 1e3:.2f}ms modeled I/O)")
 
 
 if __name__ == "__main__":

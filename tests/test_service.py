@@ -13,6 +13,7 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_recsys
+from repro.core.featcache import FeatureCache
 from repro.core.planner import AdmissionError, plan_pool
 from repro.core.presto import PreStoEngine
 from repro.core.service import JobSpec, PreprocessingService
@@ -127,9 +128,16 @@ def test_session_reiteration_resumes_where_it_stopped():
 # -- the acceptance criterion -------------------------------------------------
 
 
-def test_two_sessions_bitwise_identical_to_single_tenant(rm1):
+@pytest.mark.parametrize("cached", [False, True], ids=["no-cache", "cache"])
+def test_two_sessions_bitwise_identical_to_single_tenant(rm1, cached):
+    """The acceptance invariant, with and without the shared feature cache:
+    overlapping tenants (cache on) must still each see exactly their solo
+    batches — a cache hit IS the solo batch, bitwise."""
     spec, store, engine = rm1
-    parts = {"tenant-a": range(0, 6), "tenant-b": range(6, 12)}
+    if cached:
+        parts = {"tenant-a": range(0, 8), "tenant-b": range(4, 12)}  # overlap
+    else:
+        parts = {"tenant-a": range(0, 6), "tenant-b": range(6, 12)}
 
     def job(name):
         return JobSpec(name=name, partitions=parts[name], engine=engine,
@@ -140,8 +148,9 @@ def test_two_sessions_bitwise_identical_to_single_tenant(rm1):
         with PreprocessingService(num_workers=2) as svc:
             solo[name] = _collect(svc.submit(job(name)))
 
+    cache = FeatureCache(256 << 20) if cached else None
     shared = {name: {} for name in parts}
-    with PreprocessingService(num_workers=2) as svc:
+    with PreprocessingService(num_workers=2, cache=cache) as svc:
         sessions = {name: svc.submit(job(name)) for name in parts}
         threads = [
             threading.Thread(target=_collect_into, args=(sessions[n], shared[n]))
@@ -162,6 +171,9 @@ def test_two_sessions_bitwise_identical_to_single_tenant(rm1):
                     np.asarray(mb[key]), np.asarray(shared[name][pid][key]),
                     err_msg=f"{name} pid={pid} key={key} diverged under sharing",
                 )
+    if cached:
+        cs = cache.stats()
+        assert cs.hits + cs.follows >= 4  # the overlap deduplicated
 
 
 # -- straggler re-issue through the Session API (satellite) -------------------
