@@ -15,23 +15,36 @@ shared pool and gives tenants ``--overlap``-fraction overlapping partition
 ranges: the same multi-tenant run is timed twice, cold (no cache) and with a
 fresh shared cache, reporting the cross-tenant dedup hit rate and the total-
 preprocessing-time speedup the cache buys.
+
+``--skew <zipf-alpha>`` benches device-aware scheduling: one job over a
+device fleet whose partition->device ownership follows a Zipf(alpha) quota
+(Meta's ingestion skew), run three ways — uniform ownership, skewed with
+locality-blind round-robin, and skewed with locality-aware routing + host
+fallback.  Throughput here is MODELED end-to-end (each simulated device
+serializes its ledger; the host pool parallelizes): real wall time cannot
+see simulated contention, the ledgers can.  Every delivered batch is
+asserted bitwise identical across all three runs, and the routed run must
+beat the blind run's makespan with a non-zero host-fallback count.
 """
 
 from __future__ import annotations
 
 import argparse
+import math
 import threading
 import time
 
 import jax
+import numpy as np
 
 from benchmarks.common import BENCH_ROWS, emit, rm_fixture, time_call
+from repro.core.costmodel import ContentionAwareCostModel
 from repro.core.featcache import FeatureCache
 from repro.core.preprocess import preprocess_pages
 from repro.core.presto import PreStoEngine
 from repro.core.service import JobSpec, PreprocessingService
 from repro.core.spec import TransformSpec
-from repro.data.storage import PartitionedStore
+from repro.data.storage import DeviceFleet, PartitionedStore, zipf_owner_map
 from repro.data.synth import RM_CONFIGS, SyntheticRecSysSource
 
 EPILOG = """\
@@ -42,11 +55,18 @@ modes:
                              with a shared content-addressed feature cache;
                              reports dedup hit rate + total-time speedup
   --multi-tenant --no-cache  overlapping tenants, uncached baseline only
+  --skew A                   Zipf(A)-skewed partition ownership over --devices
+                             simulated ISP devices: locality-blind round-robin
+                             vs device-aware routing + host fallback; reports
+                             per-device occupancy and the modeled end-to-end
+                             speedup (asserts bitwise-identical batches and a
+                             non-zero fallback count under skew)
 
 examples:
   PYTHONPATH=src python -m benchmarks.bench_throughput --multi-tenant --smoke
   PYTHONPATH=src python -m benchmarks.bench_throughput \\
       --multi-tenant --smoke --cache --overlap 0.5
+  PYTHONPATH=src python -m benchmarks.bench_throughput --skew 1.1 --smoke
 """
 
 
@@ -212,6 +232,128 @@ def run_multi_tenant(
     return results
 
 
+def run_skew(
+    rm: str = "rm1",
+    *,
+    devices: int = 4,
+    alpha: float = 1.1,
+    partitions: int = 32,
+    rows: int = BENCH_ROWS,
+    seed: int = 0,
+) -> dict:
+    """Uniform vs Zipf-skewed partition popularity, with/without fallback.
+
+    Three runs of ONE job over `partitions` partitions on `devices`
+    simulated ISP devices (fresh ledgers each):
+
+    * ``uniform`` — round-robin ownership, device-aware routing (reference
+      batches; fallback must never fire: no device is past the threshold).
+    * ``blind``   — Zipf(alpha) ownership, locality-blind round-robin: every
+      produce still runs on the owning device, so the hot device's ledger
+      serializes most of the job.
+    * ``routed``  — same ownership, locality-aware claims + host fallback.
+
+    Modeled end-to-end seconds = max(per-device busy, host busy / fleet
+    size).  Asserts the acceptance criterion: routed beats blind under skew
+    while every batch stays bitwise identical to the uniform run.
+    """
+    src = SyntheticRecSysSource(RM_CONFIGS[rm], rows=rows)
+    spec = TransformSpec.from_source(src)
+    engine = PreStoEngine(spec)  # shared jit cache: every run compiles once
+    # a fallback candidate waits behind the OTHER claims bound to its
+    # device (queue_depth - 1 <= ceil(P/D) - 1 under uniform ownership), so
+    # ceil(P/D) is the tightest threshold fallback can never cross until
+    # skew concentrates ownership past it
+    threshold = math.ceil(partitions / devices)
+    skew_map = zipf_owner_map(partitions, devices, alpha=alpha, seed=seed)
+    hot = max(skew_map.count(d) for d in range(devices))
+    model = ContentionAwareCostModel(queue_threshold=threshold)
+
+    def one_run(owner_map, locality: bool):
+        fleet = DeviceFleet.from_cost_model(devices, model)
+        store = PartitionedStore(
+            partitions, num_devices=devices, source=src, fleet=fleet,
+            owner_map=owner_map,
+        )
+        t0 = time.perf_counter()
+        with PreprocessingService(
+            num_workers=devices, devices=fleet, locality=locality,
+            cost_model=model,
+        ) as svc:
+            sess = svc.submit(JobSpec(
+                name=f"{rm}-skew", partitions=range(partitions), engine=engine,
+                store=store, units=devices, queue_depth=partitions,
+            ))
+            out = {pid: mb for pid, mb in sess}
+            st = sess.stats()
+        wall = time.perf_counter() - t0
+        return out, st, fleet, wall
+
+    engine.produce_batch(
+        PartitionedStore(partitions, num_devices=devices, source=src), 0
+    )  # compile outside every run
+    print(f"skew bench: {rm} {partitions}x{rows}-row partitions on {devices} "
+          f"devices, zipf alpha={alpha} (hot device owns {hot}), "
+          f"queue threshold={threshold}")
+
+    runs = {
+        "uniform": one_run(None, True),
+        "blind": one_run(skew_map, False),
+        "routed": one_run(skew_map, True),
+    }
+    results: dict = {"alpha": alpha, "hot_partitions": hot}
+    total_rows = rows * partitions
+    for name, (out, st, fleet, wall) in runs.items():
+        makespan = fleet.makespan_s(host_parallelism=devices)
+        modeled_rows_s = total_rows / max(makespan, 1e-12)
+        emit(f"throughput/{rm}/skew/{name}", makespan * 1e6,
+             f"modeled_rows_per_s={modeled_rows_s:.0f} "
+             f"fallbacks={st.host_fallbacks} wall_s={wall:.2f}")
+        results[name] = {
+            "makespan_s": makespan,
+            "modeled_rows_s": modeled_rows_s,
+            "host_fallbacks": st.host_fallbacks,
+            "device_busy_s": [d.busy_s for d in fleet],
+        }
+
+    print(f"\n{'run':<9} {'modeled rows/s':>14} {'makespan':>10} "
+          f"{'hot-dev busy':>12} {'fallbacks':>9}")
+    for name, (out, st, fleet, wall) in runs.items():
+        makespan = fleet.makespan_s(host_parallelism=devices)
+        print(f"{name:<9} {total_rows / max(makespan, 1e-12):>14.0f} "
+              f"{makespan * 1e3:>8.2f}ms {fleet.max_busy_s() * 1e3:>10.2f}ms "
+              f"{st.host_fallbacks:>9}")
+
+    # the correctness anchor: routing never changes batch bytes
+    uniform_out = runs["uniform"][0]
+    for name in ("blind", "routed"):
+        out = runs[name][0]
+        assert sorted(out) == sorted(uniform_out), f"{name} lost partitions"
+        for pid, mb in uniform_out.items():
+            for key in mb:
+                np.testing.assert_array_equal(
+                    np.asarray(mb[key]), np.asarray(out[pid][key]),
+                    err_msg=f"{name} pid={pid} key={key} diverged under skew")
+    print("bitwise: blind == routed == uniform for every delivered batch")
+
+    if alpha > 0:
+        routed, blind = results["routed"], results["blind"]
+        assert routed["host_fallbacks"] > 0, (
+            "skewed ownership past the queue threshold must trigger host "
+            "fallback")
+        assert routed["makespan_s"] < blind["makespan_s"], (
+            "device-aware routing must beat locality-blind round-robin "
+            f"under skew ({routed['makespan_s']:.6f}s vs "
+            f"{blind['makespan_s']:.6f}s)")
+        speedup = blind["makespan_s"] / routed["makespan_s"]
+        results["speedup"] = speedup
+        print(f"device-aware routing + host fallback: {speedup:.2f}x modeled "
+              f"end-to-end speedup over locality-blind round-robin "
+              f"({blind['host_fallbacks']} -> {routed['host_fallbacks']} "
+              f"fallbacks)")
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(
         description=__doc__, epilog=EPILOG,
@@ -232,8 +374,20 @@ if __name__ == "__main__":
     ap.add_argument("--overlap", type=float, default=0.5,
                     help="fraction of partition overlap between consecutive "
                          "tenants in --cache/--no-cache modes (default 0.5)")
+    ap.add_argument("--skew", type=float, default=None, metavar="ALPHA",
+                    help="bench device-aware scheduling under Zipf(ALPHA)-"
+                         "skewed partition ownership (0 = uniform quotas)")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="simulated ISP devices in --skew mode (default 4)")
     args = ap.parse_args()
-    if args.multi_tenant:
+    if args.skew is not None:
+        run_skew(
+            devices=args.devices,
+            alpha=args.skew,
+            partitions=16 if args.smoke else 32,
+            rows=256 if args.smoke else BENCH_ROWS,
+        )
+    elif args.multi_tenant:
         # cache modes use wider windows so --overlap has partitions to share,
         # and full-size rows even under --smoke: the dedup saving must stay
         # visible above this host's per-produce scheduling jitter

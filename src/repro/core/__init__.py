@@ -4,11 +4,14 @@
 # placement and fusion are compiler decisions, not separate code paths.
 from repro.core.costmodel import (
     Comparison,
+    ContentionAwareCostModel,
     DeviceModel,
+    PartitionCosts,
     PlacementCostModel,
     choose_placement,
     cost_efficiency,
     energy_efficiency,
+    partition_costs,
     tco_usd,
 )
 from repro.core.featcache import (
@@ -28,6 +31,7 @@ from repro.core.opgraph import (
 from repro.core.pipeline import PipelineStats, TrainingPipeline
 from repro.core.planner import (
     AdmissionError,
+    DeviceTopology,
     PlacementProvisioning,
     PoolPlan,
     ProvisioningPlan,
@@ -55,11 +59,14 @@ __all__ = [
     "CacheKey",
     "CacheStats",
     "Comparison",
+    "ContentionAwareCostModel",
     "DeviceModel",
+    "DeviceTopology",
     "FAMILIES",
     "FeatureCache",
     "JobSpec",
     "OpGraph",
+    "PartitionCosts",
     "PipelineStats",
     "PlacementCostModel",
     "PlacementProvisioning",
@@ -84,6 +91,7 @@ __all__ = [
     "pages_from_partition",
     "pages_pspec",
     "pages_shape_dtypes",
+    "partition_costs",
     "plan_pool",
     "preprocess_pages",
     "resolve_placements",

@@ -160,6 +160,87 @@ def choose_placement(
     }
 
 
+# ---------------------------------------------------------------------------
+# Contention-aware routing (device-aware scheduling)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionCosts:
+    """Whole-partition cost summary for one Transform: the inputs the
+    device-aware router and the device ledgers need, precomputed once per
+    session instead of per claim."""
+
+    isp_s: float  # modeled seconds on an idle ISP unit (all families)
+    host_s: float  # modeled seconds via the host path (link + host compute)
+    ops: float  # abstract Transform ops (charged to whoever computes)
+    page_bytes: int  # encoded pages (host path: moved over the link, in)
+    batch_bytes: int  # train-ready tensors (host path: moved back, out)
+
+    @property
+    def link_bytes(self) -> int:
+        """Copy-in/copy-out traffic of one host-fallback produce."""
+        return self.page_bytes + self.batch_bytes
+
+
+def partition_costs(
+    spec: TransformSpec,
+    rows: Optional[int] = None,
+    model: PlacementCostModel = DEFAULT_PLACEMENT_MODEL,
+) -> PartitionCosts:
+    """Aggregate ``placement_costs`` over every family of one partition."""
+    rows = rows or spec.cfg.rows_per_partition
+    per_family = placement_costs(spec, rows, model)
+    page_b = opgraph.family_page_bytes(spec, rows)
+    out_b = opgraph.family_batch_bytes(spec, rows)
+    ops = family_compute_ops(spec, rows)
+    return PartitionCosts(
+        isp_s=sum(c["isp"] for c in per_family.values()),
+        host_s=sum(c["host"] for c in per_family.values()),
+        ops=sum(ops.values()),
+        page_bytes=int(sum(page_b.values())),
+        batch_bytes=int(sum(out_b.values())),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ContentionAwareCostModel(PlacementCostModel):
+    """``PlacementCostModel`` that prices queue wait, not just bytes.
+
+    The static model compares an IDLE ISP unit against the host path; at
+    fleet scale the owning device is rarely idle — partition popularity is
+    heavily skewed (Meta's ingestion characterization), so the live queue
+    depth of the device is part of the price.  A claim arriving at a device
+    with ``q`` partitions already bound waits ~``q`` service times before
+    its own, so the contended ISP cost is ``(1+q) * isp_s``; the claim is
+    offloaded to the host exactly when ``q`` reaches ``queue_threshold`` or
+    more AND the contended ISP price exceeds the host price.  Below the
+    threshold locality always wins (the whole point of in-storage
+    preprocessing), so host fallback can never fire on an idle fleet.
+    """
+
+    queue_threshold: int = 4  # bound claims AHEAD before fallback may fire
+
+    def queue_wait_s(self, isp_s: float, queue_depth: int) -> float:
+        """Modeled wait behind `queue_depth` earlier claims of ~equal cost."""
+        return max(queue_depth, 0) * isp_s
+
+    def contended_isp_s(self, isp_s: float, queue_depth: int) -> float:
+        return isp_s + self.queue_wait_s(isp_s, queue_depth)
+
+    def should_offload(
+        self, costs: Optional[PartitionCosts], queue_depth: int
+    ) -> bool:
+        """The dynamic routing decision, fed by live occupancy."""
+        if queue_depth < self.queue_threshold:
+            return False
+        if costs is None or costs.isp_s <= 0.0:
+            return True  # cost-less work (test hooks): threshold alone rules
+        return self.contended_isp_s(costs.isp_s, queue_depth) > costs.host_s
+
+
+DEFAULT_CONTENTION_MODEL = ContentionAwareCostModel()
+
+
 @dataclasses.dataclass
 class Comparison:
     """PreSto vs Disagg for one RM model at matched throughput T."""

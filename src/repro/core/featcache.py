@@ -80,6 +80,10 @@ class CacheStats:
     spilled_bytes: int = 0
     bytes_served: int = 0  # batch bytes returned by hits
     spill_io_s: float = 0.0  # modeled seconds of spill-tier byte movement
+    # device -> modeled seconds: spill residency is charged to each block's
+    # OWNING simulated device, not a global pot
+    spill_io_s_by_device: Dict[int, float] = dataclasses.field(default_factory=dict)
+    warm_started: int = 0  # blocks promoted into the LRU tier at boot
 
     @property
     def probes(self) -> int:
@@ -97,10 +101,13 @@ def default_spill_store(
     capacity_bytes: Optional[int] = None,
     root: Optional[str] = None,
     model=None,
+    fleet=None,
 ) -> CacheSpillStore:
     """A spill tier charged at the ISP placement cost model's stream rate —
     cache residency moves bytes on the same simulated devices, priced the
-    same way as the ISP units' own SSD->FPGA streams."""
+    same way as the ISP units' own SSD->FPGA streams.  Pass the service's
+    shared ``data.storage.DeviceFleet`` so spill traffic lands on the same
+    per-device ledgers partition reads and ISP compute charge."""
     from repro.core.costmodel import DEFAULT_PLACEMENT_MODEL  # lazy: no cycle
 
     model = model or DEFAULT_PLACEMENT_MODEL
@@ -109,6 +116,7 @@ def default_spill_store(
         capacity_bytes=capacity_bytes,
         bytes_per_s=model.isp_stream_bytes_per_s,
         root=root,
+        fleet=fleet,
     )
 
 
@@ -151,6 +159,70 @@ class FeatureCache:
         self._insertions = 0
         self._evictions = 0
         self._bytes_served = 0
+        self._warm_started = 0
+        self._warmed = False
+
+    def warm_start(self) -> int:
+        """Rebuild the LRU index from the spill tier's restart-survivable
+        blocks (newest first, up to the memory bound).
+
+        After a service restart the spill tier rescans its ``.npz`` blocks
+        from disk, but the memory tier starts cold; promoting the freshest
+        blocks back at boot means a restarted service serves bitwise-
+        identical hits without a single recompute.  Blocks past the memory
+        bound stay spilled — they still hit through the spill tier.  The
+        promotion I/O is real modeled byte movement (charged to each
+        block's owning device).  Idempotent per cache; returns the number
+        of blocks promoted."""
+        if self._warmed or self.spill is None or self.spill.root is None:
+            return 0
+        self._warmed = True
+        picked = []  # newest-first selection, bounded by the memory tier
+        budget = self.capacity_bytes
+        for block_id in reversed(self.spill.keys()):
+            parts = block_id.split("-", 2)
+            if len(parts) != 3:
+                continue  # foreign file in the spill root: not ours
+            key = CacheKey(*parts)
+            with self._lock:
+                if key in self._lru:
+                    continue
+            block = self.spill.read(block_id)
+            if block is None:
+                continue
+            nbytes = batch_nbytes(block)
+            if nbytes <= 0 or nbytes > budget:
+                break  # memory tier full: the rest stays spilled (hit-able)
+            budget -= nbytes
+            picked.append((key, block))
+        # insert OLDEST first so LRU recency matches block age: the newest
+        # block ends most-recently-used, never the first eviction victim
+        for key, block in reversed(picked):
+            self.put(key, block)
+        with self._lock:
+            self._warm_started = len(picked)
+        return len(picked)
+
+    def flush_spill(self) -> int:
+        """Write every memory-tier entry through to a ROOTED spill tier (the
+        restart checkpoint ``warm_start`` rebuilds from).  Content-addressed,
+        so blocks already spilled are skipped; returns blocks written.  The
+        service calls this on ``close()`` so a graceful shutdown leaves the
+        whole cache restart-survivable, not just the evicted part."""
+        if self.spill is None or self.spill.root is None:
+            return 0
+        with self._lock:
+            entries = [(k, b) for k, (b, _n) in self._lru.items()]
+        written = 0
+        for key, batch in entries:
+            block_id = key.block_id()
+            if block_id in self.spill:
+                continue
+            self.spill.write(
+                block_id, {k: np.asarray(v) for k, v in batch.items()}
+            )
+            written += 1
+        return written
 
     def __len__(self) -> int:
         with self._lock:
@@ -277,9 +349,13 @@ class FeatureCache:
                 entries=len(self._lru),
                 resident_bytes=self._resident,
                 bytes_served=self._bytes_served,
+                warm_started=self._warm_started,
             )
         if self.spill is not None:
             stats.spilled_entries = len(self.spill)
             stats.spilled_bytes = self.spill.resident_bytes
             stats.spill_io_s = self.spill.modeled_io_s
+            stats.spill_io_s_by_device = {
+                d: s for d, s in enumerate(self.spill.io_s_by_device) if s > 0.0
+            }
         return stats

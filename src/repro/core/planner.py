@@ -20,6 +20,13 @@ hit rate (``effective_demand_units``): batches served by the shared
 ``core.featcache.FeatureCache`` need no produce units, so hot jobs free
 capacity that rebalances to cold ones.
 
+Units are not fungible: each pool worker models an ISP unit bound to one
+storage device.  Passing a ``DeviceTopology`` (and per-job device weights —
+the fraction of each job's partitions every device owns) makes ``plan_pool``
+additionally provision PER DEVICE (``PoolPlan.device_shares``), so a job
+whose partitions concentrate on a hot device cannot starve another job's
+units on a cold one.
+
 Also reproduces the paper's *CPU-baseline* provisioning (Fig. 4): cores
 required = T / per-core-throughput, using per-RM per-core throughputs derived
 from the paper's published breakdown.
@@ -78,6 +85,54 @@ class AdmissionError(RuntimeError):
     """The shared pool cannot guarantee the 1-unit QoS floor for a new job."""
 
 
+@dataclasses.dataclass(frozen=True)
+class DeviceTopology:
+    """Which pool units are bound to which simulated ISP device.
+
+    The pool is not a fungible bag of workers: each unit is an ISP unit
+    bound to ONE storage device (`data.storage.IspDevice`), so provisioning
+    must be computed per device — a device's units can only serve partitions
+    resident there (or host-fallback work).  ``round_robin`` is the default
+    binding the service uses: worker i -> device i % num_devices.
+    """
+
+    units_per_device: Dict[int, int]
+
+    @staticmethod
+    def round_robin(num_units: int, num_devices: int) -> "DeviceTopology":
+        upd = {d: 0 for d in range(num_devices)}
+        for i in range(num_units):
+            upd[i % num_devices] += 1
+        return DeviceTopology(upd)
+
+    @property
+    def total_units(self) -> int:
+        return sum(self.units_per_device.values())
+
+    @property
+    def manned(self) -> set:
+        """Devices with at least one bound unit.  Partitions owned by an
+        unmanned device have no local ISP unit at all — they are always
+        host-fallback eligible."""
+        return {d for d, u in self.units_per_device.items() if u > 0}
+
+
+def _largest_remainder(units: int, weights: Dict[str, float]) -> Dict[str, int]:
+    """Split `units` across keys proportionally to non-negative weights."""
+    total = sum(weights.values())
+    if units <= 0 or total <= 0:
+        return {j: 0 for j in weights}
+    quotas = {j: units * w / total for j, w in weights.items()}
+    out = {j: math.floor(q) for j, q in quotas.items()}
+    left = units - sum(out.values())
+    for j in sorted(weights, key=lambda j: quotas[j] - out[j], reverse=True):
+        if left <= 0:
+            break
+        out[j] += 1
+        left -= 1
+    return out
+
+
 @dataclasses.dataclass
 class PoolPlan:
     """Unit allocation of one shared worker/ISP pool across admitted jobs.
@@ -86,18 +141,28 @@ class PoolPlan:
     hint); ``shares`` is what the pool actually grants: every admitted job is
     guaranteed one unit (the admission floor), and surplus capacity is split
     proportionally to residual demand, never exceeding a job's demand.
+
+    With a ``DeviceTopology``, ``device_shares`` additionally splits each
+    device's bound units across jobs proportionally to each job's demand ON
+    THAT DEVICE (its effective demand weighted by the fraction of its
+    partitions the device owns) — so a job whose partitions all sit on a hot
+    device cannot starve another job's units on a cold one.
     """
 
     capacity: int
     demand_units: Dict[str, int]
     shares: Dict[str, int]
     effective_demand: Optional[Dict[str, int]] = None  # after hit-rate discount
+    device_shares: Optional[Dict[int, Dict[str, int]]] = None  # device -> job -> units
 
     @property
     def oversubscribed(self) -> bool:
         """True when aggregate demand exceeds the pool — jobs run degraded."""
         demands = self.effective_demand or self.demand_units
         return sum(demands.values()) > self.capacity
+
+    def device_utilized_units(self, device: int) -> int:
+        return sum((self.device_shares or {}).get(device, {}).values())
 
 
 def effective_demand_units(demand: int, hit_rate: float) -> int:
@@ -113,6 +178,9 @@ def plan_pool(
     capacity: int,
     demand_units: Dict[str, int],
     hit_rates: Optional[Dict[str, float]] = None,
+    *,
+    topology: Optional[DeviceTopology] = None,
+    device_weights: Optional[Dict[str, Dict[int, float]]] = None,
 ) -> PoolPlan:
     """Admission control + per-job unit allocation for a shared pool.
 
@@ -125,6 +193,14 @@ def plan_pool(
     job's demand via ``effective_demand_units`` before allocation: a job
     whose partitions mostly arrive from the shared cache needs fewer produce
     units, so the surplus it frees rebalances to cold jobs.
+
+    ``topology`` (which units are bound to which ISP device) switches on
+    per-device provisioning: each device's units are split across jobs by
+    largest remainder over ``effective demand x device weight``, where
+    ``device_weights[job][device]`` is the fraction of the job's partitions
+    that device owns (jobs without weights — e.g. produce_fn test hooks with
+    no store — spread uniformly).  The per-device split is what isolates a
+    cold device's jobs from a hot device's backlog.
     """
     if len(demand_units) > capacity:
         raise AdmissionError(
@@ -155,7 +231,18 @@ def plan_pool(
             if shares[j] < demands[j]:
                 shares[j] += 1
                 leftover -= 1
-    return PoolPlan(capacity, dict(demand_units), shares, effective)
+    device_shares = None
+    if topology is not None:
+        ndev = max(len(topology.units_per_device), 1)
+        device_shares = {}
+        for d, units in sorted(topology.units_per_device.items()):
+            w = {}
+            for j in demands:
+                jw = (device_weights or {}).get(j)
+                frac = jw.get(d, 0.0) if jw is not None else 1.0 / ndev
+                w[j] = demands[j] * frac
+            device_shares[d] = _largest_remainder(units, w)
+    return PoolPlan(capacity, dict(demand_units), shares, effective, device_shares)
 
 
 def measure_throughput(

@@ -161,6 +161,22 @@ class PreStoEngine:
         h.update(json.dumps(sorted(self.family_placements.items())).encode())
         return h.hexdigest()[:16]
 
+    def route_costs(self, rows: Optional[int] = None, model=None):
+        """Whole-partition cost summary for the device-aware claim router.
+
+        One ``costmodel.PartitionCosts`` per (engine, rows): modeled seconds
+        on an idle ISP unit vs the host path, plus the ops and link bytes the
+        device/host ledgers charge per produce.  Routing consumes these — it
+        never changes the produced bytes."""
+        from repro.core.costmodel import (  # local: costmodel is downstream
+            DEFAULT_PLACEMENT_MODEL,
+            partition_costs,
+        )
+
+        return partition_costs(
+            self.spec, rows, model if model is not None else DEFAULT_PLACEMENT_MODEL
+        )
+
     # -- single-shard (local) path -------------------------------------------
     def preprocess_local(self, pages: Dict[str, jax.Array]) -> MiniBatch:
         return self.lowered_plan.execute(pages)

@@ -35,6 +35,13 @@ trainer.  This module is that public surface:
   demand is discounted by its observed hit rate, freeing units for cold
   jobs.  Jobs opt out per-``JobSpec`` (``use_cache=False``); produce_fn
   overrides are never cached (opaque identity).
+* With ``PreprocessingService(devices=DeviceFleet(...))`` the pool's units
+  are bound to the simulated storage devices and scheduling becomes
+  device-aware: claims prefer the ISP unit of the partition's OWNING device
+  and fall back to host placement only when the owning device's live queue
+  prices the ISP path past the host path (contention-aware cost model).
+  Routing never changes batch bytes — only where/when they are produced —
+  so every bitwise-identity guarantee above survives skewed placements.
 """
 
 from __future__ import annotations
@@ -48,9 +55,11 @@ from concurrent.futures import TimeoutError as FutureTimeoutError
 from queue import Empty
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple, Union
 
+from repro.core.costmodel import ContentionAwareCostModel, PartitionCosts
 from repro.core.featcache import CacheKey, FeatureCache
 from repro.core.planner import (
     AdmissionError,
+    DeviceTopology,
     PoolPlan,
     effective_demand_units,
     plan_pool,
@@ -58,10 +67,11 @@ from repro.core.planner import (
 from repro.core.presto import PreStoEngine
 from repro.core.spec import TransformSpec
 from repro.data.loader import SessionQueue
-from repro.data.storage import PartitionedStore
+from repro.data.storage import DeviceFleet, IspDevice, PartitionedStore
 
 __all__ = [
     "AdmissionError",
+    "DeviceFleet",
     "FeatureCache",
     "JobSpec",
     "PreprocessingService",
@@ -150,6 +160,10 @@ class SessionStats:
     worker_samples_per_s: float = 0.0  # measured per-worker P
     cancelled: bool = False
     done: bool = False
+    host_fallbacks: int = 0  # fresh claims routed off their owning device
+    # device -> winner produces that ran ON that device (ISP route); the
+    # skew surface: a hot device's count dwarfs the cold ones' under Zipf
+    device_produced: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def achieved_samples_per_s(self) -> float:
@@ -190,16 +204,35 @@ class Session:
         self._cache_key = (
             job.cache_key_fn(self.engine) if self._cache is not None else None
         )
+        # -- device routing (fleet-backed services with a store-bound job) --
+        self._fleet = service.fleet
+        self._owner_of: Optional[Callable[[int], int]] = None
+        self._costs: Optional[PartitionCosts] = None
+        if self._fleet is not None and job.store is not None:
+            store, ndev = job.store, len(self._fleet)
+            self._owner_of = lambda pid: store.owner_of(pid) % ndev
+            if self.engine is not None:
+                # price the partitions the store ACTUALLY serves: a sourced
+                # store's row count overrides the spec's default geometry
+                rows = getattr(store.source, "rows", None)
+                self._costs = self.engine.route_costs(
+                    rows=rows, model=service.cost_model
+                )
         self._queue = SessionQueue(
             job.partitions,
             depth=job.queue_depth,
             straggler_timeout=job.straggler_timeout,
             lookup=self._cache_probe if self._cache_key is not None else None,
+            owner_of=self._owner_of,
+            fallback_ok=self._host_ok if self._owner_of is not None else None,
+            on_settled=self._release_backlog if self._owner_of is not None else None,
+            on_offload=self._on_offload if self._owner_of is not None else None,
         )
         self.total = self._queue.total
         # guarded by service._lock:
         self.share = 0
         self._active_workers = 0
+        self._active_by_dev: Dict[int, int] = {}  # worker device -> active
         self._demand = max(1, job.units or 1)
         # guarded by self._slock:
         self._slock = threading.Lock()
@@ -215,6 +248,25 @@ class Session:
         self._cache_keys: Dict[int, CacheKey] = {}  # pid -> key, probe->produce
         self._eff_demand = self._demand  # last hit-rate-discounted demand
         self._p_est: Optional[float] = None
+        self._device_produced: Dict[int, int] = {}  # ISP-route winner counts
+        # device backlog: every partition is bound to its owning device until
+        # it completes or is offloaded to the host — the live queue_depth the
+        # contention-aware router reads.  _backlogged makes release idempotent
+        # (a pid can be both offloaded and later completed).
+        self._backlogged: set = set()
+        self.device_weights: Optional[Dict[int, float]] = None
+        if self._owner_of is not None:
+            pids = list(self._queue.work._pending)  # pre-start: single-threaded
+            counts: Dict[int, int] = {}
+            for pid in pids:
+                counts[self._owner_of(pid)] = counts.get(self._owner_of(pid), 0) + 1
+            if pids:
+                self.device_weights = {
+                    d: c / len(pids) for d, c in counts.items()
+                }
+            self._backlogged = set(pids)
+            for d, c in counts.items():
+                self._fleet[d].enqueue(c)
         self._t0 = time.perf_counter()
         self._t_end: Optional[float] = None
 
@@ -353,6 +405,8 @@ class Session:
                 worker_samples_per_s=self._p_est or 0.0,
                 cancelled=self.cancelled,
                 done=self._delivered >= self.total,
+                host_fallbacks=self._queue.host_fallbacks,
+                device_produced=dict(self._device_produced),
             )
 
     def _check_liveness(self) -> None:
@@ -363,6 +417,57 @@ class Session:
                 f"preprocessing service closed with {undelivered} batches "
                 f"undelivered for job {self.name!r}"
             )
+
+    # -- device routing --------------------------------------------------------
+
+    def _host_ok(self, pid: int) -> bool:
+        """Fallback eligibility for a foreign claim of `pid`: its owning
+        device has no bound unit at all, or the contention-aware cost model
+        says the live queue has priced the ISP path past the host path.
+        The candidate itself is still in the device's backlog, so the wait
+        it would experience is behind the OTHER queued claims."""
+        owner = self._owner_of(pid)
+        if owner not in self._service._manned:
+            return True
+        return self._service.cost_model.should_offload(
+            self._costs, self._fleet[owner].queue_depth - 1
+        )
+
+    def _release_backlog(self, pid: int) -> None:
+        """`pid` stopped waiting on its owning device (completed, errored,
+        served by the cache, or offloaded to the host).  Idempotent."""
+        with self._slock:
+            present = pid in self._backlogged
+            self._backlogged.discard(pid)
+        if present:
+            self._fleet[self._owner_of(pid)].dequeue()
+
+    def _on_offload(self, pid: int) -> None:
+        """A fresh claim of `pid` was routed to the host: the owning device
+        stops waiting on it and records the shed."""
+        self._fleet[self._owner_of(pid)].shed()
+        self._release_backlog(pid)
+
+    def _release_all_backlog(self) -> None:
+        with self._slock:
+            pids = list(self._backlogged)
+            self._backlogged.clear()
+        for pid in pids:
+            self._fleet[self._owner_of(pid)].dequeue()
+
+    def _route_begin(self, pid: int, route: Optional[str]) -> Optional[IspDevice]:
+        """An ISP-routed produce occupies the owning device for its duration
+        (the in-flight ceiling ``tests/test_devices.py`` pins)."""
+        if route == "isp" and self._owner_of is not None:
+            dev = self._fleet[self._owner_of(pid)]
+            dev.begin_claim()
+            return dev
+        return None
+
+    @staticmethod
+    def _route_end(dev: Optional[IspDevice]) -> None:
+        if dev is not None:
+            dev.end_claim()
 
     # -- pool-worker side ------------------------------------------------------
 
@@ -409,7 +514,17 @@ class Session:
         with self._slock:
             return self._hit_rate_locked()
 
-    def _on_produced(self, pid: int, batch: Any, dt: float) -> None:
+    def _on_produced(
+        self, pid: int, batch: Any, dt: float, route: Optional[str] = None
+    ) -> None:
+        # the produce consumed real modeled resources wherever it ran —
+        # winner or straggler duplicate alike (the work happened); the batch
+        # BYTES are identical either way, only the ledgers differ
+        if route is not None and self._costs is not None:
+            if route == "isp":
+                self._fleet[self._owner_of(pid)].charge_compute(self._costs.ops)
+            else:
+                self._fleet.charge_host(self._costs.link_bytes, self._costs.ops)
         winner = self._queue.complete(pid, batch)
         if winner and self._cache_key is not None:
             # winner-only pop: a straggler loser racing here must not steal
@@ -433,6 +548,11 @@ class Session:
                 self._duplicates += 1
             else:
                 self._produced += 1
+                if route == "isp" and self._owner_of is not None:
+                    owner = self._owner_of(pid)
+                    self._device_produced[owner] = (
+                        self._device_produced.get(owner, 0) + 1
+                    )
                 if rows and dt > 0:
                     p = rows / dt
                     self._p_est = p if self._p_est is None else 0.5 * self._p_est + 0.5 * p
@@ -475,6 +595,17 @@ class PreprocessingService:
     (QoS isolation), pass 2 is work-conserving (idle units serve any
     claimable session).  Backpressure is per-session (``SessionQueue``), so
     one slow consumer never idles the pool.
+
+    With ``devices`` (a ``data.storage.DeviceFleet`` or a device count) the
+    pool is no longer a fungible bag: each worker is an ISP unit bound to
+    one device (round-robin), claims become locality-aware — a worker
+    prefers partitions its own device owns, and takes a foreign partition
+    only when the owning device's live queue prices the ISP path past the
+    host path (``cost_model.should_offload``) or that device has no bound
+    unit.  Foreign produces are HOST-fallback produces: same bytes, charged
+    to the fleet's host ledger (link + host compute) instead of the device.
+    ``locality=False`` keeps the fleet's ledgers but schedules blind (the
+    round-robin baseline the skew bench compares against).
     """
 
     def __init__(
@@ -483,10 +614,35 @@ class PreprocessingService:
         *,
         cache: Optional[FeatureCache] = None,
         start: bool = True,
+        devices: Optional[Union[int, DeviceFleet]] = None,
+        locality: bool = True,
+        cost_model: Optional[ContentionAwareCostModel] = None,
     ):
         assert num_workers >= 1, "pool needs at least one worker"
         self.num_workers = num_workers
         self.cache = cache  # ONE shared feature cache across every tenant
+        self.locality = locality
+        self.cost_model = cost_model or ContentionAwareCostModel()
+        if isinstance(devices, int):
+            # budgets from the SAME model that prices routing decisions, so
+            # the ledgers charge at the rates should_offload predicts with
+            devices = (
+                DeviceFleet.from_cost_model(devices, self.cost_model)
+                if devices > 0 else None
+            )
+        self.fleet: Optional[DeviceFleet] = devices
+        if self.fleet is not None:
+            self._topology: Optional[DeviceTopology] = DeviceTopology.round_robin(
+                num_workers, len(self.fleet)
+            )
+            self._manned = self._topology.manned
+            self._worker_device: List[Optional[int]] = [
+                i % len(self.fleet) for i in range(num_workers)
+            ]
+        else:
+            self._topology = None
+            self._manned = set()
+            self._worker_device = [None] * num_workers
         self._sessions: List[Session] = []
         self._lock = threading.RLock()
         self._stop = threading.Event()
@@ -494,8 +650,15 @@ class PreprocessingService:
         self._rr = 0
         self._replan = False  # a session's hit-rate-discounted demand moved
         self.plan: Optional[PoolPlan] = None
+        if cache is not None:
+            # feature-cache warm start: promote restart-survivable spilled
+            # blocks back into the memory tier before any worker runs
+            cache.warm_start()
         self._threads = [
-            threading.Thread(target=self._worker_loop, daemon=True, name=f"presto-pool-{i}")
+            threading.Thread(
+                target=self._worker_loop, args=(i,), daemon=True,
+                name=f"presto-pool-{i}",
+            )
             for i in range(num_workers)
         ]
         self._started = False
@@ -525,15 +688,32 @@ class PreprocessingService:
             self._wake_cv.notify_all()
 
     def close(self) -> None:
-        """Stop the pool.  Sessions still streaming see a RuntimeError."""
+        """Stop the pool.  Sessions still streaming see a RuntimeError.
+        A rooted spill tier gets the memory tier flushed through to it so a
+        restarted service can ``warm_start`` from the full cache."""
         self._stop.set()
         self._wake()
         me = threading.current_thread()
         for t in self._threads:
             if t.is_alive() and t is not me:
                 t.join(timeout=5.0)
+        if self.cache is not None:
+            self.cache.flush_spill()  # no-op without a rooted spill tier
 
     # -- job lifecycle ---------------------------------------------------------
+
+    def _device_weights(self, extra: Optional[Session] = None):
+        """Per-job device-demand weights for the planner (fleet pools only)."""
+        if self._topology is None:
+            return None
+        sessions = list(self._sessions)
+        if extra is not None and extra not in sessions:
+            sessions.append(extra)
+        return {
+            s.name: s.device_weights
+            for s in sessions
+            if s.device_weights is not None
+        } or None
 
     def submit(self, job: JobSpec) -> Session:
         """Admit a job and return its Session (raises AdmissionError)."""
@@ -545,8 +725,16 @@ class PreprocessingService:
             demands = {s.name: s._demand for s in self._sessions}
             demands[job.name] = max(1, job.units or 1)
             rates = {s.name: s._hit_rate() for s in self._sessions}
-            plan = plan_pool(self.num_workers, demands, rates)  # admission
-            session = Session(self, job)
+            session = Session(self, job)  # binds device backlog on the fleet
+            try:
+                plan = plan_pool(  # admission
+                    self.num_workers, demands, rates,
+                    topology=self._topology,
+                    device_weights=self._device_weights(session),
+                )
+            except AdmissionError:
+                session._release_all_backlog()  # rejected: unbind its backlog
+                raise
             self._sessions.append(session)
             self._apply(plan)
         self._wake()
@@ -559,6 +747,17 @@ class PreprocessingService:
                 "active_jobs": [s.name for s in self._sessions],
                 "shares": dict(self.plan.shares) if self.plan else {},
                 "oversubscribed": bool(self.plan and self.plan.oversubscribed),
+            }
+            if self.plan is not None and self.plan.device_shares is not None:
+                out["device_shares"] = {
+                    d: dict(js) for d, js in self.plan.device_shares.items()
+                }
+        if self.fleet is not None:
+            out["devices"] = self.fleet.utilization()
+            out["host"] = {
+                "busy_s": self.fleet.host_busy_s,
+                "link_bytes": self.fleet.host_link_bytes,
+                "produces": self.fleet.host_produces,
             }
         if self.cache is not None:
             out["cache"] = self.cache.stats()
@@ -581,10 +780,16 @@ class PreprocessingService:
             self._replan = False
             demands = {s.name: s._demand for s in self._sessions}
             rates = {s.name: s._hit_rate() for s in self._sessions}
-            self._apply(plan_pool(self.num_workers, demands, rates))
+            self._apply(plan_pool(
+                self.num_workers, demands, rates,
+                topology=self._topology,
+                device_weights=self._device_weights(),
+            ))
 
     def _retire(self, session: Session) -> None:
         """Drop a finished/cancelled session from scheduling and rebalance."""
+        if session._owner_of is not None:
+            session._release_all_backlog()  # cancelled leftovers unbind
         with self._lock:
             if session in self._sessions:
                 self._sessions.remove(session)
@@ -593,14 +798,30 @@ class PreprocessingService:
 
     # -- the pool --------------------------------------------------------------
 
-    def _next_task(self) -> Optional[Tuple[Session, Tuple[int, Future]]]:
+    def _release_slot(self, sess: Session, wdev: Optional[int]) -> None:
+        with self._lock:
+            sess._active_workers -= 1
+            if wdev is not None:
+                sess._active_by_dev[wdev] = sess._active_by_dev.get(wdev, 1) - 1
+
+    def _next_task(
+        self, wdev: Optional[int] = None
+    ) -> Optional[Tuple[Session, Tuple[int, Future, Optional[str]]]]:
         """Two-pass round-robin claim.  The claim itself — which may probe
         the feature cache, hash a disk partition's bytes, or read a spilled
         block — runs OUTSIDE the service lock: the worker reserves its
         session slot first (so shares stay enforced while it probes) and
-        releases it if the claim comes back empty."""
+        releases it if the claim comes back empty.
+
+        ``wdev`` is the worker's bound device.  Pass 1 additionally enforces
+        the plan's per-device shares (a hot device's job cannot occupy a
+        cold device's units past its slice); pass 2 stays work-conserving.
+        With ``locality`` on, the claim prefers partitions the worker's own
+        device owns and may take foreign ones only via host fallback.
+        """
         if self._replan:
             self._rebalance()  # pick up hit-rate-discounted demand shifts
+        prefer = wdev if (self.locality and wdev is not None) else None
         for enforce_share in (True, False):
             with self._lock:
                 n = len(self._sessions)
@@ -611,11 +832,24 @@ class PreprocessingService:
                         continue
                     if enforce_share and sess._active_workers >= max(sess.share, 1):
                         continue
+                    if (
+                        enforce_share
+                        and wdev is not None
+                        and self.plan is not None
+                        and self.plan.device_shares is not None
+                        and sess._owner_of is not None
+                    ):
+                        cap = self.plan.device_shares.get(wdev, {}).get(sess.name, 0)
+                        if sess._active_by_dev.get(wdev, 0) >= cap:
+                            continue  # this device's slice is spoken for
                     sess._active_workers += 1  # reserve before the claim
-                claimed = sess._queue.claim()
+                    if wdev is not None:
+                        sess._active_by_dev[wdev] = (
+                            sess._active_by_dev.get(wdev, 0) + 1
+                        )
+                claimed = sess._queue.claim(prefer_device=prefer)
                 if claimed is None:
-                    with self._lock:
-                        sess._active_workers -= 1
+                    self._release_slot(sess, wdev)
                     continue
                 with self._lock:
                     self._rr = (self._rr + i + 1) % max(n, 1)
@@ -630,9 +864,10 @@ class PreprocessingService:
         for s in finished:
             self._retire(s)
 
-    def _worker_loop(self) -> None:
+    def _worker_loop(self, idx: int) -> None:
+        wdev = self._worker_device[idx]
         while not self._stop.is_set():
-            task = self._next_task()
+            task = self._next_task(wdev)
             if task is None:
                 self._prune()
                 # idle: sleep until nudged (submit / freed slot / pacing
@@ -640,17 +875,18 @@ class PreprocessingService:
                 with self._wake_cv:
                     self._wake_cv.wait(timeout=0.05)
                 continue
-            sess, (pid, _fut) = task
+            sess, (pid, _fut, route) = task
+            dev = sess._route_begin(pid, route)  # device occupancy, ISP route
             t0 = time.perf_counter()
             try:
                 batch = sess._produce_fn(pid)
             except BaseException as exc:  # noqa: BLE001 — consumer re-raises
                 sess._on_produce_error(pid, exc)
             else:
-                sess._on_produced(pid, batch, time.perf_counter() - t0)
+                sess._on_produced(pid, batch, time.perf_counter() - t0, route)
             finally:
-                with self._lock:
-                    sess._active_workers -= 1
+                sess._route_end(dev)
+                self._release_slot(sess, wdev)
                 if sess._queue.exhausted:
                     self._retire(sess)
                 self._wake()  # a share slot freed (or the job just finished)

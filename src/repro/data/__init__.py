@@ -16,13 +16,22 @@ from repro.data.columnar import (
     encode_partition,
 )
 from repro.data.synth import RawBatch, SyntheticRecSysSource, make_rm_source
-from repro.data.storage import PartitionedStore
+from repro.data.storage import (
+    CacheSpillStore,
+    DeviceFleet,
+    IspDevice,
+    PartitionedStore,
+    zipf_owner_map,
+)
 from repro.data.loader import PrefetchLoader, SessionQueue, WorkQueue
 from repro.data.tokens import TokenSynthesizer, lm_input_batch
 
 __all__ = [
+    "CacheSpillStore",
     "ColumnSchema",
+    "DeviceFleet",
     "EncodedColumn",
+    "IspDevice",
     "Partition",
     "PartitionSchema",
     "PartitionedStore",
@@ -32,6 +41,7 @@ __all__ = [
     "SyntheticRecSysSource",
     "TokenSynthesizer",
     "WorkQueue",
+    "zipf_owner_map",
     "bitpack",
     "bitunpack",
     "bytesplit_decode",

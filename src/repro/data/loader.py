@@ -20,6 +20,12 @@ Two delivery mechanisms sit on top of ``WorkQueue``:
   on a slow consumer.  An optional ``lookup`` hook (the shared
   ``core.featcache.FeatureCache`` probe) short-circuits claims whose batch
   is already cached: the future resolves without a produce.
+
+Both queues are device-aware when given an ``owner_of`` mapping: claims
+prefer partitions owned by the claimer's own ISP device and fall back to
+host placement only when the caller's ``fallback_ok`` predicate admits it
+(see ``core.service`` for the contention-aware policy).  Routing never
+changes batch bytes — only where/when they are produced.
 """
 
 from __future__ import annotations
@@ -33,9 +39,23 @@ from typing import Any, Callable, Deque, Dict, Iterable, Optional, Tuple
 
 
 class WorkQueue:
-    """Partition work queue with straggler re-issue (backup tasks)."""
+    """Partition work queue with straggler re-issue (backup tasks).
 
-    def __init__(self, partition_ids: Iterable[int], straggler_timeout: float = 30.0):
+    With an ``owner_of`` mapping (pid -> storage device), claims become
+    locality-aware: a claimer may prefer partitions owned by ITS device
+    (``prefer_device``) and take foreign partitions only when the caller's
+    ``fallback_ok`` predicate admits them (typically: the owning device's
+    queue is past the host-fallback threshold, or the device has no bound
+    unit at all).  FIFO order is preserved within each preference class.
+    """
+
+    def __init__(
+        self,
+        partition_ids: Iterable[int],
+        straggler_timeout: float = 30.0,
+        *,
+        owner_of: Optional[Callable[[int], int]] = None,
+    ):
         # dedup, order-preserving: a repeated pid would complete once and then
         # be dropped as a straggler duplicate, stranding its consumer forever
         self._pending: Deque[int] = collections.deque(dict.fromkeys(partition_ids))
@@ -43,6 +63,7 @@ class WorkQueue:
         self._done: set[int] = set()
         self._lock = threading.Lock()
         self.straggler_timeout = straggler_timeout
+        self.owner_of = owner_of
         self.reissues = 0
         self.total = len(self._pending)  # distinct partitions at creation
 
@@ -51,18 +72,57 @@ class WorkQueue:
         with self._lock:
             return len(self._pending) + len(self._inflight)
 
-    def claim(self, *, reissue_only: bool = False) -> Optional[int]:
+    def _take_first(self, pred: Callable[[int], bool]) -> Optional[int]:
+        """Pop the first pending pid matching `pred` (FIFO within class)."""
+        for i, pid in enumerate(self._pending):
+            if pred(pid):
+                del self._pending[i]
+                return pid
+        return None
+
+    def claim(
+        self,
+        *,
+        reissue_only: bool = False,
+        prefer_device: Optional[int] = None,
+        fallback_ok: Optional[Callable[[int], bool]] = None,
+    ) -> Optional[int]:
         """Claim a partition; FIFO over pending, then straggler re-issue.
 
         ``reissue_only=True`` skips fresh claims (used by backpressured
         sessions: no new work may start, but an overdue straggler may still
         be backed up so the stream's head future always resolves).
+
+        ``prefer_device`` (with an ``owner_of`` bound) restricts fresh
+        claims to that device's own partitions, then to partitions
+        ``fallback_ok`` admits; a foreign partition neither local nor
+        fallback-eligible is left for its own device's unit.  Straggler
+        re-issue ignores locality — liveness beats placement.
         """
         with self._lock:
             if self._pending and not reissue_only:
-                pid = self._pending.popleft()
-                self._inflight[pid] = time.monotonic()
-                return pid
+                if prefer_device is None or self.owner_of is None:
+                    pid: Optional[int] = self._pending.popleft()
+                else:
+                    owner = self.owner_of
+                    pid = self._take_first(lambda p: owner(p) == prefer_device)
+                    if pid is None and fallback_ok is not None:
+                        # the offload verdict depends only on the OWNING
+                        # device (manned? queue past threshold?), so cache
+                        # it per device for this scan instead of re-pricing
+                        # every pending pid under the lock
+                        verdicts: Dict[int, bool] = {}
+
+                        def _ok(p: int) -> bool:
+                            d = owner(p)
+                            if d not in verdicts:
+                                verdicts[d] = bool(fallback_ok(p))
+                            return verdicts[d]
+
+                        pid = self._take_first(_ok)
+                if pid is not None:
+                    self._inflight[pid] = time.monotonic()
+                    return pid
             # steal: re-issue the longest-overdue inflight partition
             now = time.monotonic()
             overdue = [
@@ -113,8 +173,12 @@ class SessionQueue:
         depth: int = 4,
         straggler_timeout: float = 30.0,
         lookup: Optional[Callable[[int, bool], Any]] = None,
+        owner_of: Optional[Callable[[int], int]] = None,
+        fallback_ok: Optional[Callable[[int], bool]] = None,
+        on_settled: Optional[Callable[[int], None]] = None,
+        on_offload: Optional[Callable[[int], None]] = None,
     ):
-        self.work = WorkQueue(partition_ids, straggler_timeout)
+        self.work = WorkQueue(partition_ids, straggler_timeout, owner_of=owner_of)
         self.depth = depth
         self.out: "queue.Queue[Future]" = queue.Queue()
         self._futures: Dict[int, Future] = {}  # claimed, not yet completed
@@ -130,9 +194,25 @@ class SessionQueue:
         # ever receives a pid that actually needs a produce.
         self.lookup = lookup
         self.short_circuits = 0
+        # device routing: owner_of maps pid -> owning device, fallback_ok
+        # admits foreign pids (queue past threshold / unmanned device),
+        # on_settled(pid) fires once per pid on winner completion (backlog
+        # release), on_offload(pid) fires when a fresh claim is routed to
+        # the host (the pid stops waiting on its device)
+        self.fallback_ok = fallback_ok
+        self.on_settled = on_settled
+        self.on_offload = on_offload
+        self.host_fallbacks = 0  # fresh claims routed off their device
 
-    def claim(self) -> Optional[Tuple[int, Future]]:
-        """Pool-worker side: claim (pid, future), or None if nothing to do.
+    def claim(
+        self, prefer_device: Optional[int] = None
+    ) -> Optional[Tuple[int, Future, Optional[str]]]:
+        """Pool-worker side: claim (pid, future, route), or None if idle.
+
+        ``route`` is ``None`` (no device routing), ``"isp"`` (produce on the
+        pid's owning device) or ``"host"`` (host-fallback produce: pages over
+        the link, compute off-device).  Routing NEVER changes the produced
+        bytes — only where/when they are accounted.
 
         With a ``lookup`` bound, every claimed pid is probed first: cached
         claims complete immediately, claims whose content another tenant is
@@ -146,7 +226,11 @@ class SessionQueue:
                 if self.cancelled.is_set():
                     return None
                 backpressured = self._created - self._delivered >= self.depth
-                pid = self.work.claim(reissue_only=backpressured)
+                pid = self.work.claim(
+                    reissue_only=backpressured,
+                    prefer_device=prefer_device,
+                    fallback_ok=self.fallback_ok,
+                )
                 if pid is None:
                     return None
                 fut = self._futures.get(pid)
@@ -157,6 +241,11 @@ class SessionQueue:
                     self._futures[pid] = fut
                     self._created += 1
                     self.out.put(fut)
+            route: Optional[str] = None
+            if self.work.owner_of is not None:
+                owner = self.work.owner_of(pid)
+                local = prefer_device is None or owner == prefer_device
+                route = "isp" if local else "host"
             if self.lookup is not None:
                 try:
                     found = self.lookup(pid, fresh)
@@ -170,7 +259,14 @@ class SessionQueue:
                         with self._lock:
                             self.short_circuits += 1
                     continue
-            return pid, fut
+            if fresh and route == "host":
+                # counted only for claims that actually reach a produce —
+                # a cache short-circuit above needs no fallback at all
+                with self._lock:
+                    self.host_fallbacks += 1
+                if self.on_offload is not None:
+                    self.on_offload(pid)
+            return pid, fut, route
 
     def _pend(self, pid: int, donor: Future) -> None:
         """Resolve `pid` from another tenant's in-flight produce of the same
@@ -201,6 +297,7 @@ class SessionQueue:
         """First completion wins and resolves the future; duplicates dropped."""
         if not self.work.complete(pid):
             return False
+        self._settle(pid)
         with self._lock:
             # drop our reference: once delivered, the batch's lifetime is the
             # consumer's (memory stays bounded by depth, not job size)
@@ -212,10 +309,20 @@ class SessionQueue:
         """Propagate a producer failure to the consumer (winner-only)."""
         if not self.work.complete(pid):
             return False
+        self._settle(pid)
         with self._lock:
             fut = self._futures.pop(pid)
         fut.set_exception(exc)
         return True
+
+    def _settle(self, pid: int) -> None:
+        """Winner-only settle hook (device backlog release); never lets an
+        accounting callback break the delivery path."""
+        if self.on_settled is not None:
+            try:
+                self.on_settled(pid)
+            except Exception:
+                pass
 
     @property
     def exhausted(self) -> bool:

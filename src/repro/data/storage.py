@@ -20,14 +20,236 @@ petabytes.
 from __future__ import annotations
 
 import hashlib
+import math
 import os
 import threading
-from typing import Callable, Dict, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
 from repro.data.columnar import Partition, read_partition, write_partition
 from repro.data.synth import SyntheticRecSysSource
+
+
+class IspDevice:
+    """One simulated in-storage processing unit: the schedulable resource.
+
+    A device has an identity, rate budgets (SSD->FPGA stream rate, ISP compute
+    roofline — defaults mirror ``core.costmodel.PlacementCostModel``), and an
+    occupancy ledger.  Everything that touches the device charges the SAME
+    ledger: partition reads (``PartitionedStore.read``), spill-tier traffic
+    (``CacheSpillStore``), and ISP-routed Transform compute
+    (``core.service``) all contend for the one modeled unit.  ``busy_s``
+    serializes stream and compute seconds (a SmartSSD's FPGA streams pages,
+    then runs the chain), which is the pessimistic end of the roofline the
+    cost model prices with ``max(...)`` — good enough to rank devices.
+
+    ``queue_depth`` is the scheduling signal: partitions bound to this device
+    that have not yet completed (or been offloaded to a host worker).  The
+    locality-aware claim path reads it live to decide host fallback.
+    Thread-safe; counters are read without the lock (point-in-time reads of
+    ints are fine for scheduling heuristics).
+    """
+
+    def __init__(
+        self,
+        device_id: int,
+        *,
+        stream_bytes_per_s: float = 8e9,
+        compute_ops_per_s: float = 5e9,
+    ):
+        self.device_id = device_id
+        self.stream_bytes_per_s = stream_bytes_per_s
+        self.compute_ops_per_s = compute_ops_per_s
+        self._lock = threading.Lock()
+        self.bytes_streamed = 0  # partition reads + spill blocks, one stream
+        self.spill_bytes = 0  # subset of bytes_streamed owed to the cache tier
+        self.compute_ops = 0.0  # ISP-routed Transform ops run on this unit
+        self.busy_s = 0.0  # modeled occupancy: stream + compute, serialized
+        self.spill_io_s = 0.0  # subset of busy_s owed to the spill tier
+        self.queue_depth = 0  # bound partitions not yet completed/offloaded
+        self.inflight = 0  # claims executing on this unit right now
+        self.max_inflight = 0  # high-water mark of `inflight`
+        self.isp_claims = 0  # produces that ran here (locality or blind)
+        self.host_fallbacks = 0  # claims this device shed to the host path
+
+    # -- ledger ----------------------------------------------------------------
+    def charge_stream(self, nbytes: int, *, spill: bool = False) -> float:
+        """Move `nbytes` through the SSD->FPGA stream; returns modeled s."""
+        dt = nbytes / self.stream_bytes_per_s
+        with self._lock:
+            self.bytes_streamed += int(nbytes)
+            self.busy_s += dt
+            if spill:
+                self.spill_bytes += int(nbytes)
+                self.spill_io_s += dt
+        return dt
+
+    def charge_compute(self, ops: float) -> float:
+        """Run `ops` abstract Transform ops on the unit; returns modeled s."""
+        dt = ops / self.compute_ops_per_s
+        with self._lock:
+            self.compute_ops += ops
+            self.busy_s += dt
+        return dt
+
+    # -- occupancy -------------------------------------------------------------
+    def enqueue(self, n: int = 1) -> None:
+        """`n` more partitions are bound to this device (backlog grows)."""
+        with self._lock:
+            self.queue_depth += n
+
+    def dequeue(self, n: int = 1) -> None:
+        """`n` bound partitions completed or were offloaded to the host."""
+        with self._lock:
+            self.queue_depth = max(0, self.queue_depth - n)
+
+    def shed(self) -> None:
+        """One bound partition was offloaded to the host path."""
+        with self._lock:
+            self.host_fallbacks += 1
+
+    def begin_claim(self) -> None:
+        with self._lock:
+            self.inflight += 1
+            self.max_inflight = max(self.max_inflight, self.inflight)
+            self.isp_claims += 1
+
+    def end_claim(self) -> None:
+        with self._lock:
+            self.inflight = max(0, self.inflight - 1)
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "device": self.device_id,
+                "busy_s": self.busy_s,
+                "queue_depth": self.queue_depth,
+                "inflight": self.inflight,
+                "max_inflight": self.max_inflight,
+                "isp_claims": self.isp_claims,
+                "host_fallbacks": self.host_fallbacks,
+                "bytes_streamed": self.bytes_streamed,
+                "spill_bytes": self.spill_bytes,
+                "compute_ops": self.compute_ops,
+                "spill_io_s": self.spill_io_s,
+            }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging sugar
+        return (
+            f"IspDevice({self.device_id}, busy={self.busy_s * 1e3:.2f}ms, "
+            f"queue={self.queue_depth})"
+        )
+
+
+class DeviceFleet:
+    """The shared registry of simulated ISP devices, plus the host ledger.
+
+    One fleet object is threaded through every layer that touches devices —
+    ``PartitionedStore`` (partition reads), ``CacheSpillStore`` (spill
+    traffic), and ``core.service.PreprocessingService`` (claim routing,
+    compute charges) — so contention is modeled against one shared set of
+    ledgers rather than per-layer copies.  Host-fallback produces charge the
+    fleet-level host ledger: encoded pages + train-ready tensors cross the
+    link, and the chain runs at host compute rate.
+    """
+
+    def __init__(
+        self,
+        num_devices: int = 4,
+        *,
+        stream_bytes_per_s: float = 8e9,
+        compute_ops_per_s: float = 5e9,
+        link_bytes_per_s: float = 3e9,
+        host_ops_per_s: float = 100e9,
+    ):
+        assert num_devices >= 1
+        self.devices = [
+            IspDevice(
+                d,
+                stream_bytes_per_s=stream_bytes_per_s,
+                compute_ops_per_s=compute_ops_per_s,
+            )
+            for d in range(num_devices)
+        ]
+        self.link_bytes_per_s = link_bytes_per_s
+        self.host_ops_per_s = host_ops_per_s
+        self._lock = threading.Lock()
+        self.host_busy_s = 0.0  # link transfer + host compute, serialized
+        self.host_link_bytes = 0
+        self.host_ops = 0.0
+        self.host_produces = 0
+
+    @classmethod
+    def from_cost_model(cls, num_devices: int, model) -> "DeviceFleet":
+        """Budgets taken from a ``core.costmodel.PlacementCostModel`` (duck-
+        typed so this module never imports the cost model)."""
+        return cls(
+            num_devices,
+            stream_bytes_per_s=model.isp_stream_bytes_per_s,
+            compute_ops_per_s=model.isp_ops_per_s,
+            link_bytes_per_s=model.link_bytes_per_s,
+            host_ops_per_s=model.host_ops_per_s,
+        )
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def __getitem__(self, device_id: int) -> IspDevice:
+        return self.devices[device_id]
+
+    def __iter__(self):
+        return iter(self.devices)
+
+    def charge_host(self, link_bytes: int, ops: float) -> float:
+        """One host-fallback produce: pages in + tensors out over the link,
+        chain at host compute rate.  Returns modeled seconds."""
+        dt = link_bytes / self.link_bytes_per_s + ops / self.host_ops_per_s
+        with self._lock:
+            self.host_busy_s += dt
+            self.host_link_bytes += int(link_bytes)
+            self.host_ops += ops
+            self.host_produces += 1
+        return dt
+
+    def utilization(self) -> List[Dict[str, float]]:
+        return [d.snapshot() for d in self.devices]
+
+    def max_busy_s(self) -> float:
+        return max(d.busy_s for d in self.devices)
+
+    def makespan_s(self, host_parallelism: int = 1) -> float:
+        """Modeled end-to-end seconds: each device serializes its own ledger;
+        host work parallelizes across `host_parallelism` provisioned host
+        workers.  The bottleneck resource is the makespan."""
+        return max(self.max_busy_s(), self.host_busy_s / max(host_parallelism, 1))
+
+
+def zipf_owner_map(
+    num_partitions: int, num_devices: int, alpha: float, seed: int = 0
+) -> List[int]:
+    """Zipf-skewed partition->device ownership (Meta's ingestion skew).
+
+    Device d's ownership quota follows the Zipf pmf rank^(-alpha) via largest
+    remainder (exact counts, never a lucky uniform draw), then the assignment
+    order is shuffled deterministically by `seed` so contiguous pid ranges
+    don't all land on one device.  alpha=0 degenerates to uniform quotas.
+    """
+    assert num_partitions >= 1 and num_devices >= 1
+    ranks = np.arange(1, num_devices + 1, dtype=np.float64)
+    w = ranks ** -float(alpha)
+    w /= w.sum()
+    quotas = w * num_partitions
+    counts = [math.floor(q) for q in quotas]
+    rema = sorted(
+        range(num_devices), key=lambda d: quotas[d] - counts[d], reverse=True
+    )
+    for d in rema[: num_partitions - sum(counts)]:
+        counts[d] += 1
+    owners = [d for d in range(num_devices) for _ in range(counts[d])]
+    rng = np.random.default_rng(seed)
+    rng.shuffle(owners)
+    return [int(d) for d in owners]
 
 
 class PartitionedStore:
@@ -38,13 +260,30 @@ class PartitionedStore:
         source: Optional[SyntheticRecSysSource] = None,
         root: Optional[str] = None,
         placement: str = "presto",
+        *,
+        fleet: Optional[DeviceFleet] = None,
+        owner_map: Optional[Sequence[int]] = None,
     ):
         assert placement in ("presto", "disagg")
+        if fleet is not None:
+            assert num_devices == len(fleet), (
+                f"num_devices={num_devices} but the shared fleet has "
+                f"{len(fleet)} device(s)"
+            )
         self.num_partitions = num_partitions
         self.num_devices = num_devices
         self.source = source
         self.root = root
         self.placement = placement
+        self.fleet = fleet  # shared ledgers: reads charge the owning device
+        if owner_map is not None:
+            owner_map = [int(d) for d in owner_map]
+            assert len(owner_map) == num_partitions, (
+                f"owner_map covers {len(owner_map)} of {num_partitions} "
+                "partitions"
+            )
+            assert all(0 <= d < num_devices for d in owner_map)
+        self.owner_map = owner_map
         self._read_bytes = 0
         # pid -> (stat signature | None, fingerprint); guarded by _fp_lock
         self._fp_cache: Dict[int, tuple] = {}
@@ -52,11 +291,25 @@ class PartitionedStore:
 
     # -- ownership -----------------------------------------------------------
     def owner_of(self, partition_id: int) -> int:
-        """Storage device that holds this partition (round-robin shard)."""
+        """Storage device that holds this partition.  Round-robin by default;
+        an explicit ``owner_map`` expresses skewed placements (hot devices own
+        disproportionately many partitions — the contention the device-aware
+        scheduler manages).  Ownership never changes partition CONTENT: the
+        same pid yields the same bytes under any map."""
+        if self.owner_map is not None:
+            return self.owner_map[partition_id]
         return partition_id % self.num_devices
 
+    def device_of(self, partition_id: int) -> Optional[IspDevice]:
+        """The owning ``IspDevice`` when a shared fleet is attached."""
+        if self.fleet is None:
+            return None
+        return self.fleet[self.owner_of(partition_id)]
+
     def partitions_of(self, device: int) -> List[int]:
-        return list(range(device, self.num_partitions, self.num_devices))
+        return [
+            pid for pid in range(self.num_partitions) if self.owner_of(pid) == device
+        ]
 
     # -- I/O -------------------------------------------------------------------
     def materialize(self, partition_ids: Iterable[int]) -> None:
@@ -73,12 +326,20 @@ class PartitionedStore:
             path = self._path(partition_id)
             if os.path.exists(path):
                 part = read_partition(path)
-                self._read_bytes += part.nbytes()
+                self._account_read(partition_id, part.nbytes())
                 return part
         assert self.source is not None, "no disk file and no synthetic source"
         part = self.source.partition(partition_id)
-        self._read_bytes += part.nbytes()
+        self._account_read(partition_id, part.nbytes())
         return part
+
+    def _account_read(self, partition_id: int, nbytes: int) -> None:
+        """Every partition read streams off its OWNING device: charge that
+        device's shared ledger (when a fleet is attached) so reads contend
+        with ISP compute and cache spills for the same modeled bandwidth."""
+        self._read_bytes += nbytes
+        if self.fleet is not None:
+            self.fleet[self.owner_of(partition_id)].charge_stream(nbytes)
 
     @property
     def bytes_read(self) -> int:
@@ -158,12 +419,19 @@ class CacheSpillStore:
         capacity_bytes: Optional[int] = None,
         bytes_per_s: float = 8e9,
         root: Optional[str] = None,
+        fleet: Optional[DeviceFleet] = None,
     ):
         assert num_devices >= 1
+        if fleet is not None:
+            assert num_devices == len(fleet), (
+                f"num_devices={num_devices} but the shared fleet has "
+                f"{len(fleet)} device(s)"
+            )
         self.num_devices = num_devices
         self.capacity_bytes = capacity_bytes
         self.bytes_per_s = bytes_per_s
         self.root = root
+        self.fleet = fleet  # spill traffic contends on the shared ledgers
         self._devices: List[Dict[str, Dict[str, np.ndarray]]] = [
             {} for _ in range(num_devices)
         ]
@@ -173,9 +441,65 @@ class CacheSpillStore:
         self.bytes_written = 0
         self.bytes_read = 0
         self.modeled_io_s = 0.0
+        # per-owning-device modeled seconds: spill residency is DEVICE work,
+        # so a hot device's cache traffic shows up on ITS ledger, not a
+        # global pot (the global modeled_io_s stays as the aggregate)
+        self.io_s_by_device: List[float] = [0.0] * num_devices
+        if root is not None:
+            self._rescan()
 
     def owner_of(self, key: str) -> int:
         return int(hashlib.sha256(key.encode()).hexdigest()[:8], 16) % self.num_devices
+
+    def _charge(self, key: str, nbytes: int) -> None:
+        """Charge one block movement to the OWNING device (caller holds no
+        lock ordering obligations: device ledgers use their own locks)."""
+        dev = self.owner_of(key)
+        if self.fleet is not None:
+            dt = self.fleet[dev].charge_stream(nbytes, spill=True)
+        else:
+            dt = nbytes / self.bytes_per_s
+        with self._lock:
+            self.modeled_io_s += dt
+            self.io_s_by_device[dev] += dt
+
+    def keys(self) -> List[str]:
+        """Resident block keys, oldest first (insertion/rescan order)."""
+        with self._lock:
+            return list(self._sizes)
+
+    def _rescan(self) -> None:
+        """Rebuild the residency index from blocks that survived a restart.
+
+        Blocks live one ``.npz`` per key under per-device directories; after
+        a process restart the in-memory index is empty even though the bytes
+        are still on the simulated devices.  Rescanning (oldest mtime first,
+        so eviction order survives too) is what makes the feature cache's
+        warm start possible.  Sizes are file sizes — close enough to the
+        original array bytes for capacity and charging purposes."""
+        assert self.root is not None
+        if not os.path.isdir(self.root):
+            return
+        found = []
+        for d in range(self.num_devices):
+            ddir = os.path.join(self.root, f"device{d:03d}")
+            if not os.path.isdir(ddir):
+                continue
+            for fn in os.listdir(ddir):
+                if not (fn.startswith("cache_") and fn.endswith(".npz")):
+                    continue
+                key = fn[len("cache_"):-len(".npz")]
+                try:
+                    st = os.stat(os.path.join(ddir, fn))
+                except OSError:
+                    continue
+                found.append((st.st_mtime_ns, key, st.st_size))
+        with self._lock:
+            for _, key, size in sorted(found):
+                if key in self._sizes:
+                    continue
+                self._sizes[key] = size
+                self._resident += size
 
     @property
     def resident_bytes(self) -> int:
@@ -223,7 +547,6 @@ class CacheSpillStore:
             self._sizes[key] = nbytes
             self._resident += nbytes
             self.bytes_written += nbytes
-            self.modeled_io_s += nbytes / self.bytes_per_s
             if self.capacity_bytes is not None:
                 while self._resident > self.capacity_bytes and len(self._sizes) > 1:
                     old = next(iter(self._sizes))
@@ -232,6 +555,7 @@ class CacheSpillStore:
                     self._resident -= self._sizes.pop(old)
                     self._devices[self.owner_of(old)].pop(old, None)
                     dropped.append(old)
+        self._charge(key, nbytes)
         if self.root is not None:
             for old in dropped:
                 try:
@@ -241,7 +565,10 @@ class CacheSpillStore:
         return nbytes
 
     def read(self, key: str) -> Optional[Dict[str, np.ndarray]]:
-        """Fetch one spilled block (None if absent), charging modeled I/O."""
+        """Fetch one spilled block (None if absent).  The read bytes are
+        charged to the block's OWNING device's ledger — a spill hit promoted
+        back to the memory tier is byte movement on that device, contending
+        with its partition reads and ISP compute."""
         with self._lock:
             nbytes = self._sizes.get(key)
             if nbytes is None:
@@ -251,16 +578,19 @@ class CacheSpillStore:
                 if block is None:
                     return None
                 self.bytes_read += nbytes
-                self.modeled_io_s += nbytes / self.bytes_per_s
-                return dict(block)
-        try:
-            with np.load(self._block_path(key)) as z:
-                block = {k: z[k] for k in z.files}
-        except OSError:
-            return None  # evicted between the size check and the load
-        for a in block.values():
-            a.setflags(write=False)
-        with self._lock:
-            self.bytes_read += nbytes
-            self.modeled_io_s += nbytes / self.bytes_per_s
+            else:
+                block = None
+        if block is None:
+            try:
+                with np.load(self._block_path(key)) as z:
+                    block = {k: z[k] for k in z.files}
+            except OSError:
+                return None  # evicted between the size check and the load
+            for a in block.values():
+                a.setflags(write=False)
+            with self._lock:
+                self.bytes_read += nbytes
+        else:
+            block = dict(block)
+        self._charge(key, nbytes)
         return block

@@ -13,6 +13,13 @@ With ``--cache`` the pool carries a shared content-addressed feature cache
 content (deterministic synthetic sources), so overlapping work deduplicates
 across tenants even though every job builds its own store object.
 
+The pool's units are bound to a shared ``data.storage.DeviceFleet`` of
+``--devices`` simulated ISP devices: every tenant's partitions live on (and
+charge) those devices, claims are locality-aware, and skewed ownership
+(``--skew``) drives hot devices past the fallback threshold.  A per-device
+utilization table (occupancy, queue depth, fallbacks) prints after the
+per-job table.
+
     PYTHONPATH=src python -m repro.launch.serve_preprocess --jobs 2 --reduced
 """
 
@@ -24,10 +31,11 @@ import threading
 import time
 
 from repro.configs.registry import get_recsys
+from repro.core.costmodel import ContentionAwareCostModel
 from repro.core.featcache import FeatureCache, default_spill_store
 from repro.core.service import JobSpec, PreprocessingService
 from repro.core.spec import TransformSpec
-from repro.data.storage import PartitionedStore
+from repro.data.storage import DeviceFleet, PartitionedStore, zipf_owner_map
 from repro.data.synth import SyntheticRecSysSource
 
 EPILOG = """\
@@ -36,18 +44,30 @@ multi-tenant flags:
                              guarantees each tenant 1 unit or rejects it)
   --qos S                    per-job QoS target in samples/s; demand is
                              re-estimated as ceil(target / measured P)
+device flags:
+  --devices N                shared fleet of N simulated ISP devices; pool
+                             units bind to devices round-robin and claims
+                             prefer the partition's owning device (0 = the
+                             legacy fungible pool, no device table)
+  --skew ALPHA               Zipf(ALPHA)-skewed partition->device ownership
+                             shared by every tenant: hot devices queue past
+                             the fallback threshold and shed work to the
+                             host (watch the fallback column; 0 = uniform)
 cache flags:
   --cache                    shared content-addressed feature cache across
                              tenants (keys: partition fingerprint x lowered
                              opgraph hash x placement)
   --cache-mb MB              in-memory LRU tier bound (default 256 MB)
   --spill-devices K          add a spill tier on K simulated storage devices
-                             (evictions land there; 0 = no spill tier)
+                             (evictions land there; 0 = no spill tier; K ==
+                             --devices reuses the shared fleet's ledgers)
 
 examples:
   PYTHONPATH=src python -m repro.launch.serve_preprocess --jobs 2 --reduced
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
       --jobs 3 --reduced --cache --cache-mb 64 --spill-devices 4
+  PYTHONPATH=src python -m repro.launch.serve_preprocess \\
+      --jobs 2 --reduced --devices 4 --skew 1.1
 """
 
 
@@ -86,6 +106,12 @@ def main(argv=None) -> None:
                     help="per-job QoS target (samples/s); default best-effort")
     ap.add_argument("--consume-ms", type=float, default=5.0,
                     help="simulated train-step time per batch")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="shared fleet of N simulated ISP devices the pool "
+                         "binds to (0 = legacy fungible pool)")
+    ap.add_argument("--skew", type=float, default=0.0, metavar="ALPHA",
+                    help="Zipf(ALPHA)-skewed partition->device ownership "
+                         "(0 = uniform round-robin)")
     ap.add_argument("--cache", action="store_true",
                     help="shared content-addressed feature cache")
     ap.add_argument("--cache-mb", type=int, default=256,
@@ -95,12 +121,24 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     workers = args.workers if args.workers is not None else args.jobs + 1
+    cost_model = ContentionAwareCostModel()
+    fleet = (DeviceFleet.from_cost_model(args.devices, cost_model)
+             if args.devices > 0 else None)
+    owner_map = None
+    if fleet is not None and args.skew > 0:
+        # one shared map: every tenant's partition p lives on the same hot
+        # device, so skew compounds across tenants instead of averaging out
+        owner_map = zipf_owner_map(args.partitions, args.devices, args.skew)
     cache = None
     if args.cache:
-        spill = (default_spill_store(args.spill_devices)
+        spill_fleet = (fleet if fleet is not None
+                       and args.spill_devices == len(fleet) else None)
+        spill = (default_spill_store(args.spill_devices, fleet=spill_fleet)
                  if args.spill_devices > 0 else None)
         cache = FeatureCache(args.cache_mb << 20, spill=spill)
-    service = PreprocessingService(num_workers=workers, cache=cache)
+    service = PreprocessingService(
+        num_workers=workers, cache=cache, devices=fleet,
+        cost_model=cost_model)
     sessions, results, threads = [], [], []
     rms = itertools.cycle(args.rm)
     for j in range(args.jobs):
@@ -108,7 +146,9 @@ def main(argv=None) -> None:
         rcfg = get_recsys(rm, reduced=args.reduced)
         src = SyntheticRecSysSource(rcfg.data, rows=args.rows)
         spec = TransformSpec.from_source(src)
-        store = PartitionedStore(args.partitions, num_devices=4, source=src)
+        store = PartitionedStore(
+            args.partitions, num_devices=args.devices or 4, source=src,
+            fleet=fleet, owner_map=owner_map)
         session = service.submit(JobSpec(
             name=f"{rm}-job{j}",
             partitions=range(args.partitions),
@@ -136,7 +176,7 @@ def main(argv=None) -> None:
 
     print(f"\n{'job':<12} {'batches':>7} {'rows/s':>9} {'util':>6} "
           f"{'starve':>7} {'reissue':>7} {'dupes':>6} {'hits':>5} "
-          f"{'share/demand':>13}")
+          f"{'fallbk':>6} {'share/demand':>13}")
     for session, result in zip(sessions, results):
         st = session.stats()
         util = result["busy_s"] / max(result["wall_s"], 1e-9)
@@ -145,11 +185,29 @@ def main(argv=None) -> None:
         print(f"{st.job:<12} {st.delivered:>7} {st.achieved_samples_per_s:>9.0f} "
               f"{util:>6.2f} {st.starvation:>7.2f} {st.reissues:>7} "
               f"{st.duplicates_dropped:>6} {st.cache_hits:>5} "
-              f"{st.share:>7}/{st.effective_demand_units}")
+              f"{st.host_fallbacks:>6} {st.share:>7}/{st.effective_demand_units}")
     service.close()
     total_rows = sum(s.stats().rows_delivered for s in sessions)
     print(f"\naggregate: {total_rows} rows in {wall:.1f}s "
           f"({total_rows / max(wall, 1e-9):.0f} rows/s across tenants)")
+    if fleet is not None:
+        print(f"\n{'device':<9} {'claims':>7} {'queue':>6} {'max-infl':>9} "
+              f"{'fallback':>9} {'stream MB':>10} {'spill MB':>9} "
+              f"{'busy ms':>8}")
+        for snap in fleet.utilization():
+            print(f"dev{snap['device']:03d}   {snap['isp_claims']:>7} "
+                  f"{snap['queue_depth']:>6} {snap['max_inflight']:>9} "
+                  f"{snap['host_fallbacks']:>9} "
+                  f"{snap['bytes_streamed'] / 1e6:>10.2f} "
+                  f"{snap['spill_bytes'] / 1e6:>9.2f} "
+                  f"{snap['busy_s'] * 1e3:>8.2f}")
+        print(f"{'host':<9} {fleet.host_produces:>7} {'-':>6} {'-':>9} "
+              f"{'-':>9} {fleet.host_link_bytes / 1e6:>10.2f} {'-':>9} "
+              f"{fleet.host_busy_s * 1e3:>8.2f}")
+        if args.skew > 0:
+            total_fallbacks = sum(d.host_fallbacks for d in fleet)
+            print(f"skew={args.skew}: {total_fallbacks} claim(s) fell back "
+                  f"to the host path")
     if cache is not None:
         cs = cache.stats()
         print(f"cache: hits={cs.hits} follows={cs.follows} misses={cs.misses} "

@@ -1,0 +1,291 @@
+"""Device-aware scheduling: the simulated ISP devices as first-class
+schedulable resources.
+
+The correctness anchor throughout: routing NEVER changes batch bytes — a
+Zipf-skewed ownership map with host fallback delivers exactly the batches of
+the uniform run, bitwise; only the ledgers (where/when the work is charged)
+differ.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_recsys
+from repro.data.columnar import decode_partition_numpy
+from repro.core.costmodel import (
+    ContentionAwareCostModel,
+    partition_costs,
+)
+from repro.core.featcache import CacheKey, FeatureCache, batch_nbytes
+from repro.core.planner import DeviceTopology, plan_pool
+from repro.core.presto import PreStoEngine
+from repro.core.service import JobSpec, PreprocessingService
+from repro.core.spec import TransformSpec
+from repro.data.storage import (
+    CacheSpillStore,
+    DeviceFleet,
+    IspDevice,
+    PartitionedStore,
+    zipf_owner_map,
+)
+from repro.data.synth import SyntheticRecSysSource
+
+
+@pytest.fixture(scope="module")
+def rm1():
+    rcfg = get_recsys("rm1", reduced=True)
+    src = SyntheticRecSysSource(rcfg.data, rows=64)
+    spec = TransformSpec.from_source(src)
+    engine = PreStoEngine(spec)  # one jit cache across every run in the module
+    return src, spec, engine
+
+
+# -- the device itself --------------------------------------------------------
+
+
+def test_isp_device_ledger_and_occupancy():
+    d = IspDevice(0, stream_bytes_per_s=1e6, compute_ops_per_s=1e6)
+    assert d.charge_stream(500_000) == pytest.approx(0.5)
+    assert d.busy_s == pytest.approx(0.5) and d.bytes_streamed == 500_000
+    assert d.charge_compute(1_000_000) == pytest.approx(1.0)
+    assert d.busy_s == pytest.approx(1.5) and d.compute_ops == 1e6
+    # spill traffic shares the SAME stream ledger (contends with reads)
+    d.charge_stream(100_000, spill=True)
+    assert d.spill_bytes == 100_000 and d.bytes_streamed == 600_000
+    assert d.spill_io_s == pytest.approx(0.1)
+    assert d.busy_s == pytest.approx(1.6)
+    # occupancy: backlog + in-flight high-water mark
+    d.enqueue(3)
+    d.dequeue()
+    assert d.queue_depth == 2
+    d.begin_claim()
+    d.begin_claim()
+    assert d.inflight == 2 and d.max_inflight == 2
+    d.end_claim()
+    assert d.inflight == 1 and d.max_inflight == 2
+    snap = d.snapshot()
+    assert snap["device"] == 0 and snap["queue_depth"] == 2
+
+
+def test_partition_reads_charge_owning_device(rm1):
+    src, spec, engine = rm1
+    fleet = DeviceFleet(4)
+    store = PartitionedStore(8, num_devices=4, source=src, fleet=fleet)
+    part = store.read(5)
+    assert fleet[1].bytes_streamed == part.nbytes()  # 5 % 4 == 1
+    assert all(fleet[d].bytes_streamed == 0 for d in (0, 2, 3))
+    assert fleet[1].busy_s > 0
+    # an explicit owner_map reroutes ownership (content is unchanged)
+    fleet2 = DeviceFleet(4)
+    skewed = PartitionedStore(
+        8, num_devices=4, source=src, fleet=fleet2, owner_map=[0] * 8
+    )
+    assert skewed.owner_of(5) == 0 and skewed.partitions_of(0) == list(range(8))
+    assert skewed.partitions_of(1) == []
+    part2 = skewed.read(5)
+    assert fleet2[0].bytes_streamed == part2.nbytes()
+    # ownership never changes partition bytes
+    d1, d2 = decode_partition_numpy(part), decode_partition_numpy(part2)
+    for col in d1["dense"]:
+        np.testing.assert_array_equal(d1["dense"][col], d2["dense"][col])
+
+
+def test_zipf_owner_map_deterministic_and_skewed():
+    m = zipf_owner_map(16, 4, alpha=1.1, seed=0)
+    assert len(m) == 16 and set(m) <= set(range(4))
+    assert m == zipf_owner_map(16, 4, alpha=1.1, seed=0)  # deterministic
+    counts = [m.count(d) for d in range(4)]
+    assert counts[0] == max(counts) and counts[0] >= 2 * min(counts)
+    # alpha=0 degenerates to uniform quotas
+    flat = zipf_owner_map(16, 4, alpha=0.0, seed=0)
+    assert [flat.count(d) for d in range(4)] == [4, 4, 4, 4]
+
+
+# -- spill accounting (per-device, not global) --------------------------------
+
+
+def _batch(pid: int, kb: int = 8):
+    rng = np.random.default_rng(pid)
+    return {
+        "labels": rng.random(kb * 256).astype(np.float32),
+        "dense": np.full((4,), pid, np.int32),
+    }
+
+
+def test_spill_promote_charges_owning_device():
+    fleet = DeviceFleet(3)
+    spill = CacheSpillStore(num_devices=3, fleet=fleet)
+    one = batch_nbytes(_batch(0))
+    cache = FeatureCache(capacity_bytes=2 * one, spill=spill)
+    keys = [CacheKey(f"part{i:04d}", "plan", "presto") for i in range(4)]
+    for i, k in enumerate(keys):
+        cache.put(k, _batch(i))
+    assert cache.stats().evictions == 2  # keys 0 and 1 spilled
+    owner = spill.owner_of(keys[0].block_id())
+    io_before = spill.io_s_by_device[owner]
+    block = cache.get(keys[0])  # spill hit -> promote
+    assert block is not None
+    np.testing.assert_array_equal(block["labels"], _batch(0)["labels"])
+    # the promote's read bytes landed on the owning device's ledger
+    assert spill.io_s_by_device[owner] > io_before
+    assert fleet[owner].spill_bytes > 0 and fleet[owner].busy_s > 0
+    # the per-device seconds sum to the global aggregate
+    assert sum(spill.io_s_by_device) == pytest.approx(spill.modeled_io_s)
+    st = cache.stats()
+    assert st.spill_io_s_by_device and owner in st.spill_io_s_by_device
+
+
+# -- contention-aware cost model ----------------------------------------------
+
+
+def test_contention_model_prices_queue_wait(rm1):
+    src, spec, engine = rm1
+    model = ContentionAwareCostModel(queue_threshold=3)
+    costs = partition_costs(spec)
+    assert costs.isp_s > 0 and costs.host_s > 0 and costs.link_bytes > 0
+    # wait pricing is linear in the queue
+    assert model.contended_isp_s(costs.isp_s, 4) == pytest.approx(5 * costs.isp_s)
+    # below the threshold locality always wins, whatever the queue price
+    assert not model.should_offload(costs, 0)
+    assert not model.should_offload(costs, 2)
+    # above it, the contended comparison decides
+    q = 6
+    expect = model.contended_isp_s(costs.isp_s, q) > costs.host_s
+    assert model.should_offload(costs, q) == expect
+    # cost-less work (produce_fn test hooks): the threshold alone rules
+    assert model.should_offload(None, 3) and not model.should_offload(None, 2)
+
+
+# -- per-device provisioning --------------------------------------------------
+
+
+def test_plan_pool_learns_device_topology():
+    topo = DeviceTopology.round_robin(4, 2)
+    assert topo.units_per_device == {0: 2, 1: 2}
+    assert topo.total_units == 4 and topo.manned == {0, 1}
+    # hot job lives entirely on device 0, cold job on device 1: neither can
+    # starve the other's device slice
+    plan = plan_pool(
+        4,
+        {"hot": 4, "cold": 4},
+        topology=topo,
+        device_weights={"hot": {0: 1.0}, "cold": {1: 1.0}},
+    )
+    assert plan.device_shares == {0: {"hot": 2, "cold": 0}, 1: {"hot": 0, "cold": 2}}
+    assert plan.device_utilized_units(0) == 2
+    # without weights jobs spread uniformly across devices
+    plan = plan_pool(4, {"a": 2, "b": 2}, topology=topo)
+    assert plan.device_shares == {0: {"a": 1, "b": 1}, 1: {"a": 1, "b": 1}}
+    # no topology -> no device plan (seed behavior intact)
+    assert plan_pool(4, {"a": 2}).device_shares is None
+
+
+# -- the acceptance criterion: skewed routing, bitwise-identical --------------
+
+
+def _run_job(engine, src, *, owner_map, locality, partitions, devices, threshold):
+    fleet = DeviceFleet(devices)
+    store = PartitionedStore(
+        partitions, num_devices=devices, source=src, fleet=fleet,
+        owner_map=owner_map,
+    )
+    model = ContentionAwareCostModel(queue_threshold=threshold)
+    with PreprocessingService(
+        num_workers=devices, devices=fleet, locality=locality, cost_model=model
+    ) as svc:
+        sess = svc.submit(JobSpec(
+            name="skewed", partitions=range(partitions), engine=engine,
+            store=store, units=devices, queue_depth=partitions,
+        ))
+        out = {pid: mb for pid, mb in sess}
+        stats = sess.stats()
+    return out, stats, fleet
+
+
+def test_zipf_routing_bitwise_fallback_and_inflight_bound(rm1):
+    """Satellite: Zipf-skewed claims over 4 devices — (a) batches bitwise
+    identical to the uniform run, (b) host fallback engages only above the
+    queue threshold, (c) no device exceeds its provisioned share by more
+    than one in-flight claim."""
+    src, spec, engine = rm1
+    devices, partitions = 4, 16
+    # uniform backlog is 16/4 = 4 bound partitions per device: a threshold
+    # of 5 sits between the uniform and the skewed (hot owns 8) backlogs
+    threshold = 5
+    skew_map = zipf_owner_map(partitions, devices, alpha=1.1, seed=0)
+    assert max(skew_map.count(d) for d in range(devices)) > threshold
+
+    uniform, st_u, _ = _run_job(
+        engine, src, owner_map=None, locality=True,
+        partitions=partitions, devices=devices, threshold=threshold)
+    blind, st_b, fleet_b = _run_job(
+        engine, src, owner_map=skew_map, locality=False,
+        partitions=partitions, devices=devices, threshold=threshold)
+    routed, st_r, fleet_r = _run_job(
+        engine, src, owner_map=skew_map, locality=True,
+        partitions=partitions, devices=devices, threshold=threshold)
+
+    # (b) below the threshold no claim ever leaves its device; above it the
+    # hot device sheds work to the host
+    assert st_u.host_fallbacks == 0  # uniform backlog < threshold everywhere
+    assert st_b.host_fallbacks == 0  # locality-blind: no fallback path at all
+    assert st_r.host_fallbacks > 0
+    assert fleet_r.host_produces == st_r.host_fallbacks
+
+    # (a) bitwise identity: routing changed WHERE work ran, never the bytes
+    for name, run in (("blind", blind), ("routed", routed)):
+        assert sorted(run) == list(range(partitions))
+        for pid in uniform:
+            for key in uniform[pid]:
+                np.testing.assert_array_equal(
+                    np.asarray(uniform[pid][key]), np.asarray(run[pid][key]),
+                    err_msg=f"{name} pid={pid} key={key} diverged under skew",
+                )
+
+    # (c) under device-aware scheduling no device ever exceeds its
+    # provisioned share by more than one in-flight claim (the blind
+    # baseline carries no such bound — any worker may pile onto the hot
+    # device, which is exactly the over-subscription being fixed)
+    topo = DeviceTopology.round_robin(devices, devices)
+    for dev in fleet_r:
+        assert dev.max_inflight <= topo.units_per_device[dev.device_id] + 1
+
+    # offloading work off the hot device strictly improves the modeled
+    # end-to-end makespan (each device serializes its own ledger)
+    assert fleet_r.makespan_s(host_parallelism=devices) < fleet_b.makespan_s(
+        host_parallelism=devices)
+    # every delivered batch was produced exactly once somewhere
+    assert sum(st_r.device_produced.values()) + st_r.host_fallbacks >= partitions
+
+
+def test_host_fallback_covers_unmanned_devices(rm1):
+    """Fewer workers than devices: partitions owned by a device with no
+    bound unit are always host-eligible — nothing starves."""
+    src, spec, engine = rm1
+    fleet = DeviceFleet(4)
+    store = PartitionedStore(8, num_devices=4, source=src, fleet=fleet)
+    with PreprocessingService(num_workers=2, devices=fleet) as svc:
+        sess = svc.submit(JobSpec(
+            name="undermanned", partitions=range(8), engine=engine,
+            store=store, units=2, queue_depth=8,
+        ))
+        out = {pid: mb for pid, mb in sess}
+        st = sess.stats()
+    assert sorted(out) == list(range(8))
+    # devices 2 and 3 are unmanned: their partitions went host
+    assert st.host_fallbacks >= 4
+    assert st.done and not st.cancelled
+
+
+def test_locality_blind_charges_owner_devices(rm1):
+    """The round-robin baseline still runs every produce ON the owning
+    device's ledger (classic PreSto placement), so skew shows up as a hot
+    busy ledger even without routing."""
+    src, spec, engine = rm1
+    out, st, fleet = _run_job(
+        engine, src, owner_map=[0] * 6 + [1, 2], locality=False,
+        partitions=8, devices=4, threshold=100)
+    assert st.host_fallbacks == 0
+    assert st.device_produced.get(0, 0) == 6
+    assert fleet[0].busy_s > fleet[1].busy_s > 0
+    assert fleet[3].busy_s == 0.0
