@@ -100,6 +100,24 @@ class PlacementCostModel:
     isp_stream_bytes_per_s: float = 8e9  # SSD->FPGA internal stream
     isp_ops_per_s: float = 5e9  # ISP unit compute roofline
     host_ops_per_s: float = 100e9  # one provisioned CPU worker
+    # fixed per-kernel-launch overhead (dispatch + program setup), the cost
+    # a megabatched launch amortizes over its K partitions
+    launch_overhead_s: float = 2e-4
+
+    def megabatch_launch_s(self, per_partition_s: float, k: int) -> float:
+        """Modeled seconds for ONE megabatched launch of K partitions."""
+        return self.launch_overhead_s + max(k, 1) * per_partition_s
+
+    def megabatch_amortization(self, per_partition_s: float, k: int) -> float:
+        """Modeled speedup of one K-megabatch over K solo launches.
+
+        K solo launches pay K overheads; the megabatch pays one.  This is
+        the dispatch-amortization half of the zero-stall produce path (the
+        other half, read/compute overlap, turns ``io + compute`` into
+        ``max(io, compute)`` and is benched, not modeled)."""
+        k = max(k, 1)
+        solo = k * (self.launch_overhead_s + per_partition_s)
+        return solo / self.megabatch_launch_s(per_partition_s, k)
 
 
 DEFAULT_PLACEMENT_MODEL = PlacementCostModel()

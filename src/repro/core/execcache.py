@@ -1,0 +1,181 @@
+"""Process-wide cache of compiled preprocessing executables.
+
+The multi-tenant norm is many independently built ``PreStoEngine``s over the
+*same* Transform — every tenant of a shared ``PreprocessingService`` builds
+its own engine from an equal spec, every bench run builds a fresh one, and
+each used to pay its own XLA compile even though the compiled program is
+byte-for-byte the work of every other.  This registry closes that hole: a
+compiled entry is keyed by the engine's *cache signature* (the lowered
+opgraph's structural hash plus the per-family comm placement — exactly the
+identity that makes two engines produce bitwise-equal batches) together with
+the execution mode (solo vs megabatched launch) and the mesh identity, so
+engines with equal signatures share ONE executable instead of recompiling
+per engine.  Megabatch width K and partition rows specialize *inside* an
+entry through jit's own shape cache; the registry records every trace with
+its ``(k, rows)`` so compile-count discipline is observable
+(``tests/test_execcache.py``).
+
+Two guarantees the produce path leans on:
+
+* **Exactly-once build per key** — ``get_or_build`` races collapse to one
+  jit wrapper (the bug the old per-engine ``_jit_lock`` guarded against, now
+  enforced process-wide).
+* **Exactly-once trace per (key, arg shapes)** — ``_SharedExecutable``
+  serializes the *first* call for each new shape signature, so concurrent
+  pool workers hitting a cold executable trigger one compile, not a
+  thundering herd of tracers.  Warm calls take a lock-free path.
+
+Entries live for the process lifetime (no eviction): each one holds the
+first engine of its signature alive through the traced body's closure, the
+same order of residency as jit's own compilation cache — bounded by the
+number of DISTINCT Transforms the process runs, not by engine count.
+``EXECUTABLES.clear()`` drops everything when that bound is wrong for you.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = ["EXECUTABLES", "ExecKey", "ExecutableCache", "mesh_key"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecKey:
+    """Identity of one compiled preprocessing program.
+
+    ``signature`` is ``PreStoEngine.cache_signature()`` — the lowered plan's
+    structural hash plus the per-family comm placement, the same identity the
+    feature cache trusts for bitwise equality.  ``mode`` separates the solo
+    launch from the megabatched one (different traced bodies).  ``mesh`` pins
+    sharded programs to their mesh *content* (axis names/sizes + device
+    ids — stable across mesh objects, unlike ``id()``); mesh-less engines
+    (the service norm) all share ``None``.  ``interpret`` keys the Pallas
+    interpret-mode override: it changes the compiled program (interpreted
+    vs native kernels), not the output bytes, so it lives here and NOT in
+    the feature-cache signature.
+    """
+
+    signature: str
+    mode: str  # "solo" | "mega"
+    mesh: Optional[Tuple] = None  # mesh_key(mesh) for sharded programs
+    interpret: Optional[bool] = None  # engine's Pallas interpret override
+
+
+def mesh_key(mesh) -> Optional[Tuple]:
+    """Stable content identity of a jax Mesh (None for mesh-less engines).
+
+    Two distinct Mesh objects over the same axes and devices compile to the
+    same program, so they share; keying by ``id()`` instead would both miss
+    that sharing and — worse — alias a garbage-collected mesh's reused
+    address to a different live one."""
+    if mesh is None:
+        return None
+    return (
+        tuple(mesh.axis_names),
+        tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
+
+
+def _shape_signature(pages: Dict[str, Any]) -> Tuple:
+    """Hashable (name, shape, dtype) summary of one pages pytree."""
+    return tuple(
+        (k, tuple(v.shape), str(v.dtype)) for k, v in sorted(pages.items())
+    )
+
+
+class _SharedExecutable:
+    """One jitted program shared by every engine with the same ExecKey.
+
+    The first call for each new input-shape signature runs under a lock so
+    concurrent cold callers produce exactly one trace/compile; once a shape
+    is warm, calls go straight through.
+    """
+
+    __slots__ = ("_fn", "_lock", "_warm")
+
+    def __init__(self, fn: Callable):
+        self._fn = fn
+        self._lock = threading.Lock()
+        self._warm: set = set()
+
+    def __call__(self, pages: Dict[str, Any]):
+        sig = _shape_signature(pages)
+        if sig in self._warm:
+            return self._fn(pages)
+        with self._lock:
+            out = self._fn(pages)
+            self._warm.add(sig)
+        return out
+
+
+class ExecutableCache:
+    """The registry: ExecKey -> shared executable, with trace accounting."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._fns: Dict[ExecKey, _SharedExecutable] = {}
+        self._traces: Dict[ExecKey, List[Dict[str, Any]]] = {}
+        self.hits = 0  # get_or_build calls served by an existing entry
+        self.builds = 0  # jit wrappers actually constructed
+
+    def get_or_build(self, key: ExecKey, build: Callable[[], Callable]):
+        """The executable for `key`, building (once) on first demand.
+
+        ``build()`` returns the jitted callable; it runs under the registry
+        lock, which is fine because building a jit wrapper traces nothing —
+        tracing happens at first *call*, serialized by _SharedExecutable.
+        """
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self.hits += 1
+                return fn
+            self.builds += 1
+            fn = _SharedExecutable(build())
+            self._fns[key] = fn
+            return fn
+
+    def note_trace(self, key: ExecKey, *, k: int, rows: int) -> None:
+        """Called from inside a traced body: records one (re)compile.
+
+        Runs once per (key, shapes) — jit only re-enters the Python body
+        when it traces — so the per-key list is the compile history."""
+        with self._lock:
+            self._traces.setdefault(key, []).append({"k": k, "rows": rows})
+
+    def traces(self, key: ExecKey) -> List[Dict[str, Any]]:
+        with self._lock:
+            return list(self._traces.get(key, []))
+
+    def trace_count(self, key: Optional[ExecKey] = None) -> int:
+        with self._lock:
+            if key is not None:
+                return len(self._traces.get(key, []))
+            return sum(len(v) for v in self._traces.values())
+
+    def clear(self) -> None:
+        """Drop every entry (tests / benchmarks wanting a cold registry).
+
+        Engines that already resolved their executable keep working — they
+        hold a direct reference; only future lookups rebuild."""
+        with self._lock:
+            self._fns.clear()
+            self._traces.clear()
+            self.hits = 0
+            self.builds = 0
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "entries": len(self._fns),
+                "hits": self.hits,
+                "builds": self.builds,
+                "traces": sum(len(v) for v in self._traces.values()),
+            }
+
+
+# The process-wide registry every PreStoEngine consults by default.
+EXECUTABLES = ExecutableCache()

@@ -364,6 +364,16 @@ class LoweredPlan:
     def host_families(self) -> Tuple[str, ...]:
         return tuple(f for f in FAMILIES if self.placements.get(f) == HOST)
 
+    def megabatch_safe(self) -> bool:
+        """True iff every lowered stage is row-local (``kernels.
+        ROW_LOCAL_KINDS``), i.e. stacking K partitions along the row axis
+        and running one launch is bitwise identical to K solo launches.
+        The megabatched produce path (``PreStoEngine.preprocess_megabatch``)
+        refuses plans where this does not hold."""
+        from repro.kernels import ROW_LOCAL_KINDS  # late: kernels import ops
+
+        return all(st.kind in ROW_LOCAL_KINDS for st in self.stages)
+
 
 def _op_fn(node: OpNode, spec: TransformSpec, interpret) -> Callable[..., tuple]:
     """Standalone pass for one operator (host lowering)."""

@@ -111,8 +111,10 @@ class TrainingPipeline:
         group's units independently — ISP units and host workers are
         different resources in hybrid placement."""
         pages = self.engine.stage_partition(self.store, partition_for_probe)
-        pages = jax.tree.map(jax.numpy.asarray, pages)
-        probe = self.engine.jit_preprocess_cached()(pages)
+        # the shared executable may DONATE its page argument on gpu/tpu —
+        # hand it a private device copy and keep the numpy pages for the
+        # stage timing below
+        probe = self.engine.jit_preprocess_cached()(jax.device_put(pages))
         jax.block_until_ready(probe)
         t_meas, rows = self._measure_train_throughput(state, probe)
         plan = self.engine.lowered_plan

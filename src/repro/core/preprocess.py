@@ -65,6 +65,53 @@ def pages_from_partition(part: Partition, spec: TransformSpec) -> Dict[str, np.n
     }
 
 
+def stack_pages(pages_list) -> Dict[str, np.ndarray]:
+    """Stack K partitions' staged pages into one leading-axis megabatch.
+
+    Input: K dicts from ``pages_from_partition`` (equal shapes — megabatches
+    require uniform partition geometry, which the partitioned stores
+    guarantee).  Output: one dict whose every array gains a leading K axis,
+    the input of ``PreStoEngine.preprocess_megabatch``.
+    """
+    pages_list = list(pages_list)
+    if len(pages_list) == 1:
+        return {k: v[None] for k, v in pages_list[0].items()}
+    return {
+        k: np.stack([p[k] for p in pages_list]) for k in pages_list[0]
+    }
+
+
+def flatten_megabatch(stacked: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Fold the leading megabatch axis into the row-group axis (traceable).
+
+    Every page array is grouped ``(features, row_groups, words)`` with the
+    feature axis leading (labels are flat ``(rows,)``), and every operator in
+    the standard Transform is row-local — so a K-partition megabatch is
+    exactly a single partition with K x the rows.  ``(K, F, G, w)`` becomes
+    ``(F, K*G, w)`` (partition-major row order) and ``(K, R)`` becomes
+    ``(K*R,)``; the resulting mini-batch splits back per partition along its
+    leading row axis.
+    """
+    out: Dict[str, jax.Array] = {}
+    for name, v in stacked.items():
+        if v.ndim == 2:  # label_words: (K, rows) -> (K*rows,)
+            out[name] = v.reshape(-1)
+        else:  # (K, F, G, w) -> (F, K*G, w)
+            k, f, g, w = v.shape
+            out[name] = jnp.moveaxis(v, 0, 1).reshape(f, k * g, w)
+    return out
+
+
+def megabatch_pages_shape_dtypes(
+    spec: TransformSpec, rows: int, k: int
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for a K-partition stacked megabatch."""
+    return {
+        name: jax.ShapeDtypeStruct((k, *s.shape), s.dtype)
+        for name, s in pages_shape_dtypes(spec, rows).items()
+    }
+
+
 def pages_shape_dtypes(spec: TransformSpec, rows: int) -> Dict[str, jax.ShapeDtypeStruct]:
     """ShapeDtypeStruct stand-ins for the page arrays (dry-run inputs)."""
     cfg = spec.cfg

@@ -34,7 +34,8 @@ from __future__ import annotations
 import hashlib
 import json
 import threading
-from typing import Dict, Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +44,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.common.compat import shard_map
+from repro.core.execcache import EXECUTABLES, ExecKey, mesh_key
 from repro.core.opgraph import (
     FAMILIES,
     FAMILY_BATCH_KEYS,
@@ -57,8 +59,10 @@ from repro.core.opgraph import (
 )
 from repro.core.preprocess import (
     MiniBatch,
+    flatten_megabatch,
     pages_from_partition,
     pages_shape_dtypes,
+    stack_pages,
 )
 from repro.core.spec import TransformSpec
 from repro.data.storage import PartitionedStore
@@ -98,6 +102,7 @@ class PreStoEngine:
         kernel_mode: Optional[str] = None,
         family_placements: Optional[Dict[str, str]] = None,
         interpret: bool | None = None,
+        use_exec_cache: bool = True,
     ):
         if isinstance(placement, dict):
             family_placements, placement = dict(placement), "hybrid"
@@ -118,9 +123,19 @@ class PreStoEngine:
         # fused kernels); None follows the family placements.
         self.kernel_mode = kernel_mode
         self.interpret = interpret
+        # use_exec_cache=False opts out of the process-wide executable
+        # registry (core.execcache): this engine then compiles privately,
+        # exactly the pre-registry behavior (bench baseline / isolation).
+        self.use_exec_cache = use_exec_cache
         self._plan: Optional[LoweredPlan] = None
         self._jit_cached = None
+        self._jit_mega = None
         self._jit_lock = threading.Lock()
+        # Donating the page buffers lets XLA reuse their memory for outputs.
+        # Only meaningful where the runtime honors donation (not the CPU
+        # backend, which warns and ignores) and only safe for the produce
+        # paths, which stage FRESH pages per call and never reuse them.
+        self._donate = jax.default_backend() in ("gpu", "tpu")
 
     @property
     def lowered_plan(self) -> LoweredPlan:
@@ -247,23 +262,157 @@ class PreStoEngine:
             self.preprocess_global, in_shardings=(in_sh,), out_shardings=out_sh
         )
 
+    def _exec_key(self, mode: str) -> ExecKey:
+        # interpret changes the compiled program (interpreted vs native
+        # Pallas), not the batch bytes — it keys the executable, never the
+        # feature cache
+        return ExecKey(
+            signature=self.cache_signature(),
+            mode=mode,
+            mesh=mesh_key(self.mesh),
+            interpret=self.interpret,
+        )
+
+    def _build_executable(self, mode: str, key: ExecKey):
+        """jit wrapper for one execution mode, with trace accounting.
+
+        The traced body notes each (re)compile in the process-wide registry
+        — jit re-enters Python only when tracing, so the note count IS the
+        compile count the discipline tests pin.  Page buffers are donated on
+        backends that honor donation (the produce paths stage fresh pages
+        every call and never reuse them).
+        """
+        if mode == "mega":
+            inner = self.preprocess_megabatch
+
+            def body(stacked):
+                k = stacked["label_words"].shape[0]
+                EXECUTABLES.note_trace(
+                    key, k=int(k), rows=int(stacked["label_words"].shape[1])
+                )
+                return inner(stacked)
+
+            return jax.jit(body, donate_argnums=(0,) if self._donate else ())
+        if self.mesh is None:
+
+            def body(pages):
+                EXECUTABLES.note_trace(
+                    key, k=1, rows=int(pages["label_words"].shape[0])
+                )
+                return self.preprocess_local(pages)
+
+            return jax.jit(body, donate_argnums=(0,) if self._donate else ())
+        in_sh = {k: NamedSharding(self.mesh, v) for k, v in pages_pspec().items()}
+        out_sh = {
+            k: NamedSharding(self.mesh, v) for k, v in minibatch_pspec().items()
+        }
+
+        def body(pages):
+            EXECUTABLES.note_trace(
+                key, k=1, rows=int(pages["label_words"].shape[0])
+            )
+            return self.preprocess_global(pages)
+
+        return jax.jit(body, in_shardings=(in_sh,), out_shardings=out_sh)
+
     def jit_preprocess_cached(self):
-        """The compiled preprocessing step, built once per engine.
+        """The compiled preprocessing step, shared process-wide.
 
         Sessions, provisioning probes, and pool workers all reuse the same
         compiled program, so a job's service-fed batches are bitwise
-        identical to its single-tenant batches.  Locked: concurrent first
-        use by pool workers must not build two jit wrappers (two compiles).
+        identical to its single-tenant batches.  The executable is resolved
+        through ``core.execcache.EXECUTABLES``: independently built engines
+        with equal cache signatures (the multi-tenant norm) share ONE
+        compile instead of one per engine, and concurrent cold first calls
+        collapse to a single trace.  Locked per engine: concurrent first use
+        must not resolve two registry entries.
+
+        On donating backends (gpu/tpu) the page argument is DONATED: do not
+        reuse the arrays you pass in after the call — stage fresh pages per
+        call (the produce paths do) or pass a private ``jax.device_put``
+        copy.
         """
         with self._jit_lock:
             if self._jit_cached is None:
-                self._jit_cached = self.jit_preprocess()
+                key = self._exec_key("solo")
+                if self.use_exec_cache:
+                    self._jit_cached = EXECUTABLES.get_or_build(
+                        key, lambda: self._build_executable("solo", key)
+                    )
+                else:
+                    self._jit_cached = self._build_executable("solo", key)
         return self._jit_cached
+
+    # -- megabatched execution --------------------------------------------------
+
+    def preprocess_megabatch(self, stacked: Dict[str, jax.Array]):
+        """Transform a leading-axis megabatch of K partitions in ONE launch.
+
+        ``stacked`` is ``preprocess.stack_pages`` output: every page array
+        with a leading K axis.  The leading axis folds into the row-group
+        axis (every Transform operator is row-local — asserted against
+        ``kernels.ROW_LOCAL_KINDS``), the whole plan executes once at K x
+        rows, and the fused mini-batch ``jnp.split``s back into K
+        per-partition mini-batches, bitwise identical to K solo runs.
+        Traceable; mesh-less engines only (the pool-worker produce path).
+        """
+        assert self.mesh is None, "megabatching is a local (per-unit) launch"
+        k = int(stacked["label_words"].shape[0])
+        assert k == 1 or self.lowered_plan.megabatch_safe(), (
+            "lowered plan has a non-row-local stage; megabatch would not be "
+            "bitwise identical to solo runs"
+        )
+        mb = self.preprocess_local(flatten_megabatch(stacked))
+        if k == 1:
+            return (mb,)
+        split = {key: jnp.split(v, k, axis=0) for key, v in mb.items()}
+        return tuple({key: split[key][i] for key in mb} for i in range(k))
+
+    def jit_preprocess_megabatch_cached(self):
+        """Compiled megabatch launch, shared process-wide like the solo one.
+
+        One registry entry per engine signature; megabatch width K and rows
+        specialize inside it through jit's shape cache (static shapes — each
+        (K, rows) compiles once per process, then every engine and worker
+        reuses it).
+        """
+        with self._jit_lock:
+            if self._jit_mega is None:
+                key = self._exec_key("mega")
+                if self.use_exec_cache:
+                    self._jit_mega = EXECUTABLES.get_or_build(
+                        key, lambda: self._build_executable("mega", key)
+                    )
+                else:
+                    self._jit_mega = self._build_executable("mega", key)
+        return self._jit_mega
 
     # -- staging ----------------------------------------------------------------
     def stage_partition(self, store: PartitionedStore, pid: int) -> Dict[str, np.ndarray]:
         """Extract(Read): fetch + lay out one partition's pages (host side)."""
         return pages_from_partition(store.read(pid), self.spec)
+
+    def stage_megabatch(
+        self, store: PartitionedStore, pids: Sequence[int]
+    ) -> Dict[str, np.ndarray]:
+        """Extract(Read) K partitions and stack their pages leading-axis.
+
+        Reads go through ``store.read`` one partition at a time, so every
+        partition's bytes are charged to its OWNING device's ledger — a
+        megabatch never blurs per-device accounting.
+        """
+        return stack_pages(self.stage_partition(store, pid) for pid in pids)
+
+    def _put_pages(self, pages):
+        """Host pages -> device, donation-aware.
+
+        On donating backends the pages are placed once and their buffers
+        donated to the launch (no host round-trip copy survives the call);
+        elsewhere the numpy arrays go straight into jit, which performs the
+        single unavoidable host->device transfer itself — the old explicit
+        ``tree.map(jnp.asarray, ...)`` pre-copy layer is gone.
+        """
+        return jax.device_put(pages) if self._donate else pages
 
     def produce_batch(self, store: PartitionedStore, pid: int) -> MiniBatch:
         """Extract + Transform one partition into a device-ready mini-batch.
@@ -272,11 +421,89 @@ class PreStoEngine:
         private); deterministic in (store, pid), which is what makes
         straggler re-issue and duplicate-drop safe.
         """
-        pages = self.stage_partition(store, pid)
-        pages = jax.tree.map(jnp.asarray, pages)
+        pages = self._put_pages(self.stage_partition(store, pid))
         mb = self.jit_preprocess_cached()(pages)
         jax.block_until_ready(mb)
         return mb
+
+    def produce_batches(
+        self, store: PartitionedStore, pids: Sequence[int]
+    ) -> List[MiniBatch]:
+        """Extract + Transform K partitions with ONE megabatched launch.
+
+        Returns the K mini-batches in `pids` order, bitwise identical to K
+        ``produce_batch`` calls — the whole point is paying one kernel
+        dispatch (and one compile, amortized process-wide) instead of K.
+        Falls back to the solo path on meshed engines (megabatching is a
+        per-unit local launch) and on plans with a non-row-local stage
+        (where stacking rows would not be bitwise-safe).
+        """
+        pids = list(pids)
+        if (
+            len(pids) == 1
+            or self.mesh is not None
+            or not self.lowered_plan.megabatch_safe()
+        ):
+            return [self.produce_batch(store, pid) for pid in pids]
+        stacked = self._put_pages(self.stage_megabatch(store, pids))
+        batches = self.jit_preprocess_megabatch_cached()(stacked)
+        jax.block_until_ready(batches)
+        return list(batches)
+
+    def produce_stream(
+        self,
+        store: PartitionedStore,
+        pids: Iterable[int],
+        *,
+        megabatch: int = 1,
+        overlap: bool = True,
+    ) -> Iterator[Tuple[int, MiniBatch]]:
+        """The zero-stall produce loop: megabatched launches, double-buffered.
+
+        Yields ``(pid, mini-batch)`` in `pids` order.  Partitions are
+        grouped into megabatches of up to ``megabatch`` and each group runs
+        as one launch; with ``overlap`` the NEXT group's partition read and
+        numpy page-build run on a staging thread while the current group's
+        kernel executes (jax dispatch is async), and ``block_until_ready``
+        happens only at delivery — per-partition cost tends to
+        ``max(io, compute)`` instead of ``io + compute``.  Batches are
+        bitwise identical to serial ``produce_batch`` calls either way —
+        plans with a non-row-local stage degrade to K=1 (overlap only).
+        """
+        pids = list(pids)
+        k = max(1, int(megabatch))
+        if k > 1 and not self.lowered_plan.megabatch_safe():
+            k = 1
+        chunks = [pids[i : i + k] for i in range(0, len(pids), k)]
+        if not chunks:
+            return
+        assert self.mesh is None, "produce_stream is a per-unit local loop"
+
+        def dispatch(stacked):
+            """Launch one staged chunk without blocking on the result."""
+            return self.jit_preprocess_megabatch_cached()(
+                self._put_pages(stacked)
+            )
+
+        if not overlap:
+            for chunk in chunks:
+                batches = dispatch(self.stage_megabatch(store, chunk))
+                jax.block_until_ready(batches)
+                yield from zip(chunk, batches)
+            return
+        with ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="presto-stage"
+        ) as stager:
+            staged = stager.submit(self.stage_megabatch, store, chunks[0])
+            for i, chunk in enumerate(chunks):
+                batches = dispatch(staged.result())
+                if i + 1 < len(chunks):  # overlaps the in-flight kernel
+                    staged = stager.submit(
+                        self.stage_megabatch, store, chunks[i + 1]
+                    )
+                for pid, mb in zip(chunk, batches):
+                    jax.block_until_ready(mb)  # block only at delivery
+                    yield pid, mb
 
     def pages_struct(self, rows: int) -> Dict[str, jax.ShapeDtypeStruct]:
         return pages_shape_dtypes(self.spec, rows)

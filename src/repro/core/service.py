@@ -42,6 +42,15 @@ trainer.  This module is that public surface:
   prices the ISP path past the host path (contention-aware cost model).
   Routing never changes batch bytes — only where/when they are produced —
   so every bitwise-identity guarantee above survives skewed placements.
+* The produce hot path is ZERO-STALL by default (``pipeline=True``):
+  engine-backed sessions are *stageable* — a pool worker coalesces up to
+  ``JobSpec.megabatch`` compatible claims into ONE megabatched kernel
+  launch (one dispatch, one process-wide compile via ``core.execcache``),
+  dispatches it asynchronously, and stages the NEXT chunk's partition
+  reads + numpy page-builds while the kernel executes, blocking only at
+  delivery.  Modeled I/O, host staging, and kernel execution overlap;
+  ledgers are still charged per partition to the right owners, and every
+  delivered batch stays bitwise identical to its solo serial run.
 """
 
 from __future__ import annotations
@@ -54,6 +63,8 @@ from concurrent.futures import Future
 from concurrent.futures import TimeoutError as FutureTimeoutError
 from queue import Empty
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple, Union
+
+import jax
 
 from repro.core.costmodel import ContentionAwareCostModel, PartitionCosts
 from repro.core.featcache import CacheKey, FeatureCache
@@ -98,6 +109,11 @@ class JobSpec:
     engine: Optional[PreStoEngine] = None  # prebuilt (shares its jit cache)
     produce_fn: Optional[Callable[[int], Any]] = None  # override / test hook
     use_cache: bool = True  # opt out of the service's shared feature cache
+    # megabatching: a pool worker may coalesce up to this many compatible
+    # claims of this session into ONE megabatched kernel launch (amortized
+    # dispatch; bitwise identical to solo launches).  Engine-backed sessions
+    # only — produce_fn overrides are opaque and never coalesce.
+    megabatch: int = 1
 
     def build_produce(self) -> Tuple[Callable[[int], Any], Optional[PreStoEngine]]:
         """Resolve the per-partition production callable for this job."""
@@ -187,6 +203,25 @@ def _batch_rows(batch: Any) -> int:
         return 0
 
 
+@dataclasses.dataclass
+class _Chunk:
+    """Up to K coalesced claims of one session, staged for one launch.
+
+    The unit the zero-stall worker loop moves through its pipeline: claims
+    are coalesced and their pages staged (reads charged per-partition to the
+    OWNING devices), the launch is dispatched asynchronously, the next
+    chunk's staging overlaps the in-flight kernel, and ``block_until_ready``
+    happens only at delivery.
+    """
+
+    session: "Session"
+    claims: List[Tuple[int, Future, Optional[str]]]
+    pages: Optional[Any]  # staged stacked pages; None = opaque produce_fn
+    stage_s: float = 0.0  # read + page-build seconds (production cost)
+    devs: List[Optional[IspDevice]] = dataclasses.field(default_factory=list)
+    t0: float = 0.0  # dispatch instant
+
+
 class Session:
     """One job's handle on the service: a backpressured mini-batch stream.
 
@@ -200,6 +235,27 @@ class Session:
         self.job = job
         self.name = job.name
         self._produce_fn, self.engine = job.build_produce()
+        # -- zero-stall produce path eligibility --------------------------------
+        # Stageable sessions run the pipelined worker path: reads/page-builds
+        # are separable from the kernel launch, so workers can megabatch K
+        # claims into one launch and overlap the next chunk's staging with
+        # the in-flight kernel.  produce_fn overrides are opaque (no
+        # separable stage), meshed engines launch globally (not per-unit).
+        self._stageable = (
+            service.pipeline
+            and job.produce_fn is None
+            and job.store is not None
+            and self.engine is not None
+            and self.engine.mesh is None
+        )
+        # coalescing additionally needs every lowered stage row-local —
+        # plans with a cross-row operator degrade gracefully to solo
+        # launches (still staged/overlapped) instead of failing claims
+        self._megabatch_k = (
+            max(1, int(job.megabatch))
+            if self._stageable and self.engine.lowered_plan.megabatch_safe()
+            else 1
+        )
         self._cache = service.cache if job.use_cache else None
         self._cache_key = (
             job.cache_key_fn(self.engine) if self._cache is not None else None
@@ -469,7 +525,106 @@ class Session:
         if dev is not None:
             dev.end_claim()
 
-    # -- pool-worker side ------------------------------------------------------
+    # -- pool-worker side: the zero-stall chunk pipeline -----------------------
+
+    def _stage_chunk(
+        self, claim: Tuple[int, Future, Optional[str]], prefer: Optional[int]
+    ) -> Optional["_Chunk"]:
+        """Coalesce up to K compatible claims and stage their pages.
+
+        Coalesced claims ride the one worker slot the scheduler already
+        reserved (a megabatch is ONE launch occupying one unit); per-device
+        plan slices bound the first claim, the ride-alongs are bounded by
+        the session's own queue depth.  Every partition read is charged to
+        its owning device inside ``store.read``.  Returns None when staging
+        fails — the claims' futures carry the error (deterministic in pid,
+        so straggler twins would fail identically).
+        """
+        claims = [claim]
+        for _ in range(self._megabatch_k - 1):
+            extra = self._queue.claim(prefer_device=prefer)
+            if extra is None:
+                break
+            claims.append(extra)
+        if not self._stageable:
+            return _Chunk(self, claims, None)
+        t0 = time.perf_counter()
+        try:
+            pages = self.engine.stage_megabatch(
+                self.job.store, [pid for pid, _f, _r in claims]
+            )
+        except BaseException as exc:  # noqa: BLE001 — consumer re-raises
+            for pid, _f, _r in claims:
+                self._on_produce_error(pid, exc)
+            return None
+        return _Chunk(self, claims, pages, stage_s=time.perf_counter() - t0)
+
+    def _dispatch_chunk(self, chunk: "_Chunk") -> Tuple[str, Any]:
+        """Launch a staged chunk.  Engine chunks dispatch ASYNChronously —
+        the compiled program executes while the worker stages the next chunk
+        — so the return is a handle ``_finish_chunk`` resolves at delivery.
+        Opaque produce_fn chunks run synchronously here (no separable
+        stage), preserving the legacy path's semantics exactly."""
+        chunk.devs = [
+            self._route_begin(pid, route) for pid, _f, route in chunk.claims
+        ]
+        chunk.t0 = time.perf_counter()
+        try:
+            if chunk.pages is None:
+                ((pid, _f, _r),) = chunk.claims
+                return "value", [self._produce_fn(pid)]
+            engine = self.engine
+            if len(chunk.claims) == 1:
+                # reuse the solo executable (one compile shared with every
+                # produce_batch of this signature, process-wide)
+                pages = {k: v[0] for k, v in chunk.pages.items()}
+                return "async", engine.jit_preprocess_cached()(
+                    engine._put_pages(pages)
+                )
+            return "async", engine.jit_preprocess_megabatch_cached()(
+                engine._put_pages(chunk.pages)
+            )
+        except BaseException as exc:  # noqa: BLE001 — consumer re-raises
+            return "error", exc
+
+    def _finish_chunk(
+        self, chunk: "_Chunk", handle: Tuple[str, Any], overlap_s: float = 0.0
+    ) -> None:
+        """Resolve a dispatched chunk: block (only) at delivery, complete
+        every claim's future, and charge the ledgers per claim route.
+
+        ``overlap_s`` is time the worker spent staging the NEXT chunk while
+        this one's kernel ran; it is excluded from this chunk's produce time
+        (it is charged to the next chunk's own ``stage_s``) so per-session
+        ``produce_time_s`` and the planner's measured per-worker P never
+        double-count the overlapped staging."""
+        kind, payload = handle
+        try:
+            if kind == "error":
+                for pid, _f, _r in chunk.claims:
+                    self._on_produce_error(pid, payload)
+                return
+            if kind == "async":
+                try:
+                    jax.block_until_ready(payload)
+                except BaseException as exc:  # noqa: BLE001
+                    for pid, _f, _r in chunk.claims:
+                        self._on_produce_error(pid, exc)
+                    return
+                batches = (
+                    [payload] if len(chunk.claims) == 1 else list(payload)
+                )
+            else:
+                batches = payload
+            dt = chunk.stage_s + max(
+                0.0, time.perf_counter() - chunk.t0 - overlap_s
+            )
+            share = dt / max(len(chunk.claims), 1)
+            for (pid, _f, route), batch in zip(chunk.claims, batches):
+                self._on_produced(pid, batch, share, route)
+        finally:
+            for dev in chunk.devs:
+                self._route_end(dev)
 
     def _cache_probe(self, pid: int, fresh: bool) -> Optional[Any]:
         """SessionQueue's claim-time lookup into the shared feature cache.
@@ -617,11 +772,18 @@ class PreprocessingService:
         devices: Optional[Union[int, DeviceFleet]] = None,
         locality: bool = True,
         cost_model: Optional[ContentionAwareCostModel] = None,
+        pipeline: bool = True,
     ):
         assert num_workers >= 1, "pool needs at least one worker"
         self.num_workers = num_workers
         self.cache = cache  # ONE shared feature cache across every tenant
         self.locality = locality
+        # pipeline=False disables the zero-stall worker path (megabatch
+        # coalescing + stage/kernel overlap): every produce runs the legacy
+        # synchronous claim->produce->complete loop.  The bench's serial
+        # baseline and a safety hatch; batches are bitwise identical either
+        # way.
+        self.pipeline = pipeline
         self.cost_model = cost_model or ContentionAwareCostModel()
         if isinstance(devices, int):
             # budgets from the SAME model that prices routing decisions, so
@@ -805,7 +967,7 @@ class PreprocessingService:
                 sess._active_by_dev[wdev] = sess._active_by_dev.get(wdev, 1) - 1
 
     def _next_task(
-        self, wdev: Optional[int] = None
+        self, wdev: Optional[int] = None, stageable_only: bool = False
     ) -> Optional[Tuple[Session, Tuple[int, Future, Optional[str]]]]:
         """Two-pass round-robin claim.  The claim itself — which may probe
         the feature cache, hash a disk partition's bytes, or read a spilled
@@ -827,6 +989,8 @@ class PreprocessingService:
                 n = len(self._sessions)
                 candidates = [self._sessions[(self._rr + i) % n] for i in range(n)]
             for i, sess in enumerate(candidates):
+                if stageable_only and not sess._stageable:
+                    continue  # overlap prefetch: only separable-stage work
                 with self._lock:
                     if sess.cancelled:
                         continue
@@ -864,28 +1028,64 @@ class PreprocessingService:
         for s in finished:
             self._retire(s)
 
+    def _stage_task(
+        self, sess: Session, claim, wdev: Optional[int]
+    ) -> Optional[_Chunk]:
+        """Coalesce + stage one claimed task into a launchable chunk.
+
+        A failed staging has already errored its claims' futures; the
+        worker's reserved slot is released here so shares stay exact."""
+        prefer = wdev if (self.locality and wdev is not None) else None
+        chunk = sess._stage_chunk(claim, prefer)
+        if chunk is None:
+            self._release_slot(sess, wdev)
+            if sess._queue.exhausted:
+                self._retire(sess)
+            self._wake()
+        return chunk
+
     def _worker_loop(self, idx: int) -> None:
+        """The zero-stall produce loop of one pool worker.
+
+        Stageable (engine-backed) sessions run a double-buffered pipeline:
+        claim -> coalesce up to ``JobSpec.megabatch`` compatible claims ->
+        stage reads/page-builds -> dispatch ONE (mega)batched kernel launch
+        asynchronously -> while it executes, claim + stage the NEXT chunk ->
+        block only at delivery.  Per-partition cost tends to
+        ``max(io, compute)`` instead of ``io + compute``, and K claims pay
+        one dispatch.  Opaque produce_fn sessions run their legacy
+        synchronous path through the same chunk machinery (no coalescing,
+        no overlap — their stage is not separable).
+        """
         wdev = self._worker_device[idx]
-        while not self._stop.is_set():
-            task = self._next_task(wdev)
-            if task is None:
-                self._prune()
-                # idle: sleep until nudged (submit / freed slot / pacing
-                # signal); the timeout keeps straggler-timeout scans alive
-                with self._wake_cv:
-                    self._wake_cv.wait(timeout=0.05)
+        staged: Optional[_Chunk] = None
+        while staged is not None or not self._stop.is_set():
+            if staged is None:
+                task = self._next_task(wdev)
+                if task is None:
+                    self._prune()
+                    # idle: sleep until nudged (submit / freed slot / pacing
+                    # signal); the timeout keeps straggler scans alive
+                    with self._wake_cv:
+                        self._wake_cv.wait(timeout=0.05)
+                    continue
+                staged = self._stage_task(task[0], task[1], wdev)
                 continue
-            sess, (pid, _fut, route) = task
-            dev = sess._route_begin(pid, route)  # device occupancy, ISP route
-            t0 = time.perf_counter()
+            chunk, staged = staged, None
+            sess = chunk.session
             try:
-                batch = sess._produce_fn(pid)
-            except BaseException as exc:  # noqa: BLE001 — consumer re-raises
-                sess._on_produce_error(pid, exc)
-            else:
-                sess._on_produced(pid, batch, time.perf_counter() - t0, route)
+                handle = sess._dispatch_chunk(chunk)
+                overlap_s = 0.0
+                if handle[0] == "async" and not self._stop.is_set():
+                    # double buffering: the next chunk's partition read and
+                    # numpy page-build overlap the in-flight kernel
+                    t_ov = time.perf_counter()
+                    nxt = self._next_task(wdev, stageable_only=True)
+                    if nxt is not None:
+                        staged = self._stage_task(nxt[0], nxt[1], wdev)
+                    overlap_s = time.perf_counter() - t_ov
+                sess._finish_chunk(chunk, handle, overlap_s)
             finally:
-                sess._route_end(dev)
                 self._release_slot(sess, wdev)
                 if sess._queue.exhausted:
                     self._retire(sess)

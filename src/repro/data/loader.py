@@ -72,6 +72,15 @@ class WorkQueue:
         with self._lock:
             return len(self._pending) + len(self._inflight)
 
+    def next_deadline(self) -> Optional[float]:
+        """Earliest instant an inflight claim becomes straggler-overdue
+        (``time.monotonic`` clock), or None with nothing inflight.  Idle
+        claimers sleep until this instant instead of polling."""
+        with self._lock:
+            if not self._inflight:
+                return None
+            return min(self._inflight.values()) + self.straggler_timeout
+
     def _take_first(self, pred: Callable[[int], bool]) -> Optional[int]:
         """Pop the first pending pid matching `pred` (FIFO within class)."""
         for i, pid in enumerate(self._pending):
@@ -355,6 +364,12 @@ class PrefetchLoader:
             threading.Thread(target=self._run, daemon=True) for _ in range(num_workers)
         ]
         self._stop = threading.Event()
+        # Idle-worker wakeups: a worker with nothing claimable sleeps on this
+        # condition until a completion changes claimability (straggler gone /
+        # queue exhausted), the next straggler deadline passes, or stop() —
+        # no polling loop burning CPU while partitions are in flight
+        # elsewhere.
+        self._idle_cv = threading.Condition()
         self._started = False
         self._produced = 0
         self._total = self.work.total
@@ -365,16 +380,35 @@ class PrefetchLoader:
             t.start()
         return self
 
+    def _wake_idle(self) -> None:
+        with self._idle_cv:
+            self._idle_cv.notify_all()
+
     def _run(self) -> None:
         while not self._stop.is_set():
             pid = self.work.claim()
             if pid is None:
                 if self.work.exhausted:
                     return
-                time.sleep(0.005)
+                # Nothing claimable: every pending pid is inflight elsewhere
+                # and none is overdue yet.  Sleep until a completion notifies
+                # us or the earliest straggler deadline arrives — whichever
+                # first — instead of spin-polling.
+                deadline = self.work.next_deadline()
+                with self._idle_cv:
+                    if self._stop.is_set() or self.work.exhausted:
+                        continue
+                    if deadline is None:
+                        self._idle_cv.wait(timeout=0.05)  # claim/wait race
+                    else:
+                        self._idle_cv.wait(
+                            timeout=max(0.0, deadline - time.monotonic())
+                        )
                 continue
             batch = self.produce_fn(pid)
-            if self.work.complete(pid):  # drop duplicate straggler results
+            won = self.work.complete(pid)  # drop duplicate straggler results
+            self._wake_idle()  # claimability / exhaustion changed
+            if won:
                 # Timed put: a plain blocking put() would ignore stop()
                 # forever when the consumer goes away with the queue full.
                 while not self._stop.is_set():
@@ -412,6 +446,7 @@ class PrefetchLoader:
 
     def stop(self) -> None:
         self._stop.set()
+        self._wake_idle()
         me = threading.current_thread()
         for t in self._threads:
             if t.is_alive() and t is not me:

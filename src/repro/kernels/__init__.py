@@ -36,9 +36,33 @@ FUSED_KERNELS = {
     ("decode.bytesplit", "bucketize", "sigridhash"): fused_gen,
 }
 
+# Operator kinds whose output at row r depends ONLY on input values of row r
+# (decodes, per-value transforms, and their fusions — everything here is
+# elementwise over the row-group axis, with per-feature parameters riding the
+# feature axis).  This is the property that makes the megabatched produce
+# path safe: stacking K partitions along the row axis and running ONE launch
+# is bitwise identical to K solo launches iff every lowered stage kind is
+# row-local.  ``core.opgraph.LoweredPlan.megabatch_safe`` consults this set;
+# a new operator that mixes rows (e.g. a batch-norm over the partition) must
+# NOT be added here, and its plans will simply refuse to megabatch.
+ROW_LOCAL_KINDS = frozenset(
+    {
+        "decode.bytesplit",
+        "decode.bitpack",
+        "decode.lengths",
+        "decode.labels",
+        "bucketize",
+        "sigridhash",
+        "lognorm",
+        "formbatch",  # pure per-row reshapes/transposes
+    }
+    | {"fused:" + "+".join(kinds) for kinds in FUSED_KERNELS}
+)
+
 __all__ = [
     "FUSED_KERNELS",
     "OP_KERNELS",
+    "ROW_LOCAL_KINDS",
     "bucketize",
     "decode_bitpack",
     "decode_bytesplit",

@@ -61,9 +61,17 @@ cache flags:
   --spill-devices K          add a spill tier on K simulated storage devices
                              (evictions land there; 0 = no spill tier; K ==
                              --devices reuses the shared fleet's ledgers)
+pipeline flags:
+  --megabatch K              pool workers coalesce up to K same-job claims
+                             into ONE megabatched kernel launch (bitwise
+                             identical to solo launches, one dispatch)
+  --no-pipeline              legacy serial worker loop: no megabatching, no
+                             read/compute overlap (A/B baseline)
 
 examples:
   PYTHONPATH=src python -m repro.launch.serve_preprocess --jobs 2 --reduced
+  PYTHONPATH=src python -m repro.launch.serve_preprocess \\
+      --jobs 2 --reduced --megabatch 4
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
       --jobs 3 --reduced --cache --cache-mb 64 --spill-devices 4
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
@@ -118,6 +126,12 @@ def main(argv=None) -> None:
                     help="cache memory-tier bound in MB (default 256)")
     ap.add_argument("--spill-devices", type=int, default=0,
                     help="spill tier on K simulated devices (0 = none)")
+    ap.add_argument("--megabatch", type=int, default=1, metavar="K",
+                    help="coalesce up to K same-job claims into one "
+                         "megabatched kernel launch (default 1)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="disable the zero-stall worker path (megabatching "
+                         "+ read/compute overlap); legacy serial produces")
     args = ap.parse_args(argv)
 
     workers = args.workers if args.workers is not None else args.jobs + 1
@@ -138,7 +152,7 @@ def main(argv=None) -> None:
         cache = FeatureCache(args.cache_mb << 20, spill=spill)
     service = PreprocessingService(
         num_workers=workers, cache=cache, devices=fleet,
-        cost_model=cost_model)
+        cost_model=cost_model, pipeline=not args.no_pipeline)
     sessions, results, threads = [], [], []
     rms = itertools.cycle(args.rm)
     for j in range(args.jobs):
@@ -156,6 +170,7 @@ def main(argv=None) -> None:
             store=store,
             placement=args.placement,
             target_samples_per_s=args.qos,
+            megabatch=args.megabatch,
         ))
         result: dict = {}
         t = threading.Thread(target=_consume,

@@ -1,0 +1,299 @@
+"""Zero-stall produce path: megabatching, overlap, and compile discipline.
+
+Three invariants of the rebuilt hot path:
+
+* **Bitwise identity** — megabatched launches (K partitions, one dispatch)
+  and the double-buffered ``produce_stream`` deliver exactly the bytes K
+  solo ``produce_batch`` calls deliver, with the process-wide executable
+  registry on and off.
+* **Compile-count discipline** — concurrent pool workers on one engine
+  trigger exactly ONE compile per shape, and independently built engines
+  with equal cache signatures share ONE executable through
+  ``core.execcache.EXECUTABLES`` instead of recompiling per engine.
+* **Safety** — a lowered plan with a non-row-local stage refuses to
+  megabatch rather than silently diverge.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_recsys
+from repro.core.execcache import EXECUTABLES, ExecKey, ExecutableCache
+from repro.core.presto import PreStoEngine
+from repro.core.service import JobSpec, PreprocessingService
+from repro.core.spec import TransformSpec
+from repro.data.loader import PrefetchLoader, WorkQueue
+from repro.data.storage import PartitionedStore
+from repro.data.synth import SyntheticRecSysSource
+
+
+def _fixture(rows=256, partitions=12, rm="rm1"):
+    rcfg = get_recsys(rm, reduced=True)
+    src = SyntheticRecSysSource(rcfg.data, rows=rows)
+    spec = TransformSpec.from_source(src)
+    store = PartitionedStore(partitions, num_devices=4, source=src)
+    return spec, store
+
+
+def _assert_bitwise(ref, got):
+    assert sorted(got) == sorted(ref)
+    for pid in ref:
+        for key in ref[pid]:
+            np.testing.assert_array_equal(
+                np.asarray(ref[pid][key]), np.asarray(got[pid][key]),
+                err_msg=f"pid={pid} key={key}",
+            )
+
+
+# -- megabatched execution ----------------------------------------------------
+
+
+@pytest.mark.parametrize("placement", ["presto", "hybrid"])
+def test_produce_batches_bitwise_identical_to_solo(placement):
+    spec, store = _fixture(partitions=6)
+    engine = PreStoEngine(spec, placement=placement)
+    solo = {pid: engine.produce_batch(store, pid) for pid in range(6)}
+    mega = dict(zip(range(6), engine.produce_batches(store, range(6))))
+    _assert_bitwise(solo, mega)
+
+
+@pytest.mark.parametrize("megabatch,overlap", [(1, True), (3, True), (4, False), (5, True)])
+def test_produce_stream_bitwise_with_remainder_chunks(megabatch, overlap):
+    """The double-buffered stream (any K, including non-dividing Ks whose
+    last chunk is a remainder) delivers the serial loop's exact bytes in
+    pid order."""
+    spec, store = _fixture(partitions=10)
+    engine = PreStoEngine(spec)
+    solo = {pid: engine.produce_batch(store, pid) for pid in range(10)}
+    out = list(engine.produce_stream(store, range(10), megabatch=megabatch,
+                                     overlap=overlap))
+    assert [pid for pid, _ in out] == list(range(10))  # delivery order kept
+    _assert_bitwise(solo, dict(out))
+
+
+def test_produce_stream_bitwise_without_exec_cache():
+    """Registry off: a private-compile engine produces the same bytes."""
+    spec, store = _fixture(partitions=4)
+    shared = PreStoEngine(spec)
+    private = PreStoEngine(spec, use_exec_cache=False)
+    _assert_bitwise(
+        {pid: shared.produce_batch(store, pid) for pid in range(4)},
+        dict(private.produce_stream(store, range(4), megabatch=2)),
+    )
+
+
+def test_megabatch_refuses_non_row_local_stage(monkeypatch):
+    """A stage kind outside kernels.ROW_LOCAL_KINDS must refuse to megabatch
+    (stacking rows would not be bitwise-equal for cross-row operators)."""
+    spec, store = _fixture(partitions=2)
+    engine = PreStoEngine(spec)
+    plan = engine.lowered_plan
+    assert plan.megabatch_safe()
+    monkeypatch.setattr(plan.stages[0], "kind", "batchnorm.partition")
+    assert not plan.megabatch_safe()
+    with pytest.raises(AssertionError, match="row-local"):
+        engine.preprocess_megabatch(engine.stage_megabatch(store, [0, 1]))
+    # the produce surfaces degrade gracefully to solo launches instead
+    assert len(engine.produce_batches(store, [0, 1])) == 2
+    assert [p for p, _ in
+            engine.produce_stream(store, [0, 1], megabatch=2)] == [0, 1]
+
+
+# -- the shared executable registry -------------------------------------------
+
+
+def _unique_spec(rows: int, embedding_bump: int):
+    """A Transform whose cache signature no other test shares (the spec
+    digest covers table sizes, so bumping embedding_rows gives this test a
+    private registry key without changing page/batch geometry)."""
+    import dataclasses
+
+    rcfg = get_recsys("rm1", reduced=True)
+    cfg = dataclasses.replace(
+        rcfg.data, embedding_rows=rcfg.data.embedding_rows + embedding_bump
+    )
+    src = SyntheticRecSysSource(cfg, rows=rows)
+    return TransformSpec.from_source(src), src
+
+
+def test_equal_signature_engines_share_one_executable():
+    spec, _store = _fixture(rows=128, partitions=2)
+    e1 = PreStoEngine(spec)
+    e2 = PreStoEngine(spec)  # independently built, equal signature
+    assert e1.cache_signature() == e2.cache_signature()
+    assert e1.jit_preprocess_cached() is e2.jit_preprocess_cached()
+    assert e1.jit_preprocess_megabatch_cached() is e2.jit_preprocess_megabatch_cached()
+    # independently built from an EQUAL spec (the multi-tenant norm: each
+    # tenant constructs its own) still shares
+    spec_twin, _ = _fixture(rows=128, partitions=2)
+    assert PreStoEngine(spec_twin).jit_preprocess_cached() is e1.jit_preprocess_cached()
+    # a different Transform must NOT share
+    spec3, _src = _unique_spec(rows=128, embedding_bump=3)
+    e3 = PreStoEngine(spec3)
+    assert e3.jit_preprocess_cached() is not e1.jit_preprocess_cached()
+    # opting out compiles privately
+    e4 = PreStoEngine(spec, use_exec_cache=False)
+    assert e4.jit_preprocess_cached() is not e1.jit_preprocess_cached()
+
+
+def test_concurrent_workers_one_engine_exactly_one_compile():
+    """Compile-count discipline: a pool of workers hammering one engine's
+    ``jit_preprocess_cached`` traces exactly once per shape."""
+    rows = 320
+    spec, src = _unique_spec(rows=rows, embedding_bump=7)
+    store = PartitionedStore(12, num_devices=4, source=src)
+    engine = PreStoEngine(spec)
+    key = ExecKey(engine.cache_signature(), "solo", None)
+    assert EXECUTABLES.trace_count(key) == 0
+
+    with PreprocessingService(num_workers=4) as svc:
+        session = svc.submit(JobSpec(
+            name="compile-discipline", partitions=range(12), engine=engine,
+            store=store, units=4))
+        assert sorted(pid for pid, _ in session) == list(range(12))
+
+    traces = EXECUTABLES.traces(key)
+    assert traces == [{"k": 1, "rows": rows}], (
+        f"expected exactly one compile for {rows}-row solo shape, "
+        f"saw {traces}")
+    # a second engine with the same signature reuses it: still one compile
+    e2 = PreStoEngine(spec)
+    e2.produce_batch(store, 0)
+    assert EXECUTABLES.trace_count(key) == 1
+
+
+def test_megabatch_shapes_compile_once_each():
+    rows = 384
+    spec, src = _unique_spec(rows=rows, embedding_bump=13)
+    store = PartitionedStore(8, num_devices=4, source=src)
+    engine = PreStoEngine(spec)
+    key = ExecKey(engine.cache_signature(), "mega", None)
+
+    engine.produce_batches(store, range(4))
+    engine.produce_batches(store, range(4, 8))  # same K: no retrace
+    assert EXECUTABLES.traces(key) == [{"k": 4, "rows": rows}]
+    engine.produce_batches(store, range(2))  # new K: one more
+    assert EXECUTABLES.trace_count(key) == 2
+
+
+def test_registry_clear_and_stats_are_coherent():
+    reg = ExecutableCache()
+    key = ExecKey("sig", "solo", None)
+    calls = []
+    fn = reg.get_or_build(key, lambda: lambda pages: calls.append(1))
+    assert reg.get_or_build(key, lambda: None) is fn
+    assert reg.stats()["entries"] == 1 and reg.stats()["hits"] == 1
+    assert reg.stats()["builds"] == 1
+    reg.clear()
+    assert reg.stats() == {"entries": 0, "hits": 0, "builds": 0, "traces": 0}
+
+
+# -- service-level megabatching -----------------------------------------------
+
+
+def test_service_megabatch_session_bitwise_and_complete():
+    spec, store = _fixture(partitions=12)
+    engine = PreStoEngine(spec)
+    solo = {pid: engine.produce_batch(store, pid) for pid in range(12)}
+    with PreprocessingService(num_workers=2) as svc:
+        session = svc.submit(JobSpec(
+            name="mega", partitions=range(12), engine=engine, store=store,
+            units=2, megabatch=4, queue_depth=12))
+        got = {pid: mb for pid, mb in session}
+        st = session.stats()
+    _assert_bitwise(solo, got)
+    assert st.done and st.produced == 12 and st.duplicates_dropped == 0
+
+
+def test_service_pipeline_off_still_bitwise():
+    spec, store = _fixture(partitions=8)
+    engine = PreStoEngine(spec)
+    solo = {pid: engine.produce_batch(store, pid) for pid in range(8)}
+    with PreprocessingService(num_workers=2, pipeline=False) as svc:
+        session = svc.submit(JobSpec(
+            name="legacy", partitions=range(8), engine=engine, store=store))
+        got = {pid: mb for pid, mb in session}
+    _assert_bitwise(solo, got)
+
+
+def test_service_megabatch_with_device_fleet_charges_owners():
+    """Megabatched produces still charge every partition's read to its
+    OWNING device and route ops per claim — coalescing never blurs the
+    per-device ledgers."""
+    from repro.data.storage import DeviceFleet
+
+    rcfg = get_recsys("rm1", reduced=True)
+    src = SyntheticRecSysSource(rcfg.data, rows=256)
+    spec = TransformSpec.from_source(src)
+    fleet = DeviceFleet(4)
+    store = PartitionedStore(12, num_devices=4, source=src, fleet=fleet)
+    plain_store = PartitionedStore(12, num_devices=4, source=src)
+    engine = PreStoEngine(spec)
+    solo = {pid: engine.produce_batch(plain_store, pid) for pid in range(12)}
+    with PreprocessingService(num_workers=4, devices=fleet) as svc:
+        session = svc.submit(JobSpec(
+            name="mega-fleet", partitions=range(12), engine=engine,
+            store=store, units=4, megabatch=3, queue_depth=12))
+        got = {pid: mb for pid, mb in session}
+        st = session.stats()
+    _assert_bitwise(solo, got)
+    assert st.done
+    # every device owns 3 of the 12 round-robin partitions: all were read
+    for dev in fleet:
+        assert dev.bytes_streamed > 0
+    produced_total = sum(st.device_produced.values()) + st.host_fallbacks
+    assert produced_total == 12
+
+
+# -- prefetch loader wakeups (satellite) --------------------------------------
+
+
+def test_workqueue_next_deadline_tracks_earliest_claim():
+    q = WorkQueue([0, 1], straggler_timeout=5.0)
+    assert q.next_deadline() is None
+    t0 = time.monotonic()
+    q.claim()
+    ddl = q.next_deadline()
+    assert ddl is not None and 4.0 < ddl - t0 <= 5.1
+    q.claim()
+    assert q.next_deadline() == ddl  # earliest claim rules
+    q.complete(0)
+    q.complete(1)
+    assert q.next_deadline() is None
+
+
+def test_prefetch_loader_cv_delivers_all_with_slow_producer():
+    """Idle workers sleep on the condition variable (no poll loop) yet still
+    wake for straggler deadlines and completions: everything is delivered
+    exactly once."""
+    def produce(pid):
+        if pid == 0:
+            time.sleep(0.15)  # straggler: others must wake to re-issue it
+        return pid * 10
+
+    loader = PrefetchLoader(range(6), produce, num_workers=3, depth=2,
+                            straggler_timeout=0.05)
+    got = dict(loader)
+    loader.stop()
+    assert got == {pid: pid * 10 for pid in range(6)}
+    assert loader.work.reissues >= 1  # the deadline wake actually fired
+
+
+def test_prefetch_loader_stop_wakes_idle_workers_promptly():
+    release = threading.Event()
+
+    def produce(pid):
+        if pid == 0:
+            release.wait(0.5)  # hold one worker; the other goes idle
+        return pid
+
+    loader = PrefetchLoader([0, 1], produce, num_workers=2,
+                            straggler_timeout=30.0).start()
+    time.sleep(0.1)  # let the idle worker reach its long deadline wait
+    t0 = time.perf_counter()
+    loader.stop()  # must notify, not wait out the 30 s deadline
+    release.set()
+    assert time.perf_counter() - t0 < 3.0
