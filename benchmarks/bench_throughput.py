@@ -30,11 +30,23 @@ beat the blind run's makespan with a non-zero host-fallback count.
 per-partition loop (read -> page-build -> one solo launch -> block) against
 ``PreStoEngine.produce_stream`` — megabatched launches (K partitions, one
 kernel dispatch) with the next chunk's read/page-build double-buffered
-behind the in-flight kernel.  Sweeps megabatch K with overlap on and off,
-asserts every configuration bitwise identical to the serial run (with the
-process-wide executable cache on AND off), asserts the best pipelined
-config at least matches serial throughput, and writes the whole sweep to a
-``BENCH_throughput.json`` artifact so the perf trajectory is tracked.
+behind the in-flight kernel.  Sweeps megabatch K with overlap on and off
+plus lookahead depth (how many staged chunks queue behind the in-flight
+kernel), asserts every configuration bitwise identical to the serial run
+(with the process-wide executable cache on AND off), asserts the best
+pipelined config at least matches serial throughput, and writes the whole
+sweep to a ``BENCH_throughput.json`` artifact so the perf trajectory is
+tracked.
+
+``--autotune`` benches the self-tuning produce path through the service
+surface: static megabatch-K sessions for every rung of the power-of-two
+ladder vs one session with the online ``MegabatchTuner`` enabled (seeded
+from the cost model, hill-climbing K from measured launch timings).
+Asserts the tuned K lands within one ladder step of the best static K,
+autotuned throughput beats the serial loop and stays within noise of the
+best static session, and every mode — autotune on/off, lookahead 1/2/4,
+cache pre-warm on/off — delivers batches bitwise identical to the serial
+reference.  Writes the same ``BENCH_throughput.json`` artifact.
 """
 
 from __future__ import annotations
@@ -49,6 +61,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import BENCH_ROWS, emit, rm_fixture, time_call
+from repro.core.autotune import k_ladder
 from repro.core.costmodel import DEFAULT_PLACEMENT_MODEL, ContentionAwareCostModel
 from repro.core.execcache import EXECUTABLES
 from repro.core.featcache import FeatureCache
@@ -76,9 +89,18 @@ modes:
 
   --pipeline                 zero-stall produce path: serial loop vs
                              megabatched + double-buffered produce_stream;
-                             sweeps megabatch K, asserts bitwise identity
-                             (executable cache on and off) and pipelined >=
-                             serial; writes BENCH_throughput.json
+                             sweeps megabatch K and lookahead depth, asserts
+                             bitwise identity (executable cache on and off)
+                             and pipelined >= serial; writes
+                             BENCH_throughput.json
+
+  --autotune                 self-tuning produce path: static-K service
+                             sessions vs one session with the online
+                             MegabatchTuner; asserts tuned K within one
+                             ladder step of the best static K, autotuned >
+                             serial, and bitwise identity across autotune /
+                             lookahead / pre-warm modes; writes
+                             BENCH_throughput.json
 
 examples:
   PYTHONPATH=src python -m benchmarks.bench_throughput --multi-tenant --smoke
@@ -86,6 +108,7 @@ examples:
       --multi-tenant --smoke --cache --overlap 0.5
   PYTHONPATH=src python -m benchmarks.bench_throughput --skew 1.1 --smoke
   PYTHONPATH=src python -m benchmarks.bench_throughput --pipeline --smoke
+  PYTHONPATH=src python -m benchmarks.bench_throughput --autotune --smoke
 """
 
 
@@ -379,6 +402,7 @@ def run_pipeline(
     partitions: int = 12,
     rows: int = BENCH_ROWS,
     ks=(1, 2, 4),
+    lookaheads=(1, 2, 4),
     rounds: int = 3,
     min_speedup: float = 1.0,
     out_json: str = "BENCH_throughput.json",
@@ -391,6 +415,9 @@ def run_pipeline(
       launch per K partitions, the next chunk's read/page-build running
       while the current kernel executes.  ``overlap=False`` is also timed
       per K to split the megabatch win from the overlap win.
+    * ``lookahead[D]`` — at the best static K, a depth-D window of staged
+      chunks queued behind the in-flight kernel (D=1 is the classic double
+      buffer).
 
     Every configuration's batches are asserted bitwise identical to the
     serial reference — with the process-wide executable cache on (engines
@@ -429,14 +456,22 @@ def run_pipeline(
                 engine.produce_stream(store, pids, megabatch=k, overlap=overlap)
             )
             assert_bitwise(f"pipelined k={k} overlap={overlap}", got)
+        for d in lookaheads:
+            if d == 1:
+                continue  # identical to the overlap=True point above
+            got = dict(
+                engine.produce_stream(store, pids, megabatch=k, lookahead=d)
+            )
+            assert_bitwise(f"pipelined k={k} lookahead={d}", got)
     # bitwise: executable cache OFF (private compile, fresh engine)
     cold = PreStoEngine(spec, use_exec_cache=False)
     assert_bitwise(
         "exec-cache-off",
-        dict(cold.produce_stream(store, pids, megabatch=max(ks))),
+        dict(cold.produce_stream(store, pids, megabatch=max(ks),
+                                 lookahead=max(lookaheads))),
     )
     print(f"bitwise: megabatched/overlapped == serial for all K in {tuple(ks)} "
-          "(executable cache on and off)")
+          f"x lookahead in {tuple(lookaheads)} (executable cache on and off)")
 
     def t_serial() -> float:
         t0 = time.perf_counter()
@@ -444,9 +479,10 @@ def run_pipeline(
             engine.produce_batch(store, pid)
         return time.perf_counter() - t0
 
-    def t_stream(k: int, overlap: bool) -> float:
+    def t_stream(k: int, overlap: bool, lookahead: int = 1) -> float:
         t0 = time.perf_counter()
-        for _ in engine.produce_stream(store, pids, megabatch=k, overlap=overlap):
+        for _ in engine.produce_stream(store, pids, megabatch=k,
+                                       overlap=overlap, lookahead=lookahead):
             pass
         return time.perf_counter() - t0
 
@@ -494,6 +530,16 @@ def run_pipeline(
     best_k = min(ks, key=lambda k: sweep[k]["overlap_wall_s"])
     best = sweep[best_k]["overlap_wall_s"]
     speedup = serial_s / best
+
+    # lookahead sweep at the best static K: depth-D staged-chunk window
+    la_sweep = {}
+    for d in lookaheads:
+        wd = min(t_stream(best_k, True, d) for _ in range(max(rounds, 1)))
+        la_sweep[d] = {"wall_s": wd, "rows_per_s": total_rows / wd}
+        emit(f"throughput/{rm}/pipeline/lookahead{d}", wd * 1e6 / partitions,
+             f"rows_per_s={total_rows / wd:.0f} k={best_k} "
+             f"speedup={serial_s / wd:.2f}x")
+
     print(f"\n{'config':<19} {'rows/s':>10} {'wall':>9} {'speedup':>8}")
     print(f"{'serial':<19} {serial_rows_s:>10.0f} {serial_s * 1e3:>7.1f}ms "
           f"{'1.00x':>8}")
@@ -503,6 +549,10 @@ def run_pipeline(
             w = sweep[k][key]
             print(f"{label + f' K={k}':<19} {total_rows / w:>10.0f} "
                   f"{w * 1e3:>7.1f}ms {serial_s / w:>7.2f}x")
+    for d in lookaheads:
+        w = la_sweep[d]["wall_s"]
+        print(f"{f'lookahead D={d} K={best_k}':<19} {total_rows / w:>10.0f} "
+              f"{w * 1e3:>7.1f}ms {serial_s / w:>7.2f}x")
     print(f"\nzero-stall produce path: best K={best_k}, "
           f"{speedup:.2f}x over the serial loop "
           f"({serial_rows_s:.0f} -> {total_rows / best:.0f} rows/s; "
@@ -515,6 +565,7 @@ def run_pipeline(
         "rounds": rounds,
         "serial": {"wall_s": serial_s, "rows_per_s": serial_rows_s},
         "pipelined": {str(k): sweep[k] for k in ks},
+        "lookahead": {str(d): la_sweep[d] for d in lookaheads},
         "best": {
             "k": best_k,
             "rows_per_s": total_rows / best,
@@ -530,6 +581,198 @@ def run_pipeline(
         f"pipelined produce path must reach {min_speedup:.2f}x serial "
         f"throughput, measured {speedup:.2f}x"
     )
+    return results
+
+
+def run_autotune(
+    rm: str = "rm1",
+    *,
+    partitions: int = 32,
+    rows: int = 256,
+    ks=(1, 2, 4),
+    lookaheads=(1, 2, 4),
+    rounds: int = 3,
+    noise: float = 0.15,
+    out_json: str = "BENCH_throughput.json",
+) -> dict:
+    """Online megabatch-K autotuning through the service, vs static K.
+
+    One single-worker ``PreprocessingService`` session per configuration:
+
+    * ``static[K]``  — ``JobSpec(megabatch=K)``: the PR-5 fixed-K pipeline.
+    * ``autotuned``  — ``JobSpec(autotune=True)``: the ``MegabatchTuner``
+      seeds K from the cost model and hill-climbs the power-of-two ladder
+      online from measured overlap-corrected launch timings, with a depth-2
+      staged-chunk lookahead window.
+    * ``serial``     — the raw per-partition ``produce_batch`` loop.
+
+    Gates: the tuned K must land within one ladder step of the best static
+    K, the autotuned session must beat the serial loop and stay within
+    ``noise`` of the best static session.  Bitwise identity to the serial
+    reference is asserted for every mode — each static K, autotune with
+    lookahead 1/2/4, and cache pre-warm on/off over mixed cold/cached
+    content.  Timing alternates rounds and takes best-of; wall-clock gates
+    buy up to two extra rounds before failing.
+    """
+    src = SyntheticRecSysSource(RM_CONFIGS[rm], rows=rows)
+    spec = TransformSpec.from_source(src)
+    store = PartitionedStore(partitions, num_devices=4, source=src)
+    engine = PreStoEngine(spec)
+    pids = list(range(partitions))
+    total_rows = rows * partitions
+    ladder = k_ladder(max(ks))
+
+    # reference batches + compile warmup for every chunk shape the tuner
+    # can visit, outside timing
+    reference = {pid: engine.produce_batch(store, pid) for pid in pids}
+    for k in ks:
+        for _ in engine.produce_stream(store, pids, megabatch=k):
+            pass
+
+    def assert_bitwise(tag: str, produced: dict) -> None:
+        missing = [p for p in pids if p not in produced]
+        assert not missing, f"{tag} lost partitions {missing}"
+        for pid in pids:
+            for key in reference[pid]:
+                np.testing.assert_array_equal(
+                    np.asarray(reference[pid][key]),
+                    np.asarray(produced[pid][key]),
+                    err_msg=f"{tag} pid={pid} key={key} diverged",
+                )
+
+    def service_run(cache=None, span=None, **kw):
+        with PreprocessingService(num_workers=1, cache=cache) as svc:
+            t0 = time.perf_counter()
+            sess = svc.submit(JobSpec(
+                name=f"{rm}-auto", partitions=span or range(partitions),
+                engine=engine, store=store, units=1,
+                queue_depth=partitions, **kw))
+            out = {pid: mb for pid, mb in sess}
+            st = sess.stats()
+            wall = time.perf_counter() - t0
+        return wall, out, st
+
+    # bitwise: static rungs, autotune x lookahead, pre-warm on/off
+    for k in ks:
+        _, out, _ = service_run(megabatch=k)
+        assert_bitwise(f"static k={k}", out)
+    for d in lookaheads:
+        _, out, _ = service_run(autotune=True, megabatch=max(ks), lookahead=d)
+        assert_bitwise(f"autotune lookahead={d}", out)
+    # pre-warm needs mixed content: a fully cached session short-circuits
+    # every claim and never opens a peek window, so seed only the back half
+    # — the front half produces cold while the walker pre-warms the rest
+    cache = FeatureCache(capacity_bytes=1 << 30)
+    service_run(cache=cache, span=range(partitions // 2, partitions))
+    _, out, warm_st = service_run(
+        cache=cache, autotune=True, lookahead=max(lookaheads))
+    assert_bitwise("prewarm-on", out)
+    _, out, _ = service_run(
+        cache=cache, autotune=True, lookahead=max(lookaheads), prewarm=False)
+    assert_bitwise("prewarm-off", out)
+    print(f"bitwise: static K in {tuple(ks)}, autotuned lookahead in "
+          f"{tuple(lookaheads)}, pre-warm on/off == serial reference "
+          f"(prewarm_hits={warm_st.prewarm_hits})")
+
+    def t_serial() -> float:
+        t0 = time.perf_counter()
+        for pid in pids:
+            engine.produce_batch(store, pid)
+        return time.perf_counter() - t0
+
+    serial_walls: list = []
+    static_walls = {k: [] for k in ks}
+    auto_walls: list = []
+    tuned_ks: list = []
+
+    def one_round() -> None:  # alternate: drift taxes no one mode
+        serial_walls.append(t_serial())
+        for k in ks:
+            w, _, _ = service_run(megabatch=k)
+            static_walls[k].append(w)
+        w, _, st = service_run(autotune=True, megabatch=max(ks), lookahead=2)
+        auto_walls.append(w)
+        tuned_ks.append(st.tuned_k)
+
+    def verdict():
+        auto_s = min(auto_walls)
+        tuned_k = tuned_ks[auto_walls.index(auto_s)]
+        best_k = min(ks, key=lambda k: min(static_walls[k]))
+        best_static_s = min(static_walls[best_k])
+        steps = abs(ladder.index(tuned_k) - ladder.index(best_k))
+        ok = (steps <= 1
+              and auto_s < min(serial_walls)
+              and auto_s <= best_static_s * (1.0 + noise))
+        return ok, auto_s, tuned_k, best_k, best_static_s, steps
+
+    for _ in range(max(rounds, 1)):
+        one_round()
+    # wall-clock gates on shared runners are noisy: buy up to two extra
+    # rounds before failing — a real regression survives them
+    for _ in range(2):
+        if verdict()[0]:
+            break
+        one_round()
+    ok, auto_s, tuned_k, best_k, best_static_s, steps = verdict()
+    serial_s = min(serial_walls)
+
+    emit(f"throughput/{rm}/autotune/serial", serial_s * 1e6 / partitions,
+         f"rows_per_s={total_rows / serial_s:.0f}")
+    for k in ks:
+        w = min(static_walls[k])
+        emit(f"throughput/{rm}/autotune/static_k{k}", w * 1e6 / partitions,
+             f"rows_per_s={total_rows / w:.0f} speedup={serial_s / w:.2f}x")
+    emit(f"throughput/{rm}/autotune/tuned", auto_s * 1e6 / partitions,
+         f"rows_per_s={total_rows / auto_s:.0f} tuned_k={tuned_k} "
+         f"best_static_k={best_k} speedup={serial_s / auto_s:.2f}x")
+
+    print(f"\n{'config':<16} {'rows/s':>10} {'wall':>9} {'speedup':>8}")
+    print(f"{'serial':<16} {total_rows / serial_s:>10.0f} "
+          f"{serial_s * 1e3:>7.1f}ms {'1.00x':>8}")
+    for k in ks:
+        w = min(static_walls[k])
+        print(f"{f'static K={k}':<16} {total_rows / w:>10.0f} "
+              f"{w * 1e3:>7.1f}ms {serial_s / w:>7.2f}x")
+    print(f"{'autotuned':<16} {total_rows / auto_s:>10.0f} "
+          f"{auto_s * 1e3:>7.1f}ms {serial_s / auto_s:>7.2f}x")
+    print(f"\nself-tuning produce path: tuned K={tuned_k}, best static "
+          f"K={best_k} ({steps} ladder step(s) apart), autotuned "
+          f"{serial_s / auto_s:.2f}x over serial, "
+          f"{best_static_s / auto_s:.2f}x vs best static")
+
+    results = {
+        "rm": rm,
+        "rows": rows,
+        "partitions": partitions,
+        "rounds": len(serial_walls),
+        "serial": {"wall_s": serial_s, "rows_per_s": total_rows / serial_s},
+        "static": {str(k): {"wall_s": min(static_walls[k]),
+                            "rows_per_s": total_rows / min(static_walls[k])}
+                   for k in ks},
+        "autotuned": {
+            "wall_s": auto_s,
+            "rows_per_s": total_rows / auto_s,
+            "tuned_k": tuned_k,
+            "best_static_k": best_k,
+            "ladder": ladder,
+            "ladder_steps_from_best": steps,
+            "prewarm_hits": warm_st.prewarm_hits,
+        },
+        "bitwise_identical": True,
+        "exec_cache": EXECUTABLES.stats(),
+    }
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_json}")
+    assert steps <= 1, (
+        f"tuned K={tuned_k} must land within one ladder step of the best "
+        f"static K={best_k} (ladder {ladder})")
+    assert auto_s < serial_s, (
+        f"autotuned session must beat the serial loop "
+        f"({auto_s:.3f}s vs {serial_s:.3f}s)")
+    assert auto_s <= best_static_s * (1.0 + noise), (
+        f"autotuned session must stay within {noise:.0%} of the best "
+        f"static K={best_k} ({auto_s:.3f}s vs {best_static_s:.3f}s)")
     return results
 
 
@@ -565,10 +808,23 @@ if __name__ == "__main__":
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="--pipeline: assert pipelined >= this x serial "
                          "throughput (default 1.0, i.e. never slower)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="bench the self-tuning produce path: online "
+                         "megabatch-K autotuning vs every static K; asserts "
+                         "tuned K within one ladder step of the best static "
+                         "K and bitwise identity in every mode; writes "
+                         "BENCH_throughput.json")
     ap.add_argument("--out", default="BENCH_throughput.json",
-                    help="--pipeline: JSON artifact path")
+                    help="--pipeline/--autotune: JSON artifact path")
     args = ap.parse_args()
-    if args.pipeline:
+    if args.autotune:
+        run_autotune(
+            partitions=32 if args.smoke else 48,
+            rows=256 if args.smoke else 1024,
+            ks=(1, 2, 4),
+            out_json=args.out,
+        )
+    elif args.pipeline:
         run_pipeline(
             partitions=12 if args.smoke else 32,
             rows=1024 if args.smoke else 2048,

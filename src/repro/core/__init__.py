@@ -2,6 +2,7 @@
 # for RecSys training, as a composable JAX module.  The Transform itself is
 # an operator graph (opgraph) lowered per placement; presto/disagg/hybrid
 # placement and fusion are compiler decisions, not separate code paths.
+from repro.core.autotune import DEFAULT_AUTOTUNE_KMAX, MegabatchTuner, k_ladder
 from repro.core.costmodel import (
     Comparison,
     ContentionAwareCostModel,
@@ -60,11 +61,13 @@ __all__ = [
     "CacheStats",
     "Comparison",
     "ContentionAwareCostModel",
+    "DEFAULT_AUTOTUNE_KMAX",
     "DeviceModel",
     "DeviceTopology",
     "FAMILIES",
     "FeatureCache",
     "JobSpec",
+    "MegabatchTuner",
     "OpGraph",
     "PartitionCosts",
     "PipelineStats",
@@ -83,6 +86,7 @@ __all__ = [
     "cost_efficiency",
     "default_spill_store",
     "energy_efficiency",
+    "k_ladder",
     "lower",
     "lower_transform",
     "measure_throughput",

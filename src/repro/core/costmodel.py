@@ -119,6 +119,34 @@ class PlacementCostModel:
         solo = k * (self.launch_overhead_s + per_partition_s)
         return solo / self.megabatch_launch_s(per_partition_s, k)
 
+    def predicted_megabatch_k(
+        self,
+        per_partition_s: float,
+        k_max: int,
+        *,
+        rel_tolerance: float = 0.05,
+        candidates=None,
+    ) -> int:
+        """The modeled optimum the online tuner seeds from: the smallest K
+        (among ``candidates``, default 1..k_max) whose per-partition launch
+        cost is within ``rel_tolerance`` of the best achievable — the knee
+        of the ``megabatch_amortization`` curve.  Measured hill-climbing
+        (``core.autotune.MegabatchTuner``) owns the final say; this just
+        starts it near the right rung so convergence is cheap."""
+        ks = sorted(
+            {int(k) for k in (candidates or range(1, max(1, int(k_max)) + 1)) if int(k) >= 1}
+        )
+        if not ks:
+            return 1
+        if per_partition_s <= 0.0:
+            return ks[-1]  # overhead-only: the biggest amortization wins
+        cost = {k: self.megabatch_launch_s(per_partition_s, k) / k for k in ks}
+        best = min(cost.values())
+        for k in ks:
+            if cost[k] <= best * (1.0 + rel_tolerance):
+                return k
+        return ks[-1]
+
 
 DEFAULT_PLACEMENT_MODEL = PlacementCostModel()
 

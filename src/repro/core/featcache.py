@@ -72,6 +72,12 @@ class CacheStats:
     spill_hits: int = 0  # hits served by the spill tier (subset of hits)
     follows: int = 0  # probes that joined a leader's in-flight produce
     misses: int = 0
+    # predictive pre-warm probes (issued AHEAD of the claim cursor by the
+    # service's peek-window walker); tallied apart from hits/misses so
+    # hit_rate keeps meaning "fraction of CLAIMS needing no produce" — the
+    # claim that later lands on a pre-warmed key still counts itself
+    prewarm_hits: int = 0  # pre-warm probes that found the content cached
+    prewarm_leases: int = 0  # pre-warm probes that took a produce lease
     insertions: int = 0
     evictions: int = 0  # LRU-tier evictions (spilled or dropped)
     entries: int = 0  # LRU-tier entries right now
@@ -156,6 +162,8 @@ class FeatureCache:
         self._spill_hits = 0
         self._follows = 0
         self._misses = 0
+        self._prewarm_hits = 0
+        self._prewarm_leases = 0
         self._insertions = 0
         self._evictions = 0
         self._bytes_served = 0
@@ -228,16 +236,17 @@ class FeatureCache:
         with self._lock:
             return len(self._lru)
 
-    def peek(self, key: CacheKey) -> Optional[Any]:
-        """Probe both tiers, counting a hit but never a miss (used by
-        straggler re-issues, which must fall through to a real produce
-        rather than follow the possibly-stuck in-flight leader)."""
+    def _lookup(self, key: CacheKey, *, record: bool) -> Optional[Any]:
+        """Probe both tiers.  Tier effects (LRU recency, spill promotion)
+        always happen; hit accounting only when ``record`` — pre-warm probes
+        want the promotion without inflating the claim-path hit stats."""
         with self._lock:
             entry = self._lru.get(key)
             if entry is not None:
                 self._lru.move_to_end(key)
-                self._hits += 1
-                self._bytes_served += entry[1]
+                if record:
+                    self._hits += 1
+                    self._bytes_served += entry[1]
                 # shallow copy: consumers may mutate their batch dict; the
                 # array buffers are shared (jax arrays are immutable)
                 return dict(entry[0])
@@ -245,12 +254,19 @@ class FeatureCache:
             block = self.spill.read(key.block_id())
             if block is not None:
                 with self._lock:
-                    self._hits += 1
-                    self._spill_hits += 1
-                    self._bytes_served += batch_nbytes(block)
+                    if record:
+                        self._hits += 1
+                        self._spill_hits += 1
+                        self._bytes_served += batch_nbytes(block)
                 self.put(key, block)  # promote (insertion counted as such)
                 return block
         return None
+
+    def peek(self, key: CacheKey) -> Optional[Any]:
+        """Probe both tiers, counting a hit but never a miss (used by
+        straggler re-issues, which must fall through to a real produce
+        rather than follow the possibly-stuck in-flight leader)."""
+        return self._lookup(key, record=True)
 
     def get(self, key: CacheKey) -> Optional[Any]:
         """The batch for `key`, or None.  Hits refresh LRU recency; spill
@@ -261,7 +277,7 @@ class FeatureCache:
                 self._misses += 1
         return batch
 
-    def begin(self, key: CacheKey) -> Tuple[str, Any]:
+    def begin(self, key: CacheKey, *, prewarm: bool = False) -> Tuple[str, Any]:
         """Claim-time probe with in-flight dedup.  Returns one of
 
         * ``("hit", batch)``     — cached; use the batch, no produce.
@@ -269,17 +285,33 @@ class FeatureCache:
           batch right now; resolve from its future, no produce.
         * ``("produce", None)``  — the caller is the leader: produce, then
           ``fulfill`` (or ``abandon`` on error) so followers resolve.
+
+        ``prewarm=True`` marks a predictive probe issued AHEAD of the claim
+        cursor (the service's peek-window pre-warmer).  Tier effects are
+        identical — a spill hit is promoted so the upcoming claim lands in
+        the memory tier, and a cold key takes the leader lease so
+        concurrent tenants follow instead of duplicating the produce — but
+        the probe is tallied under ``prewarm_hits``/``prewarm_leases``
+        instead of hits/follows/misses, keeping ``hit_rate`` a claim-path
+        statistic (the claim that follows the pre-warm counts itself).
         """
-        batch = self.peek(key)
+        batch = self._lookup(key, record=not prewarm)
         if batch is not None:
+            if prewarm:
+                with self._lock:
+                    self._prewarm_hits += 1
             return "hit", batch
         with self._lock:
             fut = self._inflight.get(key)
             if fut is not None:
-                self._follows += 1
+                if not prewarm:
+                    self._follows += 1
                 return "follow", fut
             self._inflight[key] = Future()
-            self._misses += 1
+            if prewarm:
+                self._prewarm_leases += 1
+            else:
+                self._misses += 1
             return "produce", None
 
     def fulfill(self, key: CacheKey, batch: Any) -> None:
@@ -344,6 +376,8 @@ class FeatureCache:
                 spill_hits=self._spill_hits,
                 follows=self._follows,
                 misses=self._misses,
+                prewarm_hits=self._prewarm_hits,
+                prewarm_leases=self._prewarm_leases,
                 insertions=self._insertions,
                 evictions=self._evictions,
                 entries=len(self._lru),

@@ -165,6 +165,21 @@ class PoolPlan:
         return sum((self.device_shares or {}).get(device, {}).values())
 
 
+def qos_demand_units(
+    target_samples_per_s: float, worker_samples_per_s: float, *, cap: int = 64
+) -> int:
+    """ceil(T/P) with the 1-unit floor and a sanity cap: the demand a QoS
+    job re-estimates whenever its measured per-worker P moves — on produce
+    completions (``core.service.Session._on_produced``) and on tuned
+    megabatch-K shifts (``Session._on_tuned_k_changed``), both of which
+    funnel through the same re-plan trigger as the hit-rate discount."""
+    if not worker_samples_per_s or worker_samples_per_s <= 0:
+        return 1
+    return max(
+        1, min(int(cap), math.ceil(target_samples_per_s / worker_samples_per_s))
+    )
+
+
 def effective_demand_units(demand: int, hit_rate: float) -> int:
     """ceil(T/P) demand discounted by the job's observed feature-cache hit
     rate: a fraction `hit_rate` of the job's partitions arrive without a

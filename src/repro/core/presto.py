@@ -457,6 +457,7 @@ class PreStoEngine:
         *,
         megabatch: int = 1,
         overlap: bool = True,
+        lookahead: int = 1,
     ) -> Iterator[Tuple[int, MiniBatch]]:
         """The zero-stall produce loop: megabatched launches, double-buffered.
 
@@ -469,6 +470,15 @@ class PreStoEngine:
         ``max(io, compute)`` instead of ``io + compute``.  Batches are
         bitwise identical to serial ``produce_batch`` calls either way —
         plans with a non-row-local stage degrade to K=1 (overlap only).
+
+        ``lookahead`` is the staging window depth: how many chunks may be
+        staged (read + page-built) ahead of the chunk whose kernel is in
+        flight.  1 is the classic double buffer; deeper windows keep reads
+        flowing while delivery (the consumer's side of ``yield``) stalls
+        the dispatch loop, at the price of holding up to ``lookahead``
+        chunks of pages in memory — the service path
+        (``core.service.Session``) adds a byte budget on top
+        (``JobSpec.stage_budget_bytes``); this raw loop does not.
         """
         pids = list(pids)
         k = max(1, int(megabatch))
@@ -478,6 +488,7 @@ class PreStoEngine:
         if not chunks:
             return
         assert self.mesh is None, "produce_stream is a per-unit local loop"
+        lookahead = max(1, int(lookahead))
 
         def dispatch(stacked):
             """Launch one staged chunk without blocking on the result."""
@@ -494,13 +505,21 @@ class PreStoEngine:
         with ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="presto-stage"
         ) as stager:
-            staged = stager.submit(self.stage_megabatch, store, chunks[0])
-            for i, chunk in enumerate(chunks):
-                batches = dispatch(staged.result())
-                if i + 1 < len(chunks):  # overlaps the in-flight kernel
-                    staged = stager.submit(
-                        self.stage_megabatch, store, chunks[i + 1]
+            pending: List = []  # staged-chunk futures, window of `lookahead`
+            nxt = 0
+
+            def top_up() -> None:
+                nonlocal nxt
+                while len(pending) < lookahead and nxt < len(chunks):
+                    pending.append(
+                        stager.submit(self.stage_megabatch, store, chunks[nxt])
                     )
+                    nxt += 1
+
+            top_up()
+            for chunk in chunks:
+                batches = dispatch(pending.pop(0).result())
+                top_up()  # refill behind the in-flight kernel
                 for pid, mb in zip(chunk, batches):
                     jax.block_until_ready(mb)  # block only at delivery
                     yield pid, mb

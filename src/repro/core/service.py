@@ -65,7 +65,9 @@ from queue import Empty
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple, Union
 
 import jax
+import numpy as np
 
+from repro.core.autotune import DEFAULT_AUTOTUNE_KMAX, MegabatchTuner
 from repro.core.costmodel import ContentionAwareCostModel, PartitionCosts
 from repro.core.featcache import CacheKey, FeatureCache
 from repro.core.planner import (
@@ -74,7 +76,9 @@ from repro.core.planner import (
     PoolPlan,
     effective_demand_units,
     plan_pool,
+    qos_demand_units,
 )
+from repro.core.preprocess import stack_pages
 from repro.core.presto import PreStoEngine
 from repro.core.spec import TransformSpec
 from repro.data.loader import SessionQueue
@@ -91,6 +95,9 @@ __all__ = [
 ]
 
 MAX_DEMAND_UNITS = 64  # sanity cap on a single job's ceil(T/P) estimate
+# default byte budget for pages staged AHEAD of their claims (per session);
+# deep-lookahead pre-staging stops, never stalls, when the budget is full
+DEFAULT_STAGE_BUDGET_BYTES = 256 << 20
 
 
 @dataclasses.dataclass
@@ -114,6 +121,27 @@ class JobSpec:
     # dispatch; bitwise identical to solo launches).  Engine-backed sessions
     # only — produce_fn overrides are opaque and never coalesce.
     megabatch: int = 1
+    # -- self-tuning produce path ---------------------------------------------
+    # autotune: hill-climb megabatch K online from measured launches
+    # (core.autotune.MegabatchTuner, seeded from the cost model's predicted
+    # optimum).  ``megabatch`` then acts as the K CAP; left at 1 the tuner
+    # climbs up to DEFAULT_AUTOTUNE_KMAX.
+    autotune: bool = False
+    # lookahead: how many chunks of partition reads + page-builds may be
+    # staged beyond the in-flight kernel.  1 is the classic double buffer
+    # (stage exactly the next chunk); deeper windows pre-stage FUTURE claims
+    # from the queue's non-claiming peek window, budget permitting.
+    lookahead: int = 1
+    # byte budget for pages staged AHEAD of their claims (None = the
+    # service default, 0 disables pre-staging).  Accounted in deterministic
+    # page-geometry bytes — the same bytes the owning device's ledger is
+    # charged when the read actually happens.
+    stage_budget_bytes: Optional[int] = None
+    # prewarm: walk the peek window and issue FeatureCache.begin() leases
+    # ahead of the claim cursor — spill-tier entries get promoted before the
+    # worker arrives, and cold keys take the leader lease early so
+    # concurrent tenants follow instead of duplicating the produce.
+    prewarm: bool = True
 
     def build_produce(self) -> Tuple[Callable[[int], Any], Optional[PreStoEngine]]:
         """Resolve the per-partition production callable for this job."""
@@ -180,6 +208,10 @@ class SessionStats:
     # device -> winner produces that ran ON that device (ISP route); the
     # skew surface: a hot device's count dwarfs the cold ones' under Zipf
     device_produced: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # -- self-tuning produce path observability --
+    tuned_k: int = 1  # megabatch K currently in effect (autotuned or static)
+    staged_bytes_peak: int = 0  # peak bytes pre-staged ahead of claims
+    prewarm_hits: int = 0  # peek-window pre-warm probes that found content cached
 
     @property
     def achieved_samples_per_s(self) -> float:
@@ -256,6 +288,67 @@ class Session:
             if self._stageable and self.engine.lowered_plan.megabatch_safe()
             else 1
         )
+        # -- online megabatch-K autotuning ---------------------------------
+        # One tuner per autotuned session, seeded from the cost model's
+        # predicted amortization knee; every finished launch feeds its
+        # overlap-corrected seconds back (``_finish_chunk``) and a K move
+        # re-bases the planner's P estimate (``_on_tuned_k_changed``).
+        self._tuner: Optional[MegabatchTuner] = None
+        self._rows_hint = 0
+        if self._stageable:
+            self._rows_hint = int(
+                getattr(job.store.source, "rows", None)
+                or self.engine.spec.cfg.rows_per_partition
+            )
+        if (
+            job.autotune
+            and self._stageable
+            and self.engine.lowered_plan.megabatch_safe()
+        ):
+            k_cap = (
+                int(job.megabatch) if job.megabatch > 1 else DEFAULT_AUTOTUNE_KMAX
+            )
+            try:
+                per_part = self.engine.route_costs(
+                    rows=self._rows_hint or None, model=service.cost_model
+                ).isp_s
+            except Exception:
+                per_part = None  # unseedable: the tuner starts at K=1
+            self._tuner = MegabatchTuner(
+                k_cap, per_partition_s=per_part, cost_model=service.cost_model
+            )
+        # -- deep lookahead + cache pre-warm state -------------------------
+        self._lookahead = max(1, int(job.lookahead))
+        self._stage_budget = (
+            DEFAULT_STAGE_BUDGET_BYTES
+            if job.stage_budget_bytes is None
+            else max(0, int(job.stage_budget_bytes))
+        )
+        # pages staged AHEAD of their claims: pid -> (pages, charged_bytes,
+        # stage seconds).  Charged in deterministic page-geometry bytes
+        # (``_page_nbytes``) so the budget check can run BEFORE the read.
+        self._prestaged: Dict[int, Tuple[Any, int, float]] = {}
+        self._staging_now: set = set()
+        self._staged_bytes = 0
+        self._staged_bytes_peak = 0
+        self._page_nbytes = 0
+        if self._stageable and self._rows_hint:
+            try:
+                structs = self.engine.pages_struct(self._rows_hint)
+                self._page_nbytes = int(
+                    sum(
+                        math.prod(s.shape) * np.dtype(s.dtype).itemsize
+                        for s in structs.values()
+                    )
+                )
+            except Exception:
+                self._page_nbytes = 0  # unsized pages: pre-staging disabled
+        # cache pre-warm: pids probed ahead of the cursor (once each), the
+        # leader leases we hold for them, and how many were already cached
+        self._prewarmed: set = set()
+        self._prewarm_cached: set = set()
+        self._prewarm_leases: Dict[int, CacheKey] = {}
+        self._prewarm_hits = 0
         self._cache = service.cache if job.use_cache else None
         self._cache_key = (
             job.cache_key_fn(self.engine) if self._cache is not None else None
@@ -312,7 +405,7 @@ class Session:
         self._backlogged: set = set()
         self.device_weights: Optional[Dict[int, float]] = None
         if self._owner_of is not None:
-            pids = list(self._queue.work._pending)  # pre-start: single-threaded
+            pids = self._queue.work.pending_snapshot()  # pre-start snapshot
             counts: Dict[int, int] = {}
             for pid in pids:
                 counts[self._owner_of(pid)] = counts.get(self._owner_of(pid), 0) + 1
@@ -463,6 +556,11 @@ class Session:
                 done=self._delivered >= self.total,
                 host_fallbacks=self._queue.host_fallbacks,
                 device_produced=dict(self._device_produced),
+                tuned_k=(
+                    self._tuner.k if self._tuner is not None else self._megabatch_k
+                ),
+                staged_bytes_peak=self._staged_bytes_peak,
+                prewarm_hits=self._prewarm_hits,
             )
 
     def _check_liveness(self) -> None:
@@ -527,6 +625,13 @@ class Session:
 
     # -- pool-worker side: the zero-stall chunk pipeline -----------------------
 
+    def _current_k(self) -> int:
+        """Megabatch width for the next launch: the tuner's live proposal
+        when autotuning, else the static ``JobSpec.megabatch``."""
+        if self._tuner is not None:
+            return self._tuner.k
+        return self._megabatch_k
+
     def _stage_chunk(
         self, claim: Tuple[int, Future, Optional[str]], prefer: Optional[int]
     ) -> Optional["_Chunk"]:
@@ -536,12 +641,15 @@ class Session:
         reserved (a megabatch is ONE launch occupying one unit); per-device
         plan slices bound the first claim, the ride-alongs are bounded by
         the session's own queue depth.  Every partition read is charged to
-        its owning device inside ``store.read``.  Returns None when staging
+        its owning device inside ``store.read``.  Partitions the lookahead
+        walker already pre-staged are consumed from the staging buffer
+        (their read time was paid — and recorded — during a previous
+        chunk's kernel); the rest are read here.  Returns None when staging
         fails — the claims' futures carry the error (deterministic in pid,
         so straggler twins would fail identically).
         """
         claims = [claim]
-        for _ in range(self._megabatch_k - 1):
+        for _ in range(self._current_k() - 1):
             extra = self._queue.claim(prefer_device=prefer)
             if extra is None:
                 break
@@ -549,15 +657,156 @@ class Session:
         if not self._stageable:
             return _Chunk(self, claims, None)
         t0 = time.perf_counter()
+        pre_s = 0.0  # stage seconds already paid by the lookahead walker
         try:
-            pages = self.engine.stage_megabatch(
-                self.job.store, [pid for pid, _f, _r in claims]
-            )
+            per = []
+            for pid, _f, _r in claims:
+                entry = self._take_prestaged(pid)
+                if entry is not None:
+                    pages_i, _nb, s = entry
+                    pre_s += s
+                    per.append(pages_i)
+                else:
+                    per.append(self.engine.stage_partition(self.job.store, pid))
+            pages = stack_pages(per)
         except BaseException as exc:  # noqa: BLE001 — consumer re-raises
             for pid, _f, _r in claims:
                 self._on_produce_error(pid, exc)
             return None
-        return _Chunk(self, claims, pages, stage_s=time.perf_counter() - t0)
+        return _Chunk(
+            self, claims, pages, stage_s=time.perf_counter() - t0 + pre_s
+        )
+
+    # -- deep lookahead: pre-stage + pre-warm the peek window ------------------
+
+    def _take_prestaged(self, pid: int) -> Optional[Tuple[Any, int, float]]:
+        """Consume a pre-staged partition's pages (uncharging its bytes)."""
+        with self._slock:
+            entry = self._prestaged.pop(pid, None)
+            if entry is not None:
+                self._staged_bytes -= entry[1]
+        return entry
+
+    def _prefetch_ahead(self, prefer: Optional[int]) -> None:
+        """Walk the non-claiming peek window behind the in-flight kernel.
+
+        The claim queue is an oracle of future work (BagPipe's observation):
+        ``peek_ahead`` exposes the next ``(lookahead - 1) * K`` partitions
+        beyond the chunk already staged, without claiming them.  For each
+        window pid this (1) pre-warms the shared feature cache — spill
+        entries promote, cold keys take the leader lease early — and
+        (2) pre-stages the partition read + page-build under the byte
+        budget, so the claim that eventually lands only pays a stack.
+        Depth 1 keeps the classic double buffer untouched (empty window).
+        """
+        depth = (self._lookahead - 1) * max(self._current_k(), 1)
+        if depth <= 0 or not self._stageable:
+            return
+        window = self._queue.peek_ahead(depth, prefer_device=prefer)
+        if not window:
+            return
+        for pid in window:
+            if self.cancelled or self._service.closed:
+                return
+            self._prewarm(pid)
+        # sweep orphans first: a pid pre-staged earlier but claimed (and
+        # possibly already produced fresh) before consumption would pin its
+        # budget bytes forever
+        with self._slock:
+            stale = [
+                p for p in self._prestaged if not self._queue.work.is_pending(p)
+            ]
+            for p in stale:
+                _pages, nb, _s = self._prestaged.pop(p)
+                self._staged_bytes -= nb
+        for pid in window:
+            if self.cancelled or self._service.closed:
+                return
+            self._prestage(pid)
+
+    def _prewarm(self, pid: int) -> None:
+        """Predictive cache probe for a future claim of `pid` (once per pid).
+
+        Holds ``_slock`` across the lease check AND ``cache.begin`` — the
+        same atomicity ``_cache_probe`` relies on so a claim can never race
+        into FOLLOWING this session's own pre-warm lease (which would stall
+        it behind a produce that only happens after the claim)."""
+        if self._cache_key is None or not self.job.prewarm:
+            return
+        with self._slock:
+            if pid in self._prewarmed:
+                return
+        try:
+            key = self._cache_key(pid)  # fingerprints memoize; cheap re-walk
+        except Exception:
+            return  # an unprobeable pid pre-warms nothing; the claim decides
+        with self._slock:
+            if pid in self._prewarmed:
+                return
+            self._prewarmed.add(pid)
+            try:
+                status, _found = self._cache.begin(key, prewarm=True)
+            except Exception:
+                return  # a broken cache degrades pre-warm to a no-op
+            if status == "produce":
+                self._prewarm_leases[pid] = key
+            elif status == "hit":
+                self._prewarm_hits += 1
+                self._prewarm_cached.add(pid)
+            else:  # follow: another tenant is producing it right now
+                self._prewarm_cached.add(pid)
+
+    def _prestage(self, pid: int) -> None:
+        """Read + page-build a FUTURE claim's partition under the budget.
+
+        The budget is reserved in deterministic page-geometry bytes BEFORE
+        the read, so ``staged_bytes_peak <= stage_budget_bytes`` holds as an
+        invariant (never exceeded mid-read, and a budget smaller than one
+        partition pre-stages nothing).  Reads charge the owning device's
+        ledger inside ``store.read`` exactly as claim-time reads do."""
+        if self._page_nbytes <= 0:
+            return
+        with self._slock:
+            if (
+                pid in self._prestaged
+                or pid in self._staging_now
+                or pid in self._prewarm_cached  # its claim will short-circuit
+            ):
+                return
+            if self._staged_bytes + self._page_nbytes > self._stage_budget:
+                return  # budget full: the rest of the window reads on claim
+            self._staging_now.add(pid)
+            self._staged_bytes += self._page_nbytes
+            self._staged_bytes_peak = max(
+                self._staged_bytes_peak, self._staged_bytes
+            )
+        t0 = time.perf_counter()
+        try:
+            pages = self.engine.stage_partition(self.job.store, pid)
+        except BaseException:  # noqa: BLE001
+            with self._slock:
+                self._staging_now.discard(pid)
+                self._staged_bytes -= self._page_nbytes
+            return  # the claim-time read will surface the error to the future
+        dt = time.perf_counter() - t0
+        with self._slock:
+            self._staging_now.discard(pid)
+            self._prestaged[pid] = (pages, self._page_nbytes, dt)
+
+    def _clear_prefetch(self) -> None:
+        """Retire/cancel cleanup: drop staged-ahead pages and abandon any
+        pre-warm leases never consumed by a claim (so cross-tenant followers
+        of those keys re-issue real produces instead of waiting forever)."""
+        with self._slock:
+            self._prestaged.clear()
+            self._staged_bytes = 0
+            leases = list(self._prewarm_leases.values())
+            self._prewarm_leases.clear()
+        for key in leases:
+            try:
+                self._cache.abandon(key)
+            except Exception:
+                pass
 
     def _dispatch_chunk(self, chunk: "_Chunk") -> Tuple[str, Any]:
         """Launch a staged chunk.  Engine chunks dispatch ASYNChronously —
@@ -620,6 +869,12 @@ class Session:
                 0.0, time.perf_counter() - chunk.t0 - overlap_s
             )
             share = dt / max(len(chunk.claims), 1)
+            if self._tuner is not None and chunk.pages is not None:
+                # the overlap-corrected launch seconds ARE the tuner's
+                # signal: staging paid by this chunk plus kernel time not
+                # hidden behind the next chunk's staging
+                if self._tuner.record(len(chunk.claims), dt):
+                    self._on_tuned_k_changed()
             for (pid, _f, route), batch in zip(chunk.claims, batches):
                 self._on_produced(pid, batch, share, route)
         finally:
@@ -645,8 +900,18 @@ class Session:
             # leader), and keep it out of the hit-rate tallies — the fresh
             # claim of this pid was already counted once
             return self._cache.peek(key)
-        status, found = self._cache.begin(key)
+        found: Optional[Any] = None
         with self._slock:
+            # the lease check and the begin() probe are atomic under _slock
+            # (mirrored by ``_prewarm``): the claim must CONSUME its own
+            # session's pre-warm lease — following it would park the claim
+            # behind a produce that only happens after the claim itself
+            lease = self._prewarm_leases.pop(pid, None)
+            if lease is not None:
+                status = "produce"
+                key = lease  # the lease's key IS this pid's key
+            else:
+                status, found = self._cache.begin(key)
             if status == "produce":
                 self._cache_misses += 1
                 # remembered for the produce's fulfill/abandon: the produce
@@ -711,24 +976,54 @@ class Session:
                 if rows and dt > 0:
                     p = rows / dt
                     self._p_est = p if self._p_est is None else 0.5 * self._p_est + 0.5 * p
-        if winner and self.job.target_samples_per_s and self._p_est:
-            # QoS re-estimate: demand = ceil(target / measured per-worker P)
-            new_demand = max(
-                1,
-                min(
-                    MAX_DEMAND_UNITS,
-                    math.ceil(self.job.target_samples_per_s / self._p_est),
-                ),
-            )
-            new_eff = effective_demand_units(new_demand, self._hit_rate())
-            with self._service._lock:
-                if new_demand != self._demand:
-                    self._demand = new_demand
-                    demand_changed = True
-            if demand_changed:
-                with self._slock:
-                    self._eff_demand = new_eff
+        if winner:
+            demand_changed = self._maybe_reestimate_demand()
         if demand_changed:
+            self._service._rebalance()
+
+    def _maybe_reestimate_demand(self) -> bool:
+        """QoS re-estimate: demand = ceil(target / measured per-worker P),
+        capped.  Returns True when the demand actually moved (the caller
+        then re-plans the pool)."""
+        if not (self.job.target_samples_per_s and self._p_est):
+            return False
+        new_demand = qos_demand_units(
+            self.job.target_samples_per_s, self._p_est, cap=MAX_DEMAND_UNITS
+        )
+        new_eff = effective_demand_units(new_demand, self._hit_rate())
+        changed = False
+        with self._service._lock:
+            if new_demand != self._demand:
+                self._demand = new_demand
+                changed = True
+        if changed:
+            with self._slock:
+                self._eff_demand = new_eff
+        return changed
+
+    def _on_tuned_k_changed(self) -> None:
+        """The tuner moved K: fold the new rung's measured per-partition
+        cost into the planner's per-worker P estimate and re-plan.
+
+        A K move changes how many rows one worker slot produces per second
+        (fewer dispatches amortized, different staging bulk), so waiting for
+        the EMA in ``_on_produced`` to drift there lags the pool plan behind
+        reality.  When the new rung already has a measurement, P is re-based
+        on it directly; either way the pool re-plans through the same lazy
+        trigger the feature-cache hit-rate discount uses, so
+        ``planner.plan_pool`` re-balances unit shares as K converges."""
+        tuner = self._tuner
+        if tuner is None:
+            return
+        cost = tuner.arm_cost(tuner.k)
+        if cost is not None and cost > 0 and self._rows_hint:
+            with self._slock:
+                self._p_est = self._rows_hint / cost
+        if not self._maybe_reestimate_demand():
+            # demand unchanged (or best-effort job): still nudge a lazy
+            # re-plan so share math sees the refreshed P on its next round
+            self._service._request_replan()
+        else:
             self._service._rebalance()
 
     def _on_produce_error(self, pid: int, exc: BaseException) -> None:
@@ -950,6 +1245,7 @@ class PreprocessingService:
 
     def _retire(self, session: Session) -> None:
         """Drop a finished/cancelled session from scheduling and rebalance."""
+        session._clear_prefetch()  # staged-ahead pages + unconsumed leases
         if session._owner_of is not None:
             session._release_all_backlog()  # cancelled leftovers unbind
         with self._lock:
@@ -1083,6 +1379,14 @@ class PreprocessingService:
                     nxt = self._next_task(wdev, stageable_only=True)
                     if nxt is not None:
                         staged = self._stage_task(nxt[0], nxt[1], wdev)
+                    # deep lookahead: with the next chunk staged, walk the
+                    # peek window further out — pre-warm the feature cache
+                    # and pre-stage future claims' reads under the byte
+                    # budget, all still hidden behind the in-flight kernel
+                    prefer = wdev if (self.locality and wdev is not None) else None
+                    (staged.session if staged is not None else sess)._prefetch_ahead(
+                        prefer
+                    )
                     overlap_s = time.perf_counter() - t_ov
                 sess._finish_chunk(chunk, handle, overlap_s)
             finally:

@@ -59,6 +59,17 @@ class WorkQueue:
         # dedup, order-preserving: a repeated pid would complete once and then
         # be dropped as a straggler duplicate, stranding its consumer forever
         self._pending: Deque[int] = collections.deque(dict.fromkeys(partition_ids))
+        # Membership is authoritative in _pending_set; the deques are ORDER
+        # indexes with lazy deletion: a pid popped through one index stays in
+        # the other as a tombstone and is skipped when reached.  This makes
+        # device-preferred claims O(1) amortized (pop the device deque's
+        # head) instead of a linear rescan of the global deque per claim.
+        self._pending_set: set[int] = set(self._pending)
+        self._by_dev: Optional[Dict[int, Deque[int]]] = None
+        if owner_of is not None:
+            self._by_dev = {}
+            for pid in self._pending:
+                self._by_dev.setdefault(owner_of(pid), collections.deque()).append(pid)
         self._inflight: Dict[int, float] = {}  # pid -> claim time
         self._done: set[int] = set()
         self._lock = threading.Lock()
@@ -70,7 +81,44 @@ class WorkQueue:
     def remaining(self) -> int:
         """Partitions not yet completed (pending + inflight), under the lock."""
         with self._lock:
-            return len(self._pending) + len(self._inflight)
+            return len(self._pending_set) + len(self._inflight)
+
+    def is_pending(self, pid: int) -> bool:
+        """True while `pid` is claimable (not yet claimed or completed)."""
+        with self._lock:
+            return pid in self._pending_set
+
+    def pending_snapshot(self) -> list:
+        """Pending pids in claim order (fresh-claim FIFO), tombstones skipped."""
+        with self._lock:
+            return [p for p in self._pending if p in self._pending_set]
+
+    def peek_ahead(self, n: int, *, prefer_device: Optional[int] = None) -> list:
+        """The first `n` pending pids in the order fresh claims would take
+        them, WITHOUT claiming: the preferred device's own partitions first
+        (when device routing is bound), then the global FIFO.  A pure
+        snapshot — nothing is marked inflight, backpressure is untouched —
+        so lookahead prefetchers can stage reads and pre-warm caches for
+        future claims while never racing the claim path for ownership."""
+        if n <= 0:
+            return []
+        out: list = []
+        seen: set[int] = set()
+        with self._lock:
+            if prefer_device is not None and self._by_dev is not None:
+                for pid in self._by_dev.get(prefer_device, ()):
+                    if pid in self._pending_set and pid not in seen:
+                        out.append(pid)
+                        seen.add(pid)
+                        if len(out) >= n:
+                            return out
+            for pid in self._pending:
+                if pid in self._pending_set and pid not in seen:
+                    out.append(pid)
+                    seen.add(pid)
+                    if len(out) >= n:
+                        break
+        return out
 
     def next_deadline(self) -> Optional[float]:
         """Earliest instant an inflight claim becomes straggler-overdue
@@ -81,11 +129,26 @@ class WorkQueue:
                 return None
             return min(self._inflight.values()) + self.straggler_timeout
 
+    def _pop(self, dq: Optional[Deque[int]]) -> Optional[int]:
+        """Pop the first still-pending pid off an order index, discarding
+        tombstones (pids already popped through the other index)."""
+        if dq is None:
+            return None
+        while dq:
+            pid = dq.popleft()
+            if pid in self._pending_set:
+                self._pending_set.discard(pid)
+                return pid
+        return None
+
     def _take_first(self, pred: Callable[[int], bool]) -> Optional[int]:
-        """Pop the first pending pid matching `pred` (FIFO within class)."""
-        for i, pid in enumerate(self._pending):
-            if pred(pid):
-                del self._pending[i]
+        """First pending pid matching `pred`, global FIFO order.  The popped
+        pid is left in the deques as a tombstone (membership alone decides
+        pending-ness).  Linear, but only the rare host-fallback scan uses
+        it — the device-local hot path pops its own index in O(1)."""
+        for pid in self._pending:
+            if pid in self._pending_set and pred(pid):
+                self._pending_set.discard(pid)
                 return pid
         return None
 
@@ -109,12 +172,12 @@ class WorkQueue:
         re-issue ignores locality — liveness beats placement.
         """
         with self._lock:
-            if self._pending and not reissue_only:
-                if prefer_device is None or self.owner_of is None:
-                    pid: Optional[int] = self._pending.popleft()
+            if self._pending_set and not reissue_only:
+                if prefer_device is None or self.owner_of is None or self._by_dev is None:
+                    pid: Optional[int] = self._pop(self._pending)
                 else:
                     owner = self.owner_of
-                    pid = self._take_first(lambda p: owner(p) == prefer_device)
+                    pid = self._pop(self._by_dev.get(prefer_device))
                     if pid is None and fallback_ok is not None:
                         # the offload verdict depends only on the OWNING
                         # device (manned? queue past threshold?), so cache
@@ -159,7 +222,7 @@ class WorkQueue:
     @property
     def exhausted(self) -> bool:
         with self._lock:
-            return not self._pending and not self._inflight
+            return not self._pending_set and not self._inflight
 
 
 class SessionQueue:
@@ -296,6 +359,18 @@ class SessionQueue:
                     self.short_circuits += 1
 
         donor.add_done_callback(_done)
+
+    def peek_ahead(
+        self, n: int, prefer_device: Optional[int] = None
+    ) -> list:
+        """Non-claiming window over this session's upcoming fresh claims,
+        in the order ``claim`` would take them.  Safe to call from any
+        worker at any time: nothing is claimed, created, or backpressured —
+        it is the oracle a lookahead prefetcher / cache pre-warmer reads to
+        stage work for claims that have not happened yet."""
+        if self.cancelled.is_set():
+            return []
+        return self.work.peek_ahead(n, prefer_device=prefer_device)
 
     def mark_delivered(self) -> None:
         """Consumer pacing signal: one claimed batch has left the stream."""

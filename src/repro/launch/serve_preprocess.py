@@ -65,6 +65,16 @@ pipeline flags:
   --megabatch K              pool workers coalesce up to K same-job claims
                              into ONE megabatched kernel launch (bitwise
                              identical to solo launches, one dispatch)
+  --autotune                 let the online MegabatchTuner pick K per job:
+                             seeded from the cost model, hill-climbed from
+                             measured launch timings (--megabatch becomes
+                             the K cap; watch the tunedK column)
+  --lookahead D              stage up to D chunks of future claims behind
+                             the in-flight kernel (byte-budgeted; D=1 is
+                             the classic double buffer) and pre-warm cache
+                             leases over the peek window
+  --no-prewarm               keep the lookahead window but skip issuing
+                             cache pre-warm leases ahead of the cursor
   --no-pipeline              legacy serial worker loop: no megabatching, no
                              read/compute overlap (A/B baseline)
 
@@ -72,6 +82,8 @@ examples:
   PYTHONPATH=src python -m repro.launch.serve_preprocess --jobs 2 --reduced
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
       --jobs 2 --reduced --megabatch 4
+  PYTHONPATH=src python -m repro.launch.serve_preprocess \\
+      --jobs 2 --reduced --autotune --lookahead 4
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
       --jobs 3 --reduced --cache --cache-mb 64 --spill-devices 4
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
@@ -129,6 +141,15 @@ def main(argv=None) -> None:
     ap.add_argument("--megabatch", type=int, default=1, metavar="K",
                     help="coalesce up to K same-job claims into one "
                          "megabatched kernel launch (default 1)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune megabatch K online per job (--megabatch "
+                         "caps the ladder)")
+    ap.add_argument("--lookahead", type=int, default=1, metavar="D",
+                    help="staged-chunk lookahead window depth (default 1 = "
+                         "classic double buffer)")
+    ap.add_argument("--no-prewarm", action="store_true",
+                    help="disable cache pre-warm leases over the lookahead "
+                         "peek window")
     ap.add_argument("--no-pipeline", action="store_true",
                     help="disable the zero-stall worker path (megabatching "
                          "+ read/compute overlap); legacy serial produces")
@@ -171,6 +192,9 @@ def main(argv=None) -> None:
             placement=args.placement,
             target_samples_per_s=args.qos,
             megabatch=args.megabatch,
+            autotune=args.autotune,
+            lookahead=args.lookahead,
+            prewarm=not args.no_prewarm,
         ))
         result: dict = {}
         t = threading.Thread(target=_consume,
@@ -191,16 +215,21 @@ def main(argv=None) -> None:
 
     print(f"\n{'job':<12} {'batches':>7} {'rows/s':>9} {'util':>6} "
           f"{'starve':>7} {'reissue':>7} {'dupes':>6} {'hits':>5} "
-          f"{'fallbk':>6} {'share/demand':>13}")
+          f"{'fallbk':>6} {'tunedK':>6} {'staged':>8} {'prewrm':>6} "
+          f"{'share/demand':>13}")
     for session, result in zip(sessions, results):
         st = session.stats()
         util = result["busy_s"] / max(result["wall_s"], 1e-9)
         assert st.done and not st.cancelled, f"job {st.job} did not drain"
         assert result["batches"] == st.total
+        staged = (f"{st.staged_bytes_peak / 1e6:.1f}M"
+                  if st.staged_bytes_peak else "-")
         print(f"{st.job:<12} {st.delivered:>7} {st.achieved_samples_per_s:>9.0f} "
               f"{util:>6.2f} {st.starvation:>7.2f} {st.reissues:>7} "
               f"{st.duplicates_dropped:>6} {st.cache_hits:>5} "
-              f"{st.host_fallbacks:>6} {st.share:>7}/{st.effective_demand_units}")
+              f"{st.host_fallbacks:>6} {st.tuned_k:>6} {staged:>8} "
+              f"{st.prewarm_hits:>6} "
+              f"{st.share:>7}/{st.effective_demand_units}")
     service.close()
     total_rows = sum(s.stats().rows_delivered for s in sessions)
     print(f"\naggregate: {total_rows} rows in {wall:.1f}s "

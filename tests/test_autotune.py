@@ -1,0 +1,326 @@
+"""Self-tuning produce path: online K autotuning, peek window, staging budget.
+
+Four invariant groups of the self-tuning loop:
+
+* **Tuner convergence** — on monotone synthetic cost curves the hill climb
+  reaches the best rung and permanently stops moving; interior optima are
+  found; the improvement-move cap freezes oscillation; off-proposal and
+  off-ladder launches never steer the climb.
+* **Queue discipline** — the per-device pending index claims in FIFO order
+  with O(1) pops, ``peek_ahead`` never claims and never double-exposes a
+  pid, and every partition is still claimed exactly once.
+* **Staging budget** — pages pre-staged ahead of claims never exceed
+  ``JobSpec.stage_budget_bytes`` (a too-small budget disables pre-staging
+  entirely) and never change delivered bytes.
+* **K feedback** — a tuner K move re-bases the planner's P estimate and
+  observably re-balances ``plan_pool`` shares across tenants.
+"""
+
+import math
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_recsys
+from repro.core.autotune import DEFAULT_AUTOTUNE_KMAX, MegabatchTuner, k_ladder
+from repro.core.costmodel import DEFAULT_PLACEMENT_MODEL
+from repro.core.planner import qos_demand_units
+from repro.core.presto import PreStoEngine
+from repro.core.service import JobSpec, PreprocessingService
+from repro.core.spec import TransformSpec
+from repro.data.loader import WorkQueue
+from repro.data.storage import PartitionedStore
+from repro.data.synth import SyntheticRecSysSource
+
+
+@pytest.fixture(scope="module")
+def rm1():
+    rcfg = get_recsys("rm1", reduced=True)
+    src = SyntheticRecSysSource(rcfg.data, rows=256)
+    spec = TransformSpec.from_source(src)
+    store = PartitionedStore(12, num_devices=4, source=src)
+    engine = PreStoEngine(spec)  # one jit cache across every run in the module
+    return spec, store, engine
+
+
+def _assert_bitwise(ref, got):
+    assert sorted(got) == sorted(ref)
+    for pid in ref:
+        for key in ref[pid]:
+            np.testing.assert_array_equal(
+                np.asarray(ref[pid][key]), np.asarray(got[pid][key]),
+                err_msg=f"pid={pid} key={key}",
+            )
+
+
+def _drive(tuner: MegabatchTuner, cost_of, iters: int = 64) -> MegabatchTuner:
+    """Feed the tuner launches at its OWN proposal until it converges —
+    exactly what the pipelined worker loop does, minus the wall clock."""
+    for _ in range(iters):
+        if tuner.converged:
+            break
+        k = tuner.k
+        tuner.record(k, cost_of(k) * k)
+    assert tuner.converged, "tuner failed to converge within the iteration cap"
+    return tuner
+
+
+# -- ladder + seeding ---------------------------------------------------------
+
+
+def test_k_ladder_powers_of_two():
+    assert k_ladder(1) == [1]
+    assert k_ladder(2) == [1, 2]
+    assert k_ladder(8) == [1, 2, 4, 8]
+    assert k_ladder(12) == [1, 2, 4, 8]  # clipped to the last full rung
+    assert k_ladder(0) == [1]  # degenerate cap still yields a valid ladder
+
+
+def test_predicted_megabatch_k_knee():
+    model = DEFAULT_PLACEMENT_MODEL
+    # huge per-partition cost: nothing to amortize, the knee is K=1
+    assert model.predicted_megabatch_k(10.0, 8) == 1
+    # negligible per-partition cost: dispatch overhead dominates, go deep
+    assert model.predicted_megabatch_k(1e-7, 8) == 8
+    # the knee is monotone non-increasing in per-partition cost
+    ks = [model.predicted_megabatch_k(pps, 8)
+          for pps in (1e-7, 1e-5, 1e-3, 1e-1, 10.0)]
+    assert ks == sorted(ks, reverse=True)
+    # restricting candidates restricts the answer
+    assert model.predicted_megabatch_k(1e-7, 8, candidates=[1, 2]) == 2
+
+
+def test_qos_demand_units_clamps_and_caps():
+    assert qos_demand_units(1000.0, 0.0) == 1  # no measurement yet
+    assert qos_demand_units(1000.0, 100.0) == 10
+    assert qos_demand_units(50.0, 100.0) == 1  # floor
+    assert qos_demand_units(1e9, 1.0, cap=64) == 64  # cap
+
+
+def test_tuner_seeds_from_cost_model():
+    cheap = MegabatchTuner(8, per_partition_s=1e-7)
+    assert cheap.seeded_k == 8  # overhead-dominated: seed at the top
+    dear = MegabatchTuner(8, per_partition_s=10.0)
+    assert dear.seeded_k == 1
+    assert MegabatchTuner(8).seeded_k == 1  # no estimate: conservative
+
+
+# -- hill climb ---------------------------------------------------------------
+
+
+def test_tuner_climbs_monotone_decreasing_cost():
+    """Per-partition cost strictly improving with K: the climb explores
+    uphill rung by rung and converges at the top."""
+    t = _drive(MegabatchTuner(8), lambda k: 1.0 / k)
+    assert t.k == 8
+
+
+def test_tuner_converges_at_one_for_increasing_cost():
+    """Per-partition cost worsening with K: one uphill probe, then back to
+    K=1 — without ever paying for the expensive top rungs."""
+    t = _drive(MegabatchTuner(8), lambda k: float(k))
+    assert t.k == 1
+    assert t.arm_cost(4) is None and t.arm_cost(8) is None
+
+
+def test_tuner_finds_interior_optimum():
+    costs = {1: 1.0, 2: 0.4, 4: 0.8, 8: 1.2}
+    t = _drive(MegabatchTuner(8), costs.__getitem__)
+    assert t.k == 2
+
+
+def test_tuner_frozen_after_convergence():
+    t = _drive(MegabatchTuner(8), lambda k: 1.0 / k)
+    k = t.k
+    # a later regime change keeps updating EMAs but never moves the proposal
+    for _ in range(8):
+        assert t.record(k, 100.0 * k) is False
+    assert t.k == k and t.converged
+
+
+def test_tuner_ignores_off_ladder_and_foreign_launches():
+    t = MegabatchTuner(8)
+    assert t.k == 1
+    assert t.record(3, 1.0) is False  # off-ladder partial chunk: no rung
+    assert t.arm_cost(3) is None
+    assert t.record(0, 1.0) is False and t.record(1, -1.0) is False
+    # a foreign-rung launch updates that rung's EMA but never advances
+    for _ in range(8):
+        assert t.record(2, 1.0) is False
+    assert t.k == 1 and t.arm_cost(2) == pytest.approx(0.5)
+
+
+def test_tuner_move_cap_freezes_oscillation():
+    """With zero improvement moves allowed, the first wanted move trips the
+    backstop: the tuner freezes where it stands instead of bouncing."""
+    t = MegabatchTuner(2, max_moves=0)
+    costs = {1: 1.0, 2: 5.0}
+    _drive(t, costs.__getitem__)
+    assert t.converged and t.moves == 0 and t.k == 2
+
+
+def test_tuner_summary_reports_measured_arms():
+    t = _drive(MegabatchTuner(4), lambda k: 1.0 / k)
+    s = t.summary()
+    assert s["k"] == 4 and s["converged"] is True
+    assert set(s["arms"]) == {1, 2, 4}
+    assert all(a["samples"] >= 1 for a in s["arms"].values())
+
+
+# -- work-queue device index + peek window ------------------------------------
+
+
+def test_workqueue_device_index_fifo_and_fallback():
+    q = WorkQueue(range(8), owner_of=lambda pid: pid % 2)
+    # device-preferred claims pop the device index in FIFO order
+    assert [q.claim(prefer_device=0) for _ in range(4)] == [0, 2, 4, 6]
+    # device 0 drained: no fallback predicate means no claim
+    assert q.claim(prefer_device=0) is None
+    # fallback admits foreign pids in global FIFO order (pid 1 first)
+    assert q.claim(prefer_device=0, fallback_ok=lambda p: True) == 1
+    # pid 1 is now a tombstone in device 1's index: skipped, not re-claimed
+    assert q.claim(prefer_device=1) == 3
+    assert sorted(q.claim() for _ in range(2)) == [5, 7]
+    assert q.claim() is None and q.remaining() == 8  # all inflight
+    for pid in range(8):
+        assert q.complete(pid)
+    assert q.exhausted and q.remaining() == 0
+
+
+def test_workqueue_peek_ahead_is_non_claiming_and_ordered():
+    q = WorkQueue(range(8), owner_of=lambda pid: pid % 2)
+    # device window first, then the global FIFO, no duplicates
+    assert q.peek_ahead(3, prefer_device=1) == [1, 3, 5]
+    assert q.peek_ahead(6, prefer_device=1) == [1, 3, 5, 7, 0, 2]
+    assert q.peek_ahead(100) == list(range(8))
+    assert q.peek_ahead(0) == []
+    # peeking claimed nothing: every pid is still claimable exactly once
+    assert q.remaining() == 8
+    claimed = [q.claim() for _ in range(8)]
+    assert sorted(claimed) == list(range(8))
+    # peek excludes inflight/claimed pids
+    assert q.peek_ahead(8) == []
+
+
+def test_workqueue_peek_tracks_claims():
+    q = WorkQueue(range(6))
+    assert q.is_pending(0)
+    q.claim()
+    assert not q.is_pending(0)
+    assert q.pending_snapshot() == [1, 2, 3, 4, 5]
+    assert q.peek_ahead(2) == [1, 2]
+
+
+# -- lookahead staging budget -------------------------------------------------
+
+
+def _page_nbytes(engine, rows: int) -> int:
+    return int(sum(
+        math.prod(s.shape) * np.dtype(s.dtype).itemsize
+        for s in engine.pages_struct(rows).values()
+    ))
+
+
+def test_lookahead_staging_respects_byte_budget(rm1):
+    spec, store, engine = rm1
+    solo = {pid: engine.produce_batch(store, pid) for pid in range(12)}
+    budget = 2 * _page_nbytes(engine, 256)  # room for two pre-staged pages
+    with PreprocessingService(num_workers=1) as svc:
+        session = svc.submit(JobSpec(
+            name="la", partitions=range(12), engine=engine, store=store,
+            units=1, queue_depth=12, lookahead=4,
+            stage_budget_bytes=budget))
+        got = {pid: mb for pid, mb in session}
+        st = session.stats()
+    _assert_bitwise(solo, got)
+    assert 0 < st.staged_bytes_peak <= budget
+
+
+def test_tiny_budget_disables_prestaging(rm1):
+    spec, store, engine = rm1
+    solo = {pid: engine.produce_batch(store, pid) for pid in range(12)}
+    with PreprocessingService(num_workers=1) as svc:
+        session = svc.submit(JobSpec(
+            name="la0", partitions=range(12), engine=engine, store=store,
+            units=1, queue_depth=12, megabatch=2, lookahead=4,
+            stage_budget_bytes=1))  # smaller than one page: nothing staged
+        got = {pid: mb for pid, mb in session}
+        st = session.stats()
+    _assert_bitwise(solo, got)
+    assert st.staged_bytes_peak == 0
+
+
+# -- autotuned end-to-end -----------------------------------------------------
+
+
+def test_autotuned_session_bitwise_and_stats(rm1):
+    spec, store, engine = rm1
+    solo = {pid: engine.produce_batch(store, pid) for pid in range(12)}
+    with PreprocessingService(num_workers=2) as svc:
+        session = svc.submit(JobSpec(
+            name="auto", partitions=range(12), engine=engine, store=store,
+            units=2, queue_depth=12, autotune=True, lookahead=2))
+        got = {pid: mb for pid, mb in session}
+        st = session.stats()
+    _assert_bitwise(solo, got)
+    assert st.done and st.produced == 12
+    assert st.tuned_k in k_ladder(DEFAULT_AUTOTUNE_KMAX)
+
+
+def test_megabatch_caps_the_autotune_ladder(rm1):
+    spec, store, engine = rm1
+    with PreprocessingService(num_workers=1) as svc:
+        session = svc.submit(JobSpec(
+            name="capped", partitions=range(12), engine=engine, store=store,
+            units=1, queue_depth=12, autotune=True, megabatch=2))
+        got = {pid: mb for pid, mb in session}
+        st = session.stats()
+    assert sorted(got) == list(range(12))
+    assert st.tuned_k in (1, 2)  # never above the cap
+
+
+# -- K feedback into plan_pool ------------------------------------------------
+
+
+def test_tuned_k_move_rebalances_pool(rm1):
+    """A tuner K move re-bases P, re-estimates QoS demand, and the pool's
+    unit shares observably shift toward the tuned job."""
+    spec, store, engine = rm1
+    gate = threading.Event()
+    entered = threading.Semaphore(0)
+
+    def blocker(pid):
+        entered.release()
+        gate.wait(10.0)
+        return {"labels": np.zeros((4,), np.float32)}
+
+    try:
+        with PreprocessingService(num_workers=3) as svc:
+            blk = svc.submit(JobSpec(name="blk", partitions=range(3),
+                                     produce_fn=blocker, units=3))
+            # park every worker inside a blocked produce so the tuned job's
+            # tuner state is entirely ours to drive
+            for _ in range(3):
+                assert entered.acquire(timeout=5.0)
+            tuned = svc.submit(JobSpec(
+                name="tuned", partitions=range(12), engine=engine,
+                store=store, autotune=True,
+                target_samples_per_s=1024.0))
+            before = dict(svc.plan.shares)
+            assert before["tuned"] == 1  # demand 1 before any measurement
+            # measured regime: 1.0 s per partition at every rung -> with 256
+            # rows/partition, P = 256 rows/s, demand = ceil(1024/256) = 4
+            _drive(tuned._tuner, lambda k: 1.0)
+            tuned._on_tuned_k_changed()
+            after = dict(svc.plan.shares)
+            st = tuned.stats()
+            tuned.cancel()
+            blk.cancel()
+            gate.set()
+    finally:
+        gate.set()
+    assert st.demand_units == 4
+    assert after != before
+    assert after["tuned"] > before["tuned"]

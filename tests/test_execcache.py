@@ -297,3 +297,31 @@ def test_prefetch_loader_stop_wakes_idle_workers_promptly():
     loader.stop()  # must notify, not wait out the 30 s deadline
     release.set()
     assert time.perf_counter() - t0 < 3.0
+
+
+def test_autotuned_sessions_share_mega_executables():
+    """Autotuned sessions on independently built engines (equal cache
+    signature) compile each tuner-visited megabatch shape exactly once
+    through the shared registry — the climb explores the same power-of-two
+    rungs, so the twin session adds ZERO new mega compiles."""
+    rows = 448
+    spec, src = _unique_spec(rows=rows, embedding_bump=17)
+    store = PartitionedStore(12, num_devices=4, source=src)
+    e1, e2 = PreStoEngine(spec), PreStoEngine(spec)
+    key = ExecKey(e1.cache_signature(), "mega", None)
+    assert EXECUTABLES.trace_count(key) == 0
+
+    def run(engine):
+        with PreprocessingService(num_workers=1) as svc:
+            session = svc.submit(JobSpec(
+                name="auto-share", partitions=range(12), engine=engine,
+                store=store, units=1, queue_depth=12, autotune=True,
+                megabatch=2, lookahead=2))
+            return sorted(pid for pid, _ in session)
+
+    assert run(e1) == list(range(12))
+    # the K=2 ladder guarantees the climb measured both rungs: K=1 chunks
+    # launch solo, K=2 chunks are the only mega shape
+    assert EXECUTABLES.traces(key) == [{"k": 2, "rows": rows}]
+    assert run(e2) == list(range(12))  # twin engine: no recompile
+    assert EXECUTABLES.traces(key) == [{"k": 2, "rows": rows}]

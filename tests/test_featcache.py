@@ -392,3 +392,100 @@ def test_service_rebalances_on_hit_rate_change(rm1):
     assert st.cache_hits == 6 and st.cache_misses == 0  # fully cache-fed
     assert st.effective_demand_units == 1  # discounted to the floor
     assert plan.shares.get("cold", 0) >= 3
+
+
+# -- predictive pre-warm (peek-window probes) ---------------------------------
+
+
+def test_prewarm_probe_counts_apart_from_claim_path():
+    """Pre-warm probes get identical tier effects but are tallied under
+    prewarm_hits/prewarm_leases, never hits/follows/misses — hit_rate stays
+    a claim-path statistic."""
+    cache = FeatureCache(1 << 20)
+    cache.put(_key(0), _batch(0))
+    status, batch = cache.begin(_key(0), prewarm=True)
+    assert status == "hit"
+    np.testing.assert_array_equal(batch["labels"], _batch(0)["labels"])
+    cs = cache.stats()
+    assert cs.prewarm_hits == 1 and cs.hits == 0 and cs.misses == 0
+    # cold key: the pre-warmer takes the leader lease without a miss
+    status, val = cache.begin(_key(1), prewarm=True)
+    assert status == "produce" and val is None
+    cs = cache.stats()
+    assert cs.prewarm_leases == 1 and cs.misses == 0
+    # a concurrent tenant's CLAIM follows the pre-warm lease; fulfill
+    # resolves it bitwise
+    status, fut = cache.begin(_key(1))
+    assert status == "follow"
+    cache.fulfill(_key(1), _batch(1))
+    np.testing.assert_array_equal(
+        fut.result(timeout=1)["labels"], _batch(1)["labels"])
+    assert cache.stats().follows == 1
+    # the claim landing on the pre-warmed content still counts ITSELF
+    assert cache.begin(_key(0))[0] == "hit"
+    assert cache.stats().hits == 1
+
+
+def test_prewarm_spill_hit_promotes_without_hit_accounting():
+    """A pre-warm probe on a spilled entry promotes it into the memory tier
+    (that is the point: the claim arrives to a memory hit) but books the
+    spill read under prewarm_hits, not hits/spill_hits."""
+    spill = CacheSpillStore(num_devices=2, bytes_per_s=1e6)
+    cache = FeatureCache(capacity_bytes=2 * batch_nbytes(_batch(0)), spill=spill)
+    for i in range(4):
+        cache.put(_key(i), _batch(i))  # 0 and 1 spill out
+    status, block = cache.begin(_key(0), prewarm=True)
+    assert status == "hit"
+    np.testing.assert_array_equal(block["labels"], _batch(0)["labels"])
+    cs = cache.stats()
+    assert cs.prewarm_hits == 1 and cs.hits == 0 and cs.spill_hits == 0
+    # promoted: the real claim that follows is a memory-tier hit
+    assert cache.begin(_key(0))[0] == "hit"
+    cs = cache.stats()
+    assert cs.hits == 1 and cs.spill_hits == 0
+
+
+def test_service_prewarms_ahead_of_claims_bitwise(rm1):
+    """Mixed cold/cached content: the peek-window walker pre-warms the
+    cached back half while the front half still produces cold — batches
+    stay bitwise identical to cold compute and the pre-warm leases are
+    consumed by the session's own claims (no self-follow deadlock)."""
+    rcfg, src, spec, store, engine = rm1
+    solo = {pid: engine.produce_batch(store, pid) for pid in range(12)}
+    cache = FeatureCache(256 << 20)
+    with PreprocessingService(num_workers=1, cache=cache) as svc:
+        svc.submit(JobSpec(name="seed", partitions=range(6, 12), engine=engine,
+                           store=store, units=1)).drain()
+        session = svc.submit(JobSpec(
+            name="walk", partitions=range(12), engine=engine, store=store,
+            units=1, queue_depth=12, lookahead=4, megabatch=2))
+        got = {pid: mb for pid, mb in session}
+        st = session.stats()
+    for pid in range(12):
+        for k in solo[pid]:
+            np.testing.assert_array_equal(
+                np.asarray(solo[pid][k]), np.asarray(got[pid][k]),
+                err_msg=f"pid={pid} key={k} diverged through pre-warm")
+    assert st.done and sorted(got) == list(range(12))
+    assert st.prewarm_hits > 0  # the walker reached the cached back half
+    assert cache.stats().prewarm_hits >= st.prewarm_hits
+
+
+def test_prewarm_off_keeps_lookahead_window(rm1):
+    """prewarm=False: the staging window still runs, no pre-warm probes are
+    issued, and delivery stays complete and bitwise."""
+    rcfg, src, spec, store, engine = rm1
+    solo = {pid: engine.produce_batch(store, pid) for pid in range(12)}
+    cache = FeatureCache(256 << 20)
+    with PreprocessingService(num_workers=1, cache=cache) as svc:
+        session = svc.submit(JobSpec(
+            name="nowarm", partitions=range(12), engine=engine, store=store,
+            units=1, queue_depth=12, lookahead=4, prewarm=False))
+        got = {pid: mb for pid, mb in session}
+        st = session.stats()
+    for pid in range(12):
+        for k in solo[pid]:
+            np.testing.assert_array_equal(
+                np.asarray(solo[pid][k]), np.asarray(got[pid][k]),
+                err_msg=f"pid={pid} key={k}")
+    assert st.prewarm_hits == 0 and cache.stats().prewarm_hits == 0
