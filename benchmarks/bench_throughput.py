@@ -35,8 +35,8 @@ plus lookahead depth (how many staged chunks queue behind the in-flight
 kernel), asserts every configuration bitwise identical to the serial run
 (with the process-wide executable cache on AND off), asserts the best
 pipelined config at least matches serial throughput, and writes the whole
-sweep to a ``BENCH_throughput.json`` artifact so the perf trajectory is
-tracked.
+sweep to a ``BENCH_throughput_pipeline.json`` artifact so the perf
+trajectory is tracked.
 
 ``--autotune`` benches the self-tuning produce path through the service
 surface: static megabatch-K sessions for every rung of the power-of-two
@@ -46,7 +46,9 @@ Asserts the tuned K lands within one ladder step of the best static K,
 autotuned throughput beats the serial loop and stays within noise of the
 best static session, and every mode — autotune on/off, lookahead 1/2/4,
 cache pre-warm on/off — delivers batches bitwise identical to the serial
-reference.  Writes the same ``BENCH_throughput.json`` artifact.
+reference.  Writes a ``BENCH_throughput_autotune.json`` artifact (each mode
+has its own default so the two sweeps never clobber each other; ``--out``
+overrides).
 """
 
 from __future__ import annotations
@@ -92,7 +94,7 @@ modes:
                              sweeps megabatch K and lookahead depth, asserts
                              bitwise identity (executable cache on and off)
                              and pipelined >= serial; writes
-                             BENCH_throughput.json
+                             BENCH_throughput_pipeline.json
 
   --autotune                 self-tuning produce path: static-K service
                              sessions vs one session with the online
@@ -100,7 +102,7 @@ modes:
                              ladder step of the best static K, autotuned >
                              serial, and bitwise identity across autotune /
                              lookahead / pre-warm modes; writes
-                             BENCH_throughput.json
+                             BENCH_throughput_autotune.json
 
 examples:
   PYTHONPATH=src python -m benchmarks.bench_throughput --multi-tenant --smoke
@@ -405,7 +407,7 @@ def run_pipeline(
     lookaheads=(1, 2, 4),
     rounds: int = 3,
     min_speedup: float = 1.0,
-    out_json: str = "BENCH_throughput.json",
+    out_json: str = "BENCH_throughput_pipeline.json",
 ) -> dict:
     """Serial produce loop vs the zero-stall pipeline, with bitwise asserts.
 
@@ -593,7 +595,7 @@ def run_autotune(
     lookaheads=(1, 2, 4),
     rounds: int = 3,
     noise: float = 0.15,
-    out_json: str = "BENCH_throughput.json",
+    out_json: str = "BENCH_throughput_autotune.json",
 ) -> dict:
     """Online megabatch-K autotuning through the service, vs static K.
 
@@ -804,7 +806,7 @@ if __name__ == "__main__":
     ap.add_argument("--pipeline", action="store_true",
                     help="bench the zero-stall produce path (megabatched "
                          "launches + read/compute overlap) vs the serial "
-                         "loop; writes BENCH_throughput.json")
+                         "loop; writes BENCH_throughput_pipeline.json")
     ap.add_argument("--min-speedup", type=float, default=1.0,
                     help="--pipeline: assert pipelined >= this x serial "
                          "throughput (default 1.0, i.e. never slower)")
@@ -813,16 +815,18 @@ if __name__ == "__main__":
                          "megabatch-K autotuning vs every static K; asserts "
                          "tuned K within one ladder step of the best static "
                          "K and bitwise identity in every mode; writes "
-                         "BENCH_throughput.json")
-    ap.add_argument("--out", default="BENCH_throughput.json",
-                    help="--pipeline/--autotune: JSON artifact path")
+                         "BENCH_throughput_autotune.json")
+    ap.add_argument("--out", default=None,
+                    help="--pipeline/--autotune: JSON artifact path override "
+                         "(default: BENCH_throughput_pipeline.json / "
+                         "BENCH_throughput_autotune.json per mode)")
     args = ap.parse_args()
     if args.autotune:
         run_autotune(
             partitions=32 if args.smoke else 48,
             rows=256 if args.smoke else 1024,
             ks=(1, 2, 4),
-            out_json=args.out,
+            out_json=args.out or "BENCH_throughput_autotune.json",
         )
     elif args.pipeline:
         run_pipeline(
@@ -831,7 +835,7 @@ if __name__ == "__main__":
             ks=(1, 2, 4),
             rounds=3,
             min_speedup=args.min_speedup,
-            out_json=args.out,
+            out_json=args.out or "BENCH_throughput_pipeline.json",
         )
     elif args.skew is not None:
         run_skew(

@@ -15,6 +15,16 @@ from repro.core.costmodel import (
     partition_costs,
     tco_usd,
 )
+from repro.core.ctrlplane import (
+    Autoscaler,
+    AutoscalePolicy,
+    Event,
+    EventLog,
+    FailureInjector,
+    SessionCheckpoint,
+    SimulatedFailure,
+    parse_kill_spec,
+)
 from repro.core.featcache import (
     CacheKey,
     CacheStats,
@@ -57,6 +67,8 @@ from repro.core.spec import TransformSpec
 
 __all__ = [
     "AdmissionError",
+    "Autoscaler",
+    "AutoscalePolicy",
     "CacheKey",
     "CacheStats",
     "Comparison",
@@ -64,7 +76,10 @@ __all__ = [
     "DEFAULT_AUTOTUNE_KMAX",
     "DeviceModel",
     "DeviceTopology",
+    "Event",
+    "EventLog",
     "FAMILIES",
+    "FailureInjector",
     "FeatureCache",
     "JobSpec",
     "MegabatchTuner",
@@ -78,7 +93,9 @@ __all__ = [
     "PreprocessingService",
     "ProvisioningPlan",
     "Session",
+    "SessionCheckpoint",
     "SessionStats",
+    "SimulatedFailure",
     "TrainingPipeline",
     "TransformSpec",
     "build_transform_graph",
@@ -95,6 +112,7 @@ __all__ = [
     "pages_from_partition",
     "pages_pspec",
     "pages_shape_dtypes",
+    "parse_kill_spec",
     "partition_costs",
     "plan_pool",
     "preprocess_pages",

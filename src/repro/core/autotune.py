@@ -202,6 +202,31 @@ class MegabatchTuner:
         self._converged = True
         return False
 
+    def restore(self, state: dict) -> None:
+        """Re-seed from a checkpointed ``summary()`` dict (the control
+        plane's session resume path): measured per-rung EMAs, the move
+        count, convergence, and the proposal rung all carry over, so a
+        resumed session of the same Transform starts at its converged K
+        instead of re-climbing.  Off-ladder rungs in the snapshot (a
+        different ``k_max``) are ignored; JSON round-trips stringify arm
+        keys, so keys are coerced back to ints."""
+        with self._lock:
+            for key, arm in (state.get("arms") or {}).items():
+                k = int(key)
+                ours = self._arms.get(k)
+                if ours is None or not arm.get("samples"):
+                    continue
+                ours.cost_s = arm.get("cost_s")
+                ours.samples = int(arm["samples"])
+            k = int(state.get("k", self.ladder[self._idx]))
+            if k in self.ladder:
+                self._idx = self.ladder.index(k)
+            self._moves = int(state.get("moves", self._moves))
+            self._converged = (
+                bool(state.get("converged", self._converged))
+                or len(self.ladder) == 1
+            )
+
     def summary(self) -> dict:
         """Point-in-time view for stats tables and bench artifacts."""
         with self._lock:

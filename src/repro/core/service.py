@@ -42,6 +42,19 @@ trainer.  This module is that public surface:
   prices the ISP path past the host path (contention-aware cost model).
   Routing never changes batch bytes — only where/when they are produced —
   so every bitwise-identity guarantee above survives skewed placements.
+* The pool is ELASTIC (``core.ctrlplane``): workers can be killed
+  (crash-simulated — their in-flight claims are force-expired and re-issued
+  through the existing straggler path, so the consumer stream stays bitwise
+  identical to a no-failure run), gracefully retired, or added at runtime
+  (``kill_worker`` / ``remove_worker`` / ``add_worker``); device bindings
+  and pool shares re-plan on every membership change.  Sessions snapshot
+  their progress frontier (``Session.checkpoint``, periodic via
+  ``JobSpec.checkpoint_path``) so a restarted service resumes a
+  half-drained job (``submit(job, resume_from=ckpt)``) bitwise-identically;
+  an ``Autoscaler`` policy loop may grow/shrink the pool from
+  ``load_snapshot()`` backlog.  Every membership change, claim re-issue,
+  checkpoint, scale decision, and plan change is published to the service's
+  bounded ``EventLog`` (``service.events``, surfaced in ``stats()``).
 * The produce hot path is ZERO-STALL by default (``pipeline=True``):
   engine-backed sessions are *stageable* — a pool worker coalesces up to
   ``JobSpec.megabatch`` compatible claims into ONE megabatched kernel
@@ -69,6 +82,7 @@ import numpy as np
 
 from repro.core.autotune import DEFAULT_AUTOTUNE_KMAX, MegabatchTuner
 from repro.core.costmodel import ContentionAwareCostModel, PartitionCosts
+from repro.core.ctrlplane import EventLog, SessionCheckpoint
 from repro.core.featcache import CacheKey, FeatureCache
 from repro.core.planner import (
     AdmissionError,
@@ -87,10 +101,12 @@ from repro.data.storage import DeviceFleet, IspDevice, PartitionedStore
 __all__ = [
     "AdmissionError",
     "DeviceFleet",
+    "EventLog",
     "FeatureCache",
     "JobSpec",
     "PreprocessingService",
     "Session",
+    "SessionCheckpoint",
     "SessionStats",
 ]
 
@@ -142,6 +158,14 @@ class JobSpec:
     # worker arrives, and cold keys take the leader lease early so
     # concurrent tenants follow instead of duplicating the produce.
     prewarm: bool = True
+    # -- control plane --------------------------------------------------------
+    # checkpoint_path: where the session periodically snapshots its progress
+    # frontier (core.ctrlplane.SessionCheckpoint JSON) — every
+    # ``checkpoint_every`` deliveries and at completion.  A restarted
+    # service resumes the job bitwise-identically via
+    # ``service.submit(job, resume_from=SessionCheckpoint.load(path))``.
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 8
 
     def build_produce(self) -> Tuple[Callable[[int], Any], Optional[PreStoEngine]]:
         """Resolve the per-partition production callable for this job."""
@@ -262,11 +286,20 @@ class Session:
     every partition is delivered, and re-raises a worker's production error.
     """
 
-    def __init__(self, service: "PreprocessingService", job: JobSpec):
+    def __init__(
+        self,
+        service: "PreprocessingService",
+        job: JobSpec,
+        resume_from: Optional[SessionCheckpoint] = None,
+    ):
         self._service = service
         self.job = job
         self.name = job.name
         self._produce_fn, self.engine = job.build_produce()
+        # materialize the dedup'd partition order ONCE (job.partitions may
+        # be a one-shot iterable): the queue, the device-backlog binding,
+        # and checkpoints all read this same list
+        self._partitions: List[int] = list(dict.fromkeys(job.partitions))
         # -- zero-stall produce path eligibility --------------------------------
         # Stageable sessions run the pipelined worker path: reads/page-builds
         # are separable from the kernel launch, so workers can megabatch K
@@ -317,6 +350,10 @@ class Session:
             self._tuner = MegabatchTuner(
                 k_cap, per_partition_s=per_part, cost_model=service.cost_model
             )
+            if resume_from is not None and resume_from.tuner:
+                # resume: re-seed at the checkpointed rung (measured EMAs
+                # and convergence carry over) instead of re-climbing
+                self._tuner.restore(resume_from.tuner)
         # -- deep lookahead + cache pre-warm state -------------------------
         self._lookahead = max(1, int(job.lookahead))
         self._stage_budget = (
@@ -368,7 +405,7 @@ class Session:
                     rows=rows, model=service.cost_model
                 )
         self._queue = SessionQueue(
-            job.partitions,
+            self._partitions,
             depth=job.queue_depth,
             straggler_timeout=job.straggler_timeout,
             lookup=self._cache_probe if self._cache_key is not None else None,
@@ -376,6 +413,7 @@ class Session:
             fallback_ok=self._host_ok if self._owner_of is not None else None,
             on_settled=self._release_backlog if self._owner_of is not None else None,
             on_offload=self._on_offload if self._owner_of is not None else None,
+            on_reissue=self._on_reissue,
         )
         self.total = self._queue.total
         # guarded by service._lock:
@@ -388,6 +426,7 @@ class Session:
         self._produced = 0
         self._handed = 0  # futures taken off the delivery queue (any stream)
         self._delivered = 0
+        self._delivered_pids: List[int] = []  # the checkpoint frontier
         self._duplicates = 0
         self._rows_delivered = 0
         self._produce_time = 0.0
@@ -477,9 +516,11 @@ class Session:
         _pid, batch = fut.result()
         with self._slock:
             self._delivered += 1
+            self._delivered_pids.append(_pid)
             self._rows_delivered += _batch_rows(batch)
             if self._delivered >= self.total:
                 self._t_end = time.perf_counter()
+        self._maybe_checkpoint()
 
     def __iter__(self) -> Iterator[Tuple[int, Any]]:
         while True:
@@ -502,9 +543,11 @@ class Session:
             with self._slock:
                 self._wait_time += time.perf_counter() - t0
                 self._delivered += 1
+                self._delivered_pids.append(pid)
                 self._rows_delivered += _batch_rows(batch)
                 if self._delivered >= self.total:
                     self._t_end = time.perf_counter()
+            self._maybe_checkpoint()
             yield pid, batch
 
     def drain(self) -> int:
@@ -571,6 +614,88 @@ class Session:
                 f"preprocessing service closed with {undelivered} batches "
                 f"undelivered for job {self.name!r}"
             )
+
+    # -- control plane: checkpoint/resume + crash cleanup ----------------------
+
+    def checkpoint(self) -> SessionCheckpoint:
+        """Snapshot this session's progress frontier for restart/resume.
+
+        The frontier is the DELIVERED pid set: produced-but-undelivered
+        batches die with the service (their futures are service state), so
+        resume must re-produce them — which is free of risk because
+        partitions are deterministic.  Safe to call at any time, from any
+        thread."""
+        with self._slock:
+            delivered = list(self._delivered_pids)
+            stats = {
+                "produced": self._produced,
+                "delivered": self._delivered,
+                "reissues": self._queue.work.reissues,
+                "duplicates_dropped": self._duplicates,
+                "cache_hits": self._cache_hits,
+                "cache_misses": self._cache_misses,
+                "rows_delivered": self._rows_delivered,
+            }
+        return SessionCheckpoint(
+            job=self.name,
+            partitions=list(self._partitions),
+            delivered=delivered,
+            stats=stats,
+            tuner=self._tuner.summary() if self._tuner is not None else None,
+        )
+
+    def _maybe_checkpoint(self) -> None:
+        """Periodic frontier snapshot (``JobSpec.checkpoint_path``): every
+        ``checkpoint_every`` deliveries and at completion.  An unwritable
+        path degrades to no checkpoint — it never breaks delivery."""
+        path = self.job.checkpoint_path
+        if not path:
+            return
+        with self._slock:
+            n = self._delivered
+        if n % max(1, int(self.job.checkpoint_every)) and n < self.total:
+            return
+        try:
+            self.checkpoint().save(path)
+        except Exception:
+            return
+        self._service.events.emit(
+            "checkpoint", job=self.name, delivered=n, total=self.total, path=path
+        )
+
+    def _on_reissue(self, pid: int) -> None:
+        """WorkQueue straggler-re-issue observer -> the event stream."""
+        self._service.events.emit("claim_reissue", job=self.name, pid=pid)
+
+    def _expire_claims(self, pids: Iterable[int]) -> None:
+        """Force-expire claims a dead worker held so the next claim round
+        re-issues them immediately through the straggler path."""
+        for pid in pids:
+            self._queue.expire(pid)
+        self._service._wake()
+
+    def _abandon_chunk(self, chunk: "_Chunk") -> None:
+        """Crash cleanup for a chunk a killed worker held (staged or even
+        dispatched — never finished): any results in hand die with the
+        worker.  Leader cache leases are abandoned so cross-tenant followers
+        re-issue real produces instead of waiting forever, ISP device
+        occupancy is released, and every claim is expired back through the
+        straggler path.  The claims' futures stay pending — the re-issued
+        produce resolves them, so the consumer stream (and every delivered
+        byte) is untouched by the crash."""
+        for pid, _f, _r in chunk.claims:
+            if self._cache_key is not None:
+                with self._slock:
+                    key = self._cache_keys.pop(pid, None)
+                if key is not None:
+                    try:
+                        self._cache.abandon(key)
+                    except Exception:
+                        pass
+        for dev in chunk.devs:
+            self._route_end(dev)
+        chunk.devs = []
+        self._expire_claims(pid for pid, _f, _r in chunk.claims)
 
     # -- device routing --------------------------------------------------------
 
@@ -1036,6 +1161,26 @@ class Session:
                 self._cache.abandon(key, exc)
 
 
+@dataclasses.dataclass
+class _PoolWorker:
+    """One pool worker's control-plane record (a simulated ISP unit).
+
+    ``killed`` is the crash simulation: the thread notices at its next
+    pipeline boundary, abandons whatever it holds (claims expire back
+    through the straggler path), and exits without completing anything.
+    ``retired`` is the graceful shrink: finish the chunk in hand, claim
+    nothing new, exit.  ``chunk`` mirrors the claims currently in the
+    worker's hands so ``kill_worker`` can expire them promptly even while
+    the thread is deep inside a produce."""
+
+    wid: int
+    device: Optional[int]
+    thread: Optional[threading.Thread] = None
+    killed: threading.Event = dataclasses.field(default_factory=threading.Event)
+    retired: threading.Event = dataclasses.field(default_factory=threading.Event)
+    chunk: Optional[_Chunk] = None
+
+
 class PreprocessingService:
     """The shared preprocessing pool: submit jobs, stream their batches.
 
@@ -1070,7 +1215,6 @@ class PreprocessingService:
         pipeline: bool = True,
     ):
         assert num_workers >= 1, "pool needs at least one worker"
-        self.num_workers = num_workers
         self.cache = cache  # ONE shared feature cache across every tenant
         self.locality = locality
         # pipeline=False disables the zero-stall worker path (megabatch
@@ -1088,18 +1232,8 @@ class PreprocessingService:
                 if devices > 0 else None
             )
         self.fleet: Optional[DeviceFleet] = devices
-        if self.fleet is not None:
-            self._topology: Optional[DeviceTopology] = DeviceTopology.round_robin(
-                num_workers, len(self.fleet)
-            )
-            self._manned = self._topology.manned
-            self._worker_device: List[Optional[int]] = [
-                i % len(self.fleet) for i in range(num_workers)
-            ]
-        else:
-            self._topology = None
-            self._manned = set()
-            self._worker_device = [None] * num_workers
+        self._topology: Optional[DeviceTopology] = None
+        self._manned: set = set()
         self._sessions: List[Session] = []
         self._lock = threading.RLock()
         self._stop = threading.Event()
@@ -1107,26 +1241,170 @@ class PreprocessingService:
         self._rr = 0
         self._replan = False  # a session's hit-rate-discounted demand moved
         self.plan: Optional[PoolPlan] = None
+        # the control plane's structured event stream: membership changes,
+        # claim re-issues, checkpoints, scale decisions, plan changes
+        self.events = EventLog()
         if cache is not None:
             # feature-cache warm start: promote restart-survivable spilled
             # blocks back into the memory tier before any worker runs
             cache.warm_start()
-        self._threads = [
-            threading.Thread(
-                target=self._worker_loop, args=(i,), daemon=True,
-                name=f"presto-pool-{i}",
-            )
-            for i in range(num_workers)
-        ]
+        # pool membership is DYNAMIC (kill/join at runtime): wid -> record.
+        # _all_threads keeps every thread ever spawned for join-on-close;
+        # dead workers leave _workers (capacity) immediately on kill/retire.
+        self._workers: Dict[int, _PoolWorker] = {}
+        self._all_threads: List[threading.Thread] = []
+        self._next_wid = 0
         self._started = False
+        for _ in range(num_workers):
+            self._spawn_worker()  # boot membership: no join events
         if start:
             self.start()
+
+    @property
+    def num_workers(self) -> int:
+        """Live pool capacity (the planner's unit count) — moves with
+        ``add_worker``/``remove_worker``/``kill_worker``."""
+        with self._lock:
+            return len(self._workers)
+
+    def _refresh_topology(self) -> None:
+        """Recompute device bindings from LIVE membership (caller holds
+        ``_lock``): kill/join moves units between devices, and the planner's
+        per-device shares plus host-fallback eligibility must follow."""
+        if self.fleet is None:
+            return
+        upd = {d: 0 for d in range(len(self.fleet))}
+        for w in self._workers.values():
+            if w.device is not None:
+                upd[w.device] += 1
+        self._topology = DeviceTopology(upd)
+        self._manned = self._topology.manned
+
+    def _spawn_worker(self, device: Optional[int] = None) -> _PoolWorker:
+        """Create (and, once started, launch) one pool worker.  With a
+        fleet, an unpinned worker binds to the least-manned device (boot
+        order reproduces the classic round-robin binding)."""
+        with self._lock:
+            wid = self._next_wid
+            self._next_wid += 1
+            if self.fleet is None:
+                device = None
+            elif device is None:
+                counts = {d: 0 for d in range(len(self.fleet))}
+                for w in self._workers.values():
+                    if w.device is not None:
+                        counts[w.device] += 1
+                device = min(counts, key=lambda d: (counts[d], d))
+            w = _PoolWorker(wid=wid, device=device)
+            w.thread = threading.Thread(
+                target=self._worker_loop, args=(w,), daemon=True,
+                name=f"presto-pool-{wid}",
+            )
+            self._workers[wid] = w
+            self._all_threads.append(w.thread)
+            self._refresh_topology()
+            started = self._started
+        if started:
+            w.thread.start()
+        return w
+
+    # -- elastic membership ----------------------------------------------------
+
+    def add_worker(self, device: Optional[int] = None) -> int:
+        """Grow the pool by one worker at runtime; returns its wid.  Device
+        binding, topology, and pool shares re-plan immediately."""
+        if self.closed:
+            raise RuntimeError("preprocessing service is closed")
+        w = self._spawn_worker(device)
+        with self._lock:
+            if self._sessions:
+                self._rebalance()
+        self.events.emit(
+            "worker_join", worker=w.wid, device=w.device, pool=self.num_workers
+        )
+        self._wake()
+        return w.wid
+
+    def kill_worker(self, wid: int) -> bool:
+        """Crash-simulate one pool worker (the chaos drill).
+
+        The worker leaves capacity immediately (topology + shares re-plan);
+        its in-flight claims are force-expired so the next claim round
+        re-issues them through the existing straggler path — the claims'
+        futures stay pending and resolve from the re-issued produce, so
+        every consumer stream stays bitwise identical to a no-failure run.
+        The thread itself notices at its next pipeline boundary and abandons
+        whatever it holds (cache leases, device occupancy) on its way out."""
+        with self._lock:
+            w = self._workers.pop(wid, None)
+            if w is None:
+                return False
+            w.killed.set()
+            held = w.chunk
+            self._refresh_topology()
+            if self._sessions:
+                self._rebalance()
+        reissued = [pid for pid, _f, _r in held.claims] if held is not None else []
+        if held is not None:
+            held.session._expire_claims(reissued)
+        self.events.emit(
+            "worker_leave", worker=wid, device=w.device, reason="killed",
+            pool=self.num_workers, reissued=reissued,
+        )
+        self._wake()
+        return True
+
+    def remove_worker(self, wid: Optional[int] = None) -> Optional[int]:
+        """Gracefully retire one worker (autoscaler shrink): it finishes the
+        chunk in hand, claims nothing new, and exits.  Refuses to shrink
+        below one worker or below the admission floor (one schedulable unit
+        per admitted session).  Returns the retired wid, or None."""
+        with self._lock:
+            if wid is None:
+                wid = max(self._workers, default=None)  # LIFO: newest first
+            if wid is None or wid not in self._workers:
+                return None
+            if len(self._workers) - 1 < max(1, len(self._sessions)):
+                return None
+            w = self._workers.pop(wid)
+            w.retired.set()
+            self._refresh_topology()
+            if self._sessions:
+                self._rebalance()
+        self.events.emit(
+            "worker_leave", worker=wid, device=w.device, reason="retired",
+            pool=self.num_workers,
+        )
+        self._wake()
+        return wid
+
+    def load_snapshot(self) -> Dict[str, int]:
+        """The autoscaler's policy inputs: live workers, admitted sessions,
+        backlog (unfinished partitions across every session), and aggregate
+        hit-rate-discounted demand units."""
+        with self._lock:
+            sessions = list(self._sessions)
+            workers = len(self._workers)
+        backlog = 0
+        demand = 0
+        for s in sessions:
+            backlog += s._queue.work.remaining()
+            demand += effective_demand_units(s._demand, s._hit_rate())
+        return {
+            "workers": workers,
+            "sessions": len(sessions),
+            "backlog": backlog,
+            "demand_units": demand,
+        }
 
     def start(self) -> "PreprocessingService":
         if not self._started:
             self._started = True
-            for t in self._threads:
-                t.start()
+            with self._lock:
+                threads = [w.thread for w in self._workers.values()]
+            for t in threads:
+                if t is not None and t.ident is None:
+                    t.start()
         return self
 
     @property
@@ -1151,7 +1429,9 @@ class PreprocessingService:
         self._stop.set()
         self._wake()
         me = threading.current_thread()
-        for t in self._threads:
+        with self._lock:
+            threads = list(self._all_threads)
+        for t in threads:
             if t.is_alive() and t is not me:
                 t.join(timeout=5.0)
         if self.cache is not None:
@@ -1172,17 +1452,28 @@ class PreprocessingService:
             if s.device_weights is not None
         } or None
 
-    def submit(self, job: JobSpec) -> Session:
-        """Admit a job and return its Session (raises AdmissionError)."""
+    def submit(
+        self, job: JobSpec, *, resume_from: Optional[SessionCheckpoint] = None
+    ) -> Session:
+        """Admit a job and return its Session (raises AdmissionError).
+
+        ``resume_from`` (a ``SessionCheckpoint`` from a previous service
+        incarnation) narrows the job to its undelivered partitions and
+        re-seeds the tuner: the resumed stream picks up exactly where the
+        checkpointed one stopped, and the union of both streams is bitwise
+        identical to one uninterrupted run."""
         if self.closed:
             raise RuntimeError("preprocessing service is closed")
+        if resume_from is not None:
+            job = resume_from.apply(job)
         with self._lock:
             if any(s.name == job.name for s in self._sessions):
                 raise ValueError(f"job name {job.name!r} already active")
             demands = {s.name: s._demand for s in self._sessions}
             demands[job.name] = max(1, job.units or 1)
             rates = {s.name: s._hit_rate() for s in self._sessions}
-            session = Session(self, job)  # binds device backlog on the fleet
+            # binds device backlog on the fleet
+            session = Session(self, job, resume_from=resume_from)
             try:
                 plan = plan_pool(  # admission
                     self.num_workers, demands, rates,
@@ -1194,6 +1485,15 @@ class PreprocessingService:
                 raise
             self._sessions.append(session)
             self._apply(plan)
+        self.events.emit(
+            "session_join", job=job.name, partitions=session.total,
+            demand_units=session._demand, share=session.share,
+        )
+        if resume_from is not None:
+            self.events.emit(
+                "resume", job=job.name, remaining=session.total,
+                skipped=len(resume_from.delivered),
+            )
         self._wake()
         return session
 
@@ -1218,12 +1518,18 @@ class PreprocessingService:
             }
         if self.cache is not None:
             out["cache"] = self.cache.stats()
+        out["events"] = self.events.summary()
         return out
 
     def _apply(self, plan: PoolPlan) -> None:
+        prev = self.plan.shares if self.plan is not None else None
         self.plan = plan
         for s in self._sessions:
             s.share = plan.shares.get(s.name, 0)
+        if plan.shares != prev:
+            self.events.emit(
+                "plan", capacity=plan.capacity, shares=dict(plan.shares)
+            )
 
     def _request_replan(self) -> None:
         """A session's effective demand moved (feature-cache hit rate shift);
@@ -1237,21 +1543,39 @@ class PreprocessingService:
             self._replan = False
             demands = {s.name: s._demand for s in self._sessions}
             rates = {s.name: s._hit_rate() for s in self._sessions}
-            self._apply(plan_pool(
-                self.num_workers, demands, rates,
-                topology=self._topology,
-                device_weights=self._device_weights(),
-            ))
+            try:
+                plan = plan_pool(
+                    self.num_workers, demands, rates,
+                    topology=self._topology,
+                    device_weights=self._device_weights(),
+                )
+            except AdmissionError:
+                # A crash dropped capacity below the admission floor for the
+                # sessions already inside.  Degrade rather than evict: every
+                # session keeps a 1-unit floor share (pass-2 work-conserving
+                # scheduling keeps the pool live) until workers rejoin.
+                plan = PoolPlan(
+                    self.num_workers, dict(demands),
+                    {j: 1 for j in demands}, effective_demand=dict(demands),
+                )
+            self._apply(plan)
 
     def _retire(self, session: Session) -> None:
         """Drop a finished/cancelled session from scheduling and rebalance."""
         session._clear_prefetch()  # staged-ahead pages + unconsumed leases
         if session._owner_of is not None:
             session._release_all_backlog()  # cancelled leftovers unbind
+        removed = False
         with self._lock:
             if session in self._sessions:
                 self._sessions.remove(session)
-                self._rebalance()
+                removed = True
+        if removed:
+            self._rebalance()
+            self.events.emit(
+                "session_leave", job=session.name,
+                done=session.done, cancelled=session.cancelled,
+            )
         self._wake()  # freed units may unblock other tenants' pass-1 claims
 
     # -- the pool --------------------------------------------------------------
@@ -1340,7 +1664,7 @@ class PreprocessingService:
             self._wake()
         return chunk
 
-    def _worker_loop(self, idx: int) -> None:
+    def _worker_loop(self, w: _PoolWorker) -> None:
         """The zero-stall produce loop of one pool worker.
 
         Stageable (engine-backed) sessions run a double-buffered pipeline:
@@ -1352,11 +1676,23 @@ class PreprocessingService:
         one dispatch.  Opaque produce_fn sessions run their legacy
         synchronous path through the same chunk machinery (no coalescing,
         no overlap — their stage is not separable).
+
+        Elasticity (``core.ctrlplane``): the loop checks ``w.killed`` at
+        pipeline boundaries.  A killed worker abandons whatever it holds —
+        chunks in hand are un-routed, their cache leases dropped, and their
+        claims expired back onto the straggler path so a live worker
+        re-issues them; nothing it produced after the kill is delivered.
+        ``w.retired`` is the graceful variant: finish the chunk in hand,
+        take no new work.
         """
-        wdev = self._worker_device[idx]
+        wdev = w.device
         staged: Optional[_Chunk] = None
-        while staged is not None or not self._stop.is_set():
+        while True:
+            if w.killed.is_set():
+                break  # crash: the staged chunk is abandoned after the loop
             if staged is None:
+                if self._stop.is_set() or w.retired.is_set():
+                    break
                 task = self._next_task(wdev)
                 if task is None:
                     self._prune()
@@ -1366,13 +1702,19 @@ class PreprocessingService:
                         self._wake_cv.wait(timeout=0.05)
                     continue
                 staged = self._stage_task(task[0], task[1], wdev)
+                w.chunk = staged
                 continue
             chunk, staged = staged, None
             sess = chunk.session
             try:
                 handle = sess._dispatch_chunk(chunk)
                 overlap_s = 0.0
-                if handle[0] == "async" and not self._stop.is_set():
+                if (
+                    handle[0] == "async"
+                    and not self._stop.is_set()
+                    and not w.killed.is_set()
+                    and not w.retired.is_set()
+                ):
                     # double buffering: the next chunk's partition read and
                     # numpy page-build overlap the in-flight kernel
                     t_ov = time.perf_counter()
@@ -1388,9 +1730,25 @@ class PreprocessingService:
                         prefer
                     )
                     overlap_s = time.perf_counter() - t_ov
+                if w.killed.is_set():
+                    # crash point: results in hand die with the worker —
+                    # the claims go back through the straggler path and a
+                    # live worker reproduces them (winner semantics drop
+                    # any duplicate, so delivery stays bitwise identical)
+                    sess._abandon_chunk(chunk)
+                    if staged is not None:
+                        staged.session._abandon_chunk(staged)
+                        self._release_slot(staged.session, wdev)
+                        staged = None
+                    continue  # loop top exits on the killed flag
                 sess._finish_chunk(chunk, handle, overlap_s)
             finally:
+                w.chunk = staged
                 self._release_slot(sess, wdev)
                 if sess._queue.exhausted:
                     self._retire(sess)
                 self._wake()  # a share slot freed (or the job just finished)
+        if w.killed.is_set() and staged is not None:
+            staged.session._abandon_chunk(staged)
+            self._release_slot(staged.session, wdev)
+        w.chunk = None

@@ -55,6 +55,7 @@ class WorkQueue:
         straggler_timeout: float = 30.0,
         *,
         owner_of: Optional[Callable[[int], int]] = None,
+        on_reissue: Optional[Callable[[int], None]] = None,
     ):
         # dedup, order-preserving: a repeated pid would complete once and then
         # be dropped as a straggler duplicate, stranding its consumer forever
@@ -75,6 +76,10 @@ class WorkQueue:
         self._lock = threading.Lock()
         self.straggler_timeout = straggler_timeout
         self.owner_of = owner_of
+        # control-plane observer: called with the pid of every straggler
+        # re-issue, OUTSIDE the queue lock (it may emit events / take other
+        # locks); a broken observer never breaks the claim path
+        self.on_reissue = on_reissue
         self.reissues = 0
         self.total = len(self._pending)  # distinct partitions at creation
 
@@ -171,44 +176,71 @@ class WorkQueue:
         fallback-eligible is left for its own device's unit.  Straggler
         re-issue ignores locality — liveness beats placement.
         """
-        with self._lock:
-            if self._pending_set and not reissue_only:
-                if prefer_device is None or self.owner_of is None or self._by_dev is None:
-                    pid: Optional[int] = self._pop(self._pending)
-                else:
-                    owner = self.owner_of
-                    pid = self._pop(self._by_dev.get(prefer_device))
-                    if pid is None and fallback_ok is not None:
-                        # the offload verdict depends only on the OWNING
-                        # device (manned? queue past threshold?), so cache
-                        # it per device for this scan instead of re-pricing
-                        # every pending pid under the lock
-                        verdicts: Dict[int, bool] = {}
+        reissued: Optional[int] = None
+        try:
+            with self._lock:
+                if self._pending_set and not reissue_only:
+                    if prefer_device is None or self.owner_of is None or self._by_dev is None:
+                        pid: Optional[int] = self._pop(self._pending)
+                    else:
+                        owner = self.owner_of
+                        pid = self._pop(self._by_dev.get(prefer_device))
+                        if pid is None and fallback_ok is not None:
+                            # the offload verdict depends only on the OWNING
+                            # device (manned? queue past threshold?), so cache
+                            # it per device for this scan instead of re-pricing
+                            # every pending pid under the lock
+                            verdicts: Dict[int, bool] = {}
 
-                        def _ok(p: int) -> bool:
-                            d = owner(p)
-                            if d not in verdicts:
-                                verdicts[d] = bool(fallback_ok(p))
-                            return verdicts[d]
+                            def _ok(p: int) -> bool:
+                                d = owner(p)
+                                if d not in verdicts:
+                                    verdicts[d] = bool(fallback_ok(p))
+                                return verdicts[d]
 
-                        pid = self._take_first(_ok)
-                if pid is not None:
-                    self._inflight[pid] = time.monotonic()
+                            pid = self._take_first(_ok)
+                    if pid is not None:
+                        self._inflight[pid] = time.monotonic()
+                        return pid
+                # steal: re-issue the longest-overdue inflight partition
+                now = time.monotonic()
+                overdue = [
+                    (t, p)
+                    for p, t in self._inflight.items()
+                    if now - t > self.straggler_timeout and p not in self._done
+                ]
+                if overdue:
+                    overdue.sort()
+                    _, pid = overdue[0]
+                    self._inflight[pid] = now
+                    self.reissues += 1
+                    reissued = pid
                     return pid
-            # steal: re-issue the longest-overdue inflight partition
-            now = time.monotonic()
-            overdue = [
-                (t, p)
-                for p, t in self._inflight.items()
-                if now - t > self.straggler_timeout and p not in self._done
-            ]
-            if overdue:
-                overdue.sort()
-                _, pid = overdue[0]
-                self._inflight[pid] = now
-                self.reissues += 1
-                return pid
-            return None
+                return None
+        finally:
+            if reissued is not None and self.on_reissue is not None:
+                try:
+                    self.on_reissue(reissued)
+                except Exception:
+                    pass
+
+    def expire(self, pid: int) -> bool:
+        """Force an inflight claim straggler-overdue NOW.
+
+        The control plane's crash hook: a dead worker's claim must not wait
+        out the full ``straggler_timeout``, so its inflight stamp is
+        back-dated past the deadline and the very next claim round re-issues
+        it through the normal straggler path (same future, same bytes —
+        partitions are deterministic, so re-issue is always safe).  A
+        completion that raced ahead wins as usual.  Returns True if the pid
+        was actually inflight."""
+        with self._lock:
+            if pid in self._inflight and pid not in self._done:
+                self._inflight[pid] = (
+                    time.monotonic() - self.straggler_timeout - 1.0
+                )
+                return True
+            return False
 
     def complete(self, pid: int) -> bool:
         """Returns True if this completion is the winner (not a duplicate)."""
@@ -249,8 +281,12 @@ class SessionQueue:
         fallback_ok: Optional[Callable[[int], bool]] = None,
         on_settled: Optional[Callable[[int], None]] = None,
         on_offload: Optional[Callable[[int], None]] = None,
+        on_reissue: Optional[Callable[[int], None]] = None,
     ):
-        self.work = WorkQueue(partition_ids, straggler_timeout, owner_of=owner_of)
+        self.work = WorkQueue(
+            partition_ids, straggler_timeout, owner_of=owner_of,
+            on_reissue=on_reissue,
+        )
         self.depth = depth
         self.out: "queue.Queue[Future]" = queue.Queue()
         self._futures: Dict[int, Future] = {}  # claimed, not yet completed
@@ -376,6 +412,11 @@ class SessionQueue:
         """Consumer pacing signal: one claimed batch has left the stream."""
         with self._lock:
             self._delivered += 1
+
+    def expire(self, pid: int) -> bool:
+        """Force `pid`'s inflight claim immediately re-issuable (a dead
+        worker held it); see ``WorkQueue.expire``."""
+        return self.work.expire(pid)
 
     def complete(self, pid: int, batch: Any) -> bool:
         """First completion wins and resolves the future; duplicates dropped."""

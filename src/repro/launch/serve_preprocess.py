@@ -20,6 +20,16 @@ charge) those devices, claims are locality-aware, and skewed ownership
 utilization table (occupancy, queue depth, fallbacks) prints after the
 per-job table.
 
+The pool is ELASTIC (``core.ctrlplane``): ``--kill WID@N`` crash-simulates
+pool workers mid-job (their claims re-issue through the straggler path),
+``--restart-after N`` checkpoints every half-drained session, tears the
+whole service down, and resumes bitwise-identically on a fresh one,
+``--autoscale MIN:MAX`` runs the backlog-driven policy loop, and
+``--verify`` recomputes every delivered batch solo and asserts the chaos
+run's output is bitwise identical and complete.  Every membership change,
+re-issue, checkpoint, and scale decision lands in the structured event
+stream (summarized at exit; ``--events-out`` writes the JSON artifact).
+
     PYTHONPATH=src python -m repro.launch.serve_preprocess --jobs 2 --reduced
 """
 
@@ -27,12 +37,19 @@ from __future__ import annotations
 
 import argparse
 import itertools
+import json
+import os
+import tempfile
 import threading
 import time
 
+import numpy as np
+
 from repro.configs.registry import get_recsys
 from repro.core.costmodel import ContentionAwareCostModel
+from repro.core.ctrlplane import Autoscaler, AutoscalePolicy, parse_kill_spec
 from repro.core.featcache import FeatureCache, default_spill_store
+from repro.core.presto import PreStoEngine
 from repro.core.service import JobSpec, PreprocessingService
 from repro.core.spec import TransformSpec
 from repro.data.storage import DeviceFleet, PartitionedStore, zipf_owner_map
@@ -77,34 +94,102 @@ pipeline flags:
                              cache pre-warm leases ahead of the cursor
   --no-pipeline              legacy serial worker loop: no megabatching, no
                              read/compute overlap (A/B baseline)
+control-plane flags (core.ctrlplane):
+  --kill WID@N               crash-simulate pool worker WID once N total
+                             batches have been delivered (repeatable); its
+                             in-flight claims re-issue via the straggler
+                             path — output stays bitwise identical
+  --restart-after N          after N total delivered batches: checkpoint
+                             every unfinished session, close the service,
+                             rebuild it, and resume from the checkpoints
+  --autoscale MIN:MAX        run the backlog-driven autoscaler between MIN
+                             and MAX workers (scale decisions land in the
+                             event stream)
+  --autoscale-interval S     policy evaluation period in seconds (0.05)
+  --verify                   recompute every delivered batch solo; assert
+                             the (chaos) run delivered every partition,
+                             bitwise identical
+  --events-out PATH          dump the structured event stream (all service
+                             incarnations, JSON) for CI artifact upload
 
 examples:
   PYTHONPATH=src python -m repro.launch.serve_preprocess --jobs 2 --reduced
-  PYTHONPATH=src python -m repro.launch.serve_preprocess \\
-      --jobs 2 --reduced --megabatch 4
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
       --jobs 2 --reduced --autotune --lookahead 4
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
       --jobs 3 --reduced --cache --cache-mb 64 --spill-devices 4
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
       --jobs 2 --reduced --devices 4 --skew 1.1
+  PYTHONPATH=src python -m repro.launch.serve_preprocess \\
+      --jobs 2 --reduced --kill 1@3 --restart-after 8 --verify \\
+      --events-out EVENTS_chaos.json
+  PYTHONPATH=src python -m repro.launch.serve_preprocess \\
+      --jobs 2 --reduced --workers 2 --units 3 --autoscale 2:6
 """
 
 
-def _consume(session, consume_s: float, result: dict) -> None:
-    """A tenant's trainer: drain the session, spending consume_s per batch."""
+class _Counter:
+    """Total delivered batches across every tenant (the chaos thresholds)."""
+
+    def __init__(self):
+        self.n = 0
+        self.cond = threading.Condition()
+
+    def bump(self) -> None:
+        with self.cond:
+            self.n += 1
+            self.cond.notify_all()
+
+
+def _consume(session, consume_s: float, result: dict, got: dict,
+             counter: _Counter) -> None:
+    """A tenant's trainer: drain the session, spending consume_s per batch.
+
+    Accumulates across service incarnations (the restart drill re-enters
+    with the resumed session).  A RuntimeError is the service being torn
+    down mid-stream — recorded, not raised; main() re-raises unless a
+    restart was actually requested."""
     busy = 0.0
     batches = 0
     t0 = time.perf_counter()
-    for _pid, _mb in session:
-        s0 = time.perf_counter()
-        if consume_s > 0:
-            time.sleep(consume_s)  # stand-in for the accelerator step
-        busy += time.perf_counter() - s0
-        batches += 1
-    result["busy_s"] = busy
-    result["batches"] = batches
-    result["wall_s"] = time.perf_counter() - t0
+    try:
+        for pid, mb in session:
+            s0 = time.perf_counter()
+            if consume_s > 0:
+                time.sleep(consume_s)  # stand-in for the accelerator step
+            busy += time.perf_counter() - s0
+            batches += 1
+            got[pid] = mb
+            counter.bump()
+    except RuntimeError as e:
+        result["interrupted"] = repr(e)
+    result["busy_s"] = result.get("busy_s", 0.0) + busy
+    result["batches"] = result.get("batches", 0) + batches
+    result["wall_s"] = result.get("wall_s", 0.0) + (time.perf_counter() - t0)
+
+
+def _chaos_monitor(service, counter: _Counter, kills, restart_after,
+                   do_restart) -> None:
+    """Applies --kill / --restart-after directives as the global delivered
+    count crosses their thresholds."""
+    pending = sorted(kills)
+    while pending or restart_after is not None:
+        with counter.cond:
+            counter.cond.wait(timeout=0.1)
+            n = counter.n
+        while pending and n >= pending[0][0]:
+            after, wid = pending.pop(0)
+            ok = service.kill_worker(wid)
+            print(f"chaos: killed worker {wid} after {after} delivered "
+                  f"batch(es)" if ok else
+                  f"chaos: worker {wid} already gone at {after} batches")
+        if restart_after is not None and n >= restart_after:
+            print(f"chaos: restarting the service after {restart_after} "
+                  f"delivered batch(es)")
+            do_restart()
+            return
+        if service.closed:
+            return
 
 
 def main(argv=None) -> None:
@@ -124,6 +209,9 @@ def main(argv=None) -> None:
                     choices=("presto", "disagg", "hybrid"))
     ap.add_argument("--qos", type=float, default=None,
                     help="per-job QoS target (samples/s); default best-effort")
+    ap.add_argument("--units", type=int, default=None,
+                    help="explicit per-job demand units (the autoscaler's "
+                         "demand cap; default: estimated)")
     ap.add_argument("--consume-ms", type=float, default=5.0,
                     help="simulated train-step time per batch")
     ap.add_argument("--devices", type=int, default=4,
@@ -153,9 +241,31 @@ def main(argv=None) -> None:
     ap.add_argument("--no-pipeline", action="store_true",
                     help="disable the zero-stall worker path (megabatching "
                          "+ read/compute overlap); legacy serial produces")
+    ap.add_argument("--kill", action="append", metavar="WID@N",
+                    help="crash-simulate pool worker WID after N total "
+                         "delivered batches (repeatable)")
+    ap.add_argument("--restart-after", type=int, default=None, metavar="N",
+                    help="checkpoint + tear down + resume the whole service "
+                         "after N total delivered batches")
+    ap.add_argument("--autoscale", default=None, metavar="MIN:MAX",
+                    help="run the backlog-driven autoscaler between MIN and "
+                         "MAX workers")
+    ap.add_argument("--autoscale-interval", type=float, default=0.05,
+                    metavar="S", help="autoscaler evaluation period (s)")
+    ap.add_argument("--verify", action="store_true",
+                    help="recompute every delivered batch solo and assert "
+                         "bitwise-identical, complete output")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the structured event stream as JSON")
     args = ap.parse_args(argv)
 
     workers = args.workers if args.workers is not None else args.jobs + 1
+    kills = [parse_kill_spec(s) for s in (args.kill or [])]
+    scale_bounds = None
+    if args.autoscale:
+        lo, _, hi = args.autoscale.partition(":")
+        scale_bounds = (int(lo), int(hi))
+    chaos = bool(kills) or args.restart_after is not None
     cost_model = ContentionAwareCostModel()
     fleet = (DeviceFleet.from_cost_model(args.devices, cost_model)
              if args.devices > 0 else None)
@@ -171,10 +281,9 @@ def main(argv=None) -> None:
         spill = (default_spill_store(args.spill_devices, fleet=spill_fleet)
                  if args.spill_devices > 0 else None)
         cache = FeatureCache(args.cache_mb << 20, spill=spill)
-    service = PreprocessingService(
-        num_workers=workers, cache=cache, devices=fleet,
-        cost_model=cost_model, pipeline=not args.no_pipeline)
-    sessions, results, threads = [], [], []
+
+    ckpt_dir = tempfile.mkdtemp(prefix="presto-ckpt-") if chaos else None
+    jobspecs, job_specs_ts, stores = [], {}, {}
     rms = itertools.cycle(args.rm)
     for j in range(args.jobs):
         rm = next(rms)
@@ -184,56 +293,160 @@ def main(argv=None) -> None:
         store = PartitionedStore(
             args.partitions, num_devices=args.devices or 4, source=src,
             fleet=fleet, owner_map=owner_map)
-        session = service.submit(JobSpec(
-            name=f"{rm}-job{j}",
+        name = f"{rm}-job{j}"
+        job = JobSpec(
+            name=name,
             partitions=range(args.partitions),
             spec=spec,
             store=store,
             placement=args.placement,
             target_samples_per_s=args.qos,
+            units=args.units,
             megabatch=args.megabatch,
             autotune=args.autotune,
             lookahead=args.lookahead,
             prewarm=not args.no_prewarm,
-        ))
-        result: dict = {}
-        t = threading.Thread(target=_consume,
-                             args=(session, args.consume_ms / 1e3, result))
-        sessions.append(session)
-        results.append(result)
-        threads.append(t)
+            checkpoint_path=(os.path.join(ckpt_dir, f"{name}.json")
+                             if ckpt_dir else None),
+            checkpoint_every=4,
+        )
+        jobspecs.append(job)
+        job_specs_ts[name] = spec
+        stores[name] = store
+
+    def make_service():
+        return PreprocessingService(
+            num_workers=workers, cache=cache, devices=fleet,
+            cost_model=cost_model, pipeline=not args.no_pipeline)
 
     print(f"pool: {workers} workers serving {args.jobs} jobs "
           f"({args.partitions} x {args.rows}-row partitions each, "
           f"placement={args.placement})")
+    if chaos:
+        directives = [f"kill {w}@{n}" for n, w in kills]
+        if args.restart_after is not None:
+            directives.append(f"restart@{args.restart_after}")
+        print(f"chaos: {', '.join(directives)}")
+
+    counter = _Counter()
+    results = {job.name: {} for job in jobspecs}
+    gots = {job.name: {} for job in jobspecs}
+    final_sessions = {}
+    ckpts = {}
+    all_events, event_counts = [], {}
+    restart_pending = args.restart_after
     wall0 = time.perf_counter()
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
+    phase = 0
+    while True:
+        phase += 1
+        service = make_service()
+        scaler = None
+        if scale_bounds is not None:
+            scaler = Autoscaler(service, AutoscalePolicy(
+                min_workers=scale_bounds[0], max_workers=scale_bounds[1]))
+        sessions, threads = {}, []
+        for job in jobspecs:
+            if job.name in final_sessions:
+                continue  # finished in an earlier incarnation
+            session = service.submit(job, resume_from=ckpts.pop(job.name, None))
+            sessions[job.name] = session
+            threads.append(threading.Thread(
+                target=_consume,
+                args=(session, args.consume_ms / 1e3, results[job.name],
+                      gots[job.name], counter)))
+
+        restart_requested = threading.Event()
+
+        def do_restart(sessions=sessions, service=service):
+            # exact frontier at teardown: anything delivered after this
+            # snapshot is simply re-produced on resume (bitwise identical)
+            for name, session in sessions.items():
+                if not session.stats().done:
+                    ckpts[name] = session.checkpoint()
+            restart_requested.set()
+            service.close()
+
+        monitor = None
+        if (kills and phase == 1) or restart_pending is not None:
+            monitor = threading.Thread(
+                target=_chaos_monitor,
+                args=(service, counter, kills if phase == 1 else [],
+                      restart_pending, do_restart),
+                daemon=True)
+        for t in threads:
+            t.start()
+        if scaler is not None:
+            scaler.start(args.autoscale_interval)
+        if monitor is not None:
+            monitor.start()
+        for t in threads:
+            t.join()
+        if scaler is not None:
+            scaler.stop()
+        for name, session in sessions.items():
+            if session.stats().done:
+                final_sessions[name] = session
+            elif not restart_requested.is_set():
+                raise RuntimeError(
+                    f"job {name} interrupted without a requested restart: "
+                    f"{results[name].get('interrupted')}")
+        if not service.closed:
+            service.close()
+        all_events.extend(service.events.to_dicts())
+        for kind, n in service.events.counts().items():
+            event_counts[kind] = event_counts.get(kind, 0) + n
+        if restart_requested.is_set():
+            restart_pending = None  # the drill restarts at most once
+            remaining = [j.name for j in jobspecs
+                         if j.name not in final_sessions]
+            print(f"chaos: resuming {len(remaining)} checkpointed job(s) on "
+                  f"a fresh service")
+            continue
+        break
     wall = time.perf_counter() - wall0
 
     print(f"\n{'job':<12} {'batches':>7} {'rows/s':>9} {'util':>6} "
           f"{'starve':>7} {'reissue':>7} {'dupes':>6} {'hits':>5} "
           f"{'fallbk':>6} {'tunedK':>6} {'staged':>8} {'prewrm':>6} "
           f"{'share/demand':>13}")
-    for session, result in zip(sessions, results):
-        st = session.stats()
+    for job in jobspecs:
+        st = final_sessions[job.name].stats()
+        result = results[job.name]
         util = result["busy_s"] / max(result["wall_s"], 1e-9)
         assert st.done and not st.cancelled, f"job {st.job} did not drain"
-        assert result["batches"] == st.total
+        if not chaos:
+            assert result["batches"] == st.total
         staged = (f"{st.staged_bytes_peak / 1e6:.1f}M"
                   if st.staged_bytes_peak else "-")
-        print(f"{st.job:<12} {st.delivered:>7} {st.achieved_samples_per_s:>9.0f} "
+        print(f"{st.job:<12} {result['batches']:>7} "
+              f"{st.achieved_samples_per_s:>9.0f} "
               f"{util:>6.2f} {st.starvation:>7.2f} {st.reissues:>7} "
               f"{st.duplicates_dropped:>6} {st.cache_hits:>5} "
               f"{st.host_fallbacks:>6} {st.tuned_k:>6} {staged:>8} "
               f"{st.prewarm_hits:>6} "
               f"{st.share:>7}/{st.effective_demand_units}")
-    service.close()
-    total_rows = sum(s.stats().rows_delivered for s in sessions)
+    total_rows = sum(s.stats().rows_delivered for s in final_sessions.values())
     print(f"\naggregate: {total_rows} rows in {wall:.1f}s "
           f"({total_rows / max(wall, 1e-9):.0f} rows/s across tenants)")
+
+    if args.verify:
+        # the chaos acceptance gate: every partition delivered exactly once
+        # per tenant's output map, bitwise identical to a solo recompute
+        for job in jobspecs:
+            got = gots[job.name]
+            missing = sorted(set(range(args.partitions)) - set(got))
+            assert not missing, f"job {job.name} missing partitions {missing}"
+            engine = PreStoEngine(job_specs_ts[job.name],
+                                  placement=args.placement)
+            for pid, mb in sorted(got.items()):
+                want = engine.produce_batch(stores[job.name], pid)
+                assert sorted(mb) == sorted(want)
+                for key in want:
+                    np.testing.assert_array_equal(
+                        np.asarray(mb[key]), np.asarray(want[key]))
+        print(f"verify: {args.jobs} job(s) x {args.partitions} partitions "
+              f"bitwise identical to solo recompute")
+
     if fleet is not None:
         print(f"\n{'device':<9} {'claims':>7} {'queue':>6} {'max-infl':>9} "
               f"{'fallback':>9} {'stream MB':>10} {'spill MB':>9} "
@@ -259,6 +472,17 @@ def main(argv=None) -> None:
               f"resident={cs.resident_bytes / 1e6:.1f}MB "
               f"spilled={cs.spilled_entries} ({cs.spilled_bytes / 1e6:.1f}MB, "
               f"{cs.spill_io_s * 1e3:.2f}ms modeled I/O)")
+
+    if event_counts:
+        summary = " ".join(f"{k}={n}" for k, n in sorted(event_counts.items()))
+        print(f"\nevents: {summary}")
+        for ev in all_events[-8:]:
+            data = " ".join(f"{k}={v}" for k, v in ev["data"].items())
+            print(f"  [{ev['seq']:>4}] {ev['kind']:<14} {data}")
+    if args.events_out:
+        with open(args.events_out, "w") as f:
+            json.dump(all_events, f, indent=2, default=str)
+        print(f"events: wrote {len(all_events)} event(s) to {args.events_out}")
 
 
 if __name__ == "__main__":

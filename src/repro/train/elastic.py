@@ -9,12 +9,20 @@ The contract that makes elasticity cheap in this framework:
 3. the mesh is a pure function of the device count (launch.mesh), so a new
    incarnation simply rebuilds mesh + shardings and restores.
 
-ElasticTrainer.run_resumable drives that loop: build mesh -> restore latest
+ElasticTrainer.run drives that loop: build mesh -> restore latest
 -> train -> on simulated/real failure, reconstruct and continue.  Straggler
 mitigation lives in the data layer (WorkQueue re-issue); DCN gradient
 compression in train.compression.  What is intentionally NOT here: in-job
 hot-swap of devices (JAX processes are fixed-topology; real deployments
 restart the job binary, which is exactly the path exercised).
+
+This trainer-side contract is the design template for the PREPROCESSING
+control plane in ``core.ctrlplane``: the same regenerable-data +
+checkpoint-frontier argument makes the pool's worker kill/join and service
+restart bitwise-safe.  The failure drill is shared — ``fail_at`` here runs
+through ``ctrlplane.FailureInjector``, the same injector the pool-side
+chaos tests and ``launch/serve_preprocess.py --kill`` scripts use — so one
+crash simulation covers both halves of the system.
 """
 
 from __future__ import annotations
@@ -24,6 +32,7 @@ from typing import Any, Callable, Optional
 
 import jax
 
+from repro.core.ctrlplane import FailureInjector
 from repro.train.checkpoint import CheckpointManager
 
 
@@ -58,11 +67,11 @@ class ElasticTrainer:
         mesh, state, step_fn = self.bootstrap()
         done = int(state["step"])
         metrics = None
+        inject = FailureInjector(fail_at=fail_at)  # shared chaos drill
         for i, batch in batches:
             if i < done:
                 continue  # replay-skip: data is deterministic in step idx
-            if fail_at is not None and i == fail_at:
-                raise RuntimeError(f"simulated failure at step {i}")
+            inject.check(i)  # raises SimulatedFailure (a RuntimeError)
             state, metrics = step_fn(state, batch)
             done = i + 1
             if done % self.checkpoint_every == 0:

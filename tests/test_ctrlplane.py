@@ -1,0 +1,393 @@
+"""Elastic control plane: kill/join, checkpoint/resume, autoscaling, events.
+
+The acceptance invariants (ISSUE 7):
+
+* killing any single pool worker mid-session yields batches bitwise
+  identical to a no-failure run (the dead worker's claims re-issue through
+  the straggler path), across pipeline / autotune / cache-on modes;
+* restarting the whole service from a ``SessionCheckpoint`` resumes a
+  half-drained job bitwise-identically;
+* the autoscaler grows the pool under a backlogged multi-tenant load and
+  shrinks it when drained;
+* every membership / scale / re-issue decision is visible in the
+  structured event stream via ``events`` and ``stats()``.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_recsys
+from repro.core.ctrlplane import (
+    Autoscaler,
+    AutoscalePolicy,
+    EventLog,
+    FailureInjector,
+    SessionCheckpoint,
+    SimulatedFailure,
+    parse_kill_spec,
+)
+from repro.core.featcache import FeatureCache
+from repro.core.presto import PreStoEngine
+from repro.core.service import JobSpec, PreprocessingService
+from repro.core.spec import TransformSpec
+from repro.data.loader import WorkQueue
+from repro.data.storage import PartitionedStore
+from repro.data.synth import SyntheticRecSysSource
+
+N_PARTS = 10
+
+# the three produce-path modes the bitwise invariants must hold across
+MODES = {
+    "pipeline": dict(megabatch=2),
+    "autotune": dict(autotune=True, lookahead=2),
+    "cache": dict(megabatch=2),
+}
+
+
+@pytest.fixture(scope="module")
+def rm1():
+    rcfg = get_recsys("rm1", reduced=True)
+    src = SyntheticRecSysSource(rcfg.data, rows=192)
+    spec = TransformSpec.from_source(src)
+    engine = PreStoEngine(spec)  # one jit cache across every run here
+    ref_store = PartitionedStore(N_PARTS, num_devices=4, source=src)
+    # the no-failure ground truth every chaos run must match bitwise
+    ref = {pid: engine.produce_batch(ref_store, pid) for pid in range(N_PARTS)}
+    return {"src": src, "spec": spec, "engine": engine, "ref": ref}
+
+
+def _assert_bitwise(got: dict, ref: dict) -> None:
+    assert sorted(got) == sorted(ref)
+    for pid, batch in got.items():
+        want = ref[pid]
+        assert sorted(batch) == sorted(want)
+        for key in want:
+            np.testing.assert_array_equal(
+                np.asarray(batch[key]), np.asarray(want[key])
+            )
+
+
+# -- event stream --------------------------------------------------------------
+
+
+def test_eventlog_bounded_ring_counts_and_cursor(tmp_path):
+    log = EventLog(capacity=4)
+    for i in range(10):
+        log.emit("tick", i=i)
+    log.emit("other")
+    assert log.emitted == 11
+    counts = log.counts()
+    assert counts == {"tick": 10, "other": 1}  # all-time, not ring-bounded
+    tail = log.tail(2)
+    assert [e.kind for e in tail] == ["tick", "other"]
+    assert tail[0].data == {"i": 9}
+    assert [e.kind for e in log.tail(10, kind="tick")] == ["tick"] * 3
+    # the incremental cursor: strictly-greater seq, dropped prefix absent
+    assert [e.seq for e in log.since(8)] == [9, 10]
+    assert log.since(10) == []
+    summ = log.summary(tail=2)
+    assert summ["emitted"] == 11 and summ["dropped"] == 7
+    assert [e["kind"] for e in summ["tail"]] == ["tick", "other"]
+    out = tmp_path / "events.json"
+    log.dump(str(out))
+    import json
+
+    assert [e["seq"] for e in json.loads(out.read_text())] == [7, 8, 9, 10]
+
+
+def test_workqueue_expire_reissues_immediately():
+    seen = []
+    q = WorkQueue([0, 1], straggler_timeout=60.0, on_reissue=seen.append)
+    assert q.claim() == 0
+    assert q.expire(0) is True  # the crash hook: overdue NOW, no timeout wait
+    assert q.claim() == 1  # fresh claims still drain first
+    assert q.claim() == 0 and q.reissues == 1 and seen == [0]
+    assert q.expire(7) is False  # unknown pid: no-op
+    q.complete(0)
+    assert q.expire(0) is False  # completed pid: no-op, result already won
+
+
+def test_failure_injector_and_kill_spec():
+    log = EventLog()
+    inj = FailureInjector(fail_at=3, events=log)
+    inj.check(0)
+    with pytest.raises(SimulatedFailure, match="simulated failure at step 3"):
+        inj.check(3)
+    inj.check(3)  # fires at most once: the restarted run sails past
+    assert inj.fired and log.counts() == {"failure_injected": 1}
+    assert FailureInjector(fail_at=None).check(0) is None
+    assert parse_kill_spec("2@15") == (15, 2)
+    with pytest.raises(ValueError):
+        parse_kill_spec("2:15")
+
+
+# -- kill mid-flight: bitwise identical completion ------------------------------
+
+
+class _GatedStore(PartitionedStore):
+    """Blocks the FIRST reader of ``gate_pid`` until released, recording the
+    reading thread's name — a deterministic mid-flight kill point."""
+
+    def __init__(self, *args, gate_pid: int = 0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.gate_pid = gate_pid
+        self.caught = threading.Event()
+        self.release = threading.Event()
+        self.holder = None
+        self._gate_lock = threading.Lock()
+
+    def read(self, partition_id: int):
+        hold = False
+        with self._gate_lock:
+            if partition_id == self.gate_pid and not self.caught.is_set():
+                self.holder = threading.current_thread().name
+                self.caught.set()
+                hold = True
+        if hold:
+            assert self.release.wait(timeout=30)
+        return super().read(partition_id)
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_kill_worker_mid_flight_is_bitwise_identical(rm1, mode, tmp_path):
+    store = _GatedStore(N_PARTS, num_devices=4, source=rm1["src"])
+    cache = FeatureCache(256 << 20) if mode == "cache" else None
+    svc = PreprocessingService(num_workers=3, cache=cache)
+    try:
+        job = JobSpec(
+            name=f"chaos-{mode}", partitions=range(N_PARTS),
+            engine=rm1["engine"], store=store, units=3,
+            straggler_timeout=60.0,  # re-issue must come from the kill, not time
+            use_cache=(mode == "cache"), **MODES[mode],
+        )
+        sess = svc.submit(job)
+        assert store.caught.wait(timeout=30)  # a worker is mid-read of pid 0
+        assert store.holder.startswith("presto-pool-")
+        wid = int(store.holder.rsplit("-", 1)[1])
+        assert svc.kill_worker(wid) is True
+        assert svc.num_workers == 2  # capacity re-planned immediately
+        store.release.set()  # the dead worker wakes only to abandon its work
+        got = {pid: mb for pid, mb in sess}
+    finally:
+        store.release.set()
+        svc.close()
+    _assert_bitwise(got, rm1["ref"])
+    st = sess.stats()
+    assert st.done and not st.cancelled
+    assert st.reissues >= 1  # the dead worker's claims went back through
+    counts = svc.events.counts()
+    assert counts.get("worker_leave") == 1
+    assert counts.get("claim_reissue", 0) >= 1
+    # the same stream is surfaced through stats()
+    assert svc.stats()["events"]["counts"] == counts
+
+
+def test_kill_below_admission_floor_degrades_not_evicts():
+    """Two admitted tenants on two workers; a crash to one worker is below
+    the admission floor — the degraded plan keeps both sessions live (1-unit
+    floor shares, pass 2 stays work-conserving) and both finish."""
+    gate = threading.Event()
+
+    def produce(pid):
+        gate.wait(timeout=10)
+        return {"labels": np.full((4,), pid)}
+
+    svc = PreprocessingService(num_workers=2)
+    try:
+        s1 = svc.submit(JobSpec(name="a", partitions=range(6),
+                                produce_fn=produce, use_cache=False))
+        s2 = svc.submit(JobSpec(name="b", partitions=range(6),
+                                produce_fn=produce, use_cache=False))
+        wid = next(iter(svc._workers))
+        assert svc.kill_worker(wid)
+        assert svc.num_workers == 1
+        gate.set()
+        got1 = {pid for pid, _ in s1}
+        got2 = {pid for pid, _ in s2}
+    finally:
+        gate.set()
+        svc.close()
+    assert got1 == got2 == set(range(6))
+    assert s1.stats().done and s2.stats().done
+
+
+# -- checkpoint / restart / resume ----------------------------------------------
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+def test_service_restart_resumes_bitwise_from_checkpoint(rm1, mode, tmp_path):
+    src = rm1["src"]
+    ckpt = tmp_path / f"frontier-{mode}.json"
+    cache = FeatureCache(256 << 20) if mode == "cache" else None
+    job = JobSpec(
+        name=f"resume-{mode}", partitions=range(N_PARTS),
+        engine=rm1["engine"],
+        store=PartitionedStore(N_PARTS, num_devices=4, source=src),
+        units=2, use_cache=(mode == "cache"),
+        checkpoint_path=str(ckpt), checkpoint_every=2, **MODES[mode],
+    )
+
+    # incarnation 1: deliver 4 batches, then the whole service dies
+    svc1 = PreprocessingService(num_workers=2, cache=cache)
+    got = {}
+    it = iter(svc1.submit(job))
+    for _ in range(4):
+        pid, mb = next(it)
+        got[pid] = mb
+    assert svc1.events.counts().get("checkpoint", 0) >= 1
+    svc1.close()
+
+    # incarnation 2: resume from the on-disk frontier (4 delivered)
+    ck = SessionCheckpoint.load(str(ckpt))
+    assert ck.job == job.name and len(ck.delivered) == 4
+    assert ck.remaining() == [p for p in range(N_PARTS) if p not in got]
+    assert ck.to_dict() == SessionCheckpoint.from_dict(ck.to_dict()).to_dict()
+    svc2 = PreprocessingService(num_workers=2, cache=cache)
+    try:
+        sess2 = svc2.submit(job, resume_from=ck)
+        assert sess2.total == N_PARTS - 4  # only the remainder is re-run
+        for pid, mb in sess2:
+            assert pid not in got  # delivered frontier is never re-delivered
+            got[pid] = mb
+    finally:
+        svc2.close()
+    _assert_bitwise(got, rm1["ref"])
+    assert sess2.stats().done
+    counts = svc2.events.counts()
+    assert counts.get("resume") == 1 and counts.get("session_join") == 1
+    if mode == "autotune":
+        # the tuner state rode the checkpoint: resumed session starts at the
+        # checkpointed rung instead of re-climbing from the seed
+        assert ck.tuner is not None
+
+
+def test_checkpoint_rejects_foreign_job(rm1):
+    ck = SessionCheckpoint(job="x", partitions=[0, 1], delivered=[0])
+    with pytest.raises(ValueError, match="checkpoint is for job"):
+        ck.apply(JobSpec(name="y", partitions=[0, 1], produce_fn=lambda p: p))
+    assert ck.fraction_done == 0.5
+
+
+# -- autoscaling ----------------------------------------------------------------
+
+
+def test_autoscaler_grows_under_backlog_and_shrinks_when_drained():
+    hold = threading.Event()
+
+    def produce(pid):
+        hold.wait(timeout=30)  # deterministic backlog: nothing drains yet
+        return {"labels": np.full((4,), pid)}
+
+    svc = PreprocessingService(num_workers=2)
+    scaler = Autoscaler(svc, AutoscalePolicy(
+        min_workers=1, max_workers=4, backlog_per_worker=2.0))
+    try:
+        s1 = svc.submit(JobSpec(name="t1", partitions=range(12),
+                                produce_fn=produce, units=3, use_cache=False))
+        s2 = svc.submit(JobSpec(name="t2", partitions=range(12),
+                                produce_fn=produce, units=3, use_cache=False))
+        snap = svc.load_snapshot()
+        assert snap["backlog"] == 24 and snap["workers"] == 2
+        assert scaler.desired(snap) == 4  # backlog-capped want, bound-clamped
+        # max_step=1: the pool grows one worker per evaluation
+        for want in (3, 4):
+            assert scaler.step() == 1 and svc.num_workers == want
+        assert scaler.step() == 0  # at the bound: no further growth
+        hold.set()
+        s1.drain()
+        s2.drain()
+        deadline = time.monotonic() + 10
+        while svc.load_snapshot()["sessions"] and time.monotonic() < deadline:
+            time.sleep(0.01)  # retire is on the worker path; give it a beat
+        while scaler.step() < 0:
+            pass
+        assert svc.num_workers == 1  # drained: back to the floor
+    finally:
+        hold.set()
+        scaler.stop()
+        svc.close()
+    counts = svc.events.counts()
+    assert counts.get("scale_up") == 2 and counts.get("worker_join") == 2
+    assert counts.get("scale_down") == 3 and counts.get("worker_leave") == 3
+    ups = svc.events.tail(50, kind="scale_up")
+    assert all(e.data["backlog"] > 0 and e.data["target"] == 4 for e in ups)
+
+
+def test_remove_worker_respects_admission_floor():
+    svc = PreprocessingService(num_workers=2)
+    try:
+        gate = threading.Event()
+
+        def produce(pid):
+            gate.wait(timeout=10)
+            return pid
+
+        s1 = svc.submit(JobSpec(name="f1", partitions=range(3),
+                                produce_fn=produce, use_cache=False))
+        s2 = svc.submit(JobSpec(name="f2", partitions=range(3),
+                                produce_fn=produce, use_cache=False))
+        assert svc.remove_worker() is None  # 2 sessions need 2 units
+        gate.set()
+        s1.drain()
+        s2.drain()
+        deadline = time.monotonic() + 10
+        while svc.load_snapshot()["sessions"] and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert svc.remove_worker() is not None  # drained: shrink allowed
+        assert svc.num_workers == 1
+        assert svc.remove_worker() is None  # never below one worker
+    finally:
+        svc.close()
+
+
+# -- membership + topology -------------------------------------------------------
+
+
+def test_kill_and_join_replan_device_topology(rm1):
+    svc = PreprocessingService(num_workers=3, devices=3)
+    try:
+        assert svc._topology.units_per_device == {0: 1, 1: 1, 2: 1}
+        dev_of = {w.wid: w.device for w in svc._workers.values()}
+        victim = next(w for w, d in dev_of.items() if d == 2)
+        assert svc.kill_worker(victim)
+        assert svc._topology.units_per_device == {0: 1, 1: 1, 2: 0}
+        assert svc._manned == {0, 1}  # device 2 lost its unit: host fallback
+        wid = svc.add_worker()  # least-manned binding: straight back to dev 2
+        assert svc._workers[wid].device == 2
+        assert svc._topology.units_per_device == {0: 1, 1: 1, 2: 1}
+        sess = svc.submit(JobSpec(name="topo", partitions=range(6),
+                                  produce_fn=lambda p: p, use_cache=False))
+        assert sorted(pid for pid, _ in sess) == list(range(6))
+    finally:
+        svc.close()
+    counts = svc.events.counts()
+    assert counts.get("worker_leave") == 1 and counts.get("worker_join") == 1
+    leave = svc.events.tail(50, kind="worker_leave")[0]
+    assert leave.data["reason"] == "killed" and leave.data["device"] == 2
+
+
+def test_add_worker_mid_session_speeds_completion(rm1):
+    """Joining workers pick up a live session's remaining claims."""
+    svc = PreprocessingService(num_workers=1)
+    try:
+        started = threading.Event()
+
+        def produce(pid):
+            started.set()
+            time.sleep(0.005)
+            return {"labels": np.full((2,), pid)}
+
+        sess = svc.submit(JobSpec(name="grow", partitions=range(16),
+                                  produce_fn=produce, use_cache=False))
+        assert started.wait(timeout=10)
+        for _ in range(3):
+            svc.add_worker()
+        assert svc.num_workers == 4
+        got = {pid for pid, _ in sess}
+    finally:
+        svc.close()
+    assert got == set(range(16)) and sess.stats().done
+    assert svc.events.counts().get("worker_join") == 3
