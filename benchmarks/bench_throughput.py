@@ -49,6 +49,14 @@ cache pre-warm on/off — delivers batches bitwise identical to the serial
 reference.  Writes a ``BENCH_throughput_autotune.json`` artifact (each mode
 has its own default so the two sweeps never clobber each other; ``--out``
 overrides).
+
+``--sim`` benches nothing on this host at all: it runs a ``--sessions``-job
+multi-tenant schedule through the discrete-event sim engine (core.simclock)
+in virtual time — Zipf-skewed session sizes, seeded arrivals, per-QoS-class
+deadlines — comparing SLO-aware admission (reject/degrade up front, rc
+preempts exploratory) against a FIFO baseline that admits everything and
+starves the tail.  Asserts byte-identical event traces on same-seed replay
+and zero starvation under SLO admission; writes ``BENCH_sim_slo.json``.
 """
 
 from __future__ import annotations
@@ -104,6 +112,14 @@ modes:
                              lookahead / pre-warm modes; writes
                              BENCH_throughput_autotune.json
 
+  --sim                      multi-tenant schedule in VIRTUAL time (no real
+                             sleeps): --sessions Zipf-skewed sessions with
+                             deadlines, SLO-aware admission vs a FIFO
+                             baseline; reports per-QoS-class SLO attainment
+                             + modeled makespan, asserts byte-identical
+                             same-seed trace replay and zero starvation
+                             under SLO admission; writes BENCH_sim_slo.json
+
 examples:
   PYTHONPATH=src python -m benchmarks.bench_throughput --multi-tenant --smoke
   PYTHONPATH=src python -m benchmarks.bench_throughput \\
@@ -111,6 +127,7 @@ examples:
   PYTHONPATH=src python -m benchmarks.bench_throughput --skew 1.1 --smoke
   PYTHONPATH=src python -m benchmarks.bench_throughput --pipeline --smoke
   PYTHONPATH=src python -m benchmarks.bench_throughput --autotune --smoke
+  PYTHONPATH=src python -m benchmarks.bench_throughput --sim --sessions 1000
 """
 
 
@@ -778,6 +795,99 @@ def run_autotune(
     return results
 
 
+def run_sim(
+    *,
+    sessions: int = 1000,
+    seed: int = 3,
+    workers: int = 8,
+    devices: int = 4,
+    arrival_window_s: float = 4.0,
+    out_json: str = "BENCH_sim_slo.json",
+) -> dict:
+    """Multi-tenant schedule in VIRTUAL time: SLO admission vs FIFO.
+
+    The same Zipf(1.3)-skewed, seeded workload (a few huge sessions, a long
+    tail of tiny ones, 10% release candidates on tighter deadlines) is run
+    through the discrete-event engine twice per policy — no real sleeps, so
+    1000 sessions of modeled schedule finish in wall-clock seconds:
+
+    * ``slo``  — deadline-aware admission: overflow demand is REJECTED at
+      arrival, the rest admitted or degraded (fewer units than asked); rc
+      jobs preempt exploratory ones.  Nothing admitted may starve.
+    * ``fifo`` — admit everything, serve in arrival order: under the same
+      overload the tail waits unboundedly and starves.
+
+    Asserts (the acceptance criteria): same-seed SLO replay yields a
+    byte-identical event trace; SLO starvation count is exactly 0 while the
+    jobs FIFO would have starved show up as rejected/degraded instead; the
+    FIFO baseline starves a non-zero tail (skipped for tiny --sessions
+    where the fleet is never overloaded).  Writes the per-class
+    SLO-attainment report to ``out_json``.
+    """
+    from repro.core.simclock import SimHarness
+
+    kw = dict(num_workers=workers, num_devices=devices)
+    wl = dict(arrival_window_s=arrival_window_s)
+    print(f"sim bench: {sessions} zipf sessions over {arrival_window_s}s, "
+          f"{workers} workers / {devices} devices, seed={seed}")
+
+    reports, walls = {}, {}
+    traces = []
+    for run_i in range(2):  # twice: the replay must be byte-identical
+        h = SimHarness(seed=seed, policy="slo", **kw)
+        h.workload(sessions, **wl)
+        t0 = time.perf_counter()
+        reports["slo"] = h.run()
+        walls["slo"] = time.perf_counter() - t0
+        traces.append(h.trace_bytes())
+    assert traces[0] == traces[1], (
+        "same-seed SLO replay must produce a byte-identical event trace")
+    print(f"replay: {len(traces[0])}-byte event trace identical across "
+          f"two seed={seed} runs")
+
+    h = SimHarness(seed=seed, policy="fifo", **kw)
+    h.workload(sessions, **wl)
+    t0 = time.perf_counter()
+    reports["fifo"] = h.run()
+    walls["fifo"] = time.perf_counter() - t0
+
+    results: dict = {"sessions": sessions, "seed": seed, "workers": workers,
+                     "devices": devices, "arrival_window_s": arrival_window_s}
+    for policy, rep in reports.items():
+        emit(f"throughput/sim/{policy}", rep.makespan_s * 1e6,
+             f"starved={rep.starved_count} wall_s={walls[policy]:.2f}")
+        results[policy] = dict(rep.to_dict(), wall_s=walls[policy])
+        print(f"\n[{policy}] makespan={rep.makespan_s:.2f}s modeled "
+              f"({walls[policy]:.2f}s wall, {rep.events_processed} events) "
+              f"starved={rep.starved_count}")
+        print(f"  {'class':<12} {'jobs':>5} {'admit':>6} {'degr':>5} "
+              f"{'rej':>5} {'starv':>6} {'slo':>6} {'p99':>8}")
+        for cls, row in rep.by_class().items():
+            p99 = row["p99_latency_s"]
+            print(f"  {cls:<12} {row['jobs']:>5} {row['admitted']:>6} "
+                  f"{row['degraded']:>5} {row['rejected']:>5} "
+                  f"{row['starved']:>6} {row['slo_attainment']:>6.2f} "
+                  f"{(f'{p99:.2f}s' if p99 is not None else '-'):>8}")
+
+    slo, fifo = reports["slo"], reports["fifo"]
+    assert slo.starved_count == 0, (
+        f"SLO admission must reject/degrade instead of starve "
+        f"(starved={slo.starved_count})")
+    shed = sum(1 for o in slo.outcomes if o.status in ("rejected", "degraded"))
+    assert shed > 0, "overloaded SLO schedule must shed load visibly"
+    if sessions >= 200:
+        assert fifo.starved_count > 0, (
+            "the FIFO baseline must starve a tail under the same overload "
+            f"(starved={fifo.starved_count})")
+    print(f"\nslo: 0 starved ({shed} rejected/degraded up front) vs "
+          f"fifo: {fifo.starved_count} starved of {sessions}")
+
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_json}")
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(
         description=__doc__, epilog=EPILOG,
@@ -816,12 +926,43 @@ if __name__ == "__main__":
                          "tuned K within one ladder step of the best static "
                          "K and bitwise identity in every mode; writes "
                          "BENCH_throughput_autotune.json")
+    ap.add_argument("--sim", action="store_true",
+                    help="run the multi-tenant schedule in VIRTUAL time: "
+                         "SLO-aware admission vs a FIFO baseline over the "
+                         "same seeded Zipf workload; asserts byte-identical "
+                         "same-seed trace replay and zero SLO starvation; "
+                         "writes BENCH_sim_slo.json")
+    ap.add_argument("--sessions", type=int, default=1000,
+                    help="--sim: number of Zipf-skewed sessions "
+                         "(default 1000)")
+    ap.add_argument("--sim-seed", type=int, default=3,
+                    help="--sim: workload + engine seed (default 3)")
+    ap.add_argument("--arrival-window", type=float, default=4.0,
+                    help="--sim: seconds of virtual time the session "
+                         "arrivals span; smaller = heavier overload "
+                         "(default 4.0)")
     ap.add_argument("--out", default=None,
-                    help="--pipeline/--autotune: JSON artifact path override "
-                         "(default: BENCH_throughput_pipeline.json / "
-                         "BENCH_throughput_autotune.json per mode)")
+                    help="--pipeline/--autotune/--sim: JSON artifact path "
+                         "override (default: BENCH_throughput_pipeline.json "
+                         "/ BENCH_throughput_autotune.json / "
+                         "BENCH_sim_slo.json per mode)")
     args = ap.parse_args()
-    if args.autotune:
+    if args.sim:
+        # --smoke shrinks the workload but keeps the ARRIVAL RATE: the
+        # FIFO-starves-a-tail assertion needs the fleet overloaded, and
+        # 200 sessions over the full 4s window would not be
+        sim_sessions = (200 if args.smoke and args.sessions == 1000
+                        else args.sessions)
+        window = args.arrival_window * sim_sessions / max(args.sessions, 1)
+        run_sim(
+            sessions=sim_sessions,
+            seed=args.sim_seed,
+            workers=args.workers if args.workers != 2 else 8,
+            devices=args.devices,
+            arrival_window_s=window,
+            out_json=args.out or "BENCH_sim_slo.json",
+        )
+    elif args.autotune:
         run_autotune(
             partitions=32 if args.smoke else 48,
             rows=256 if args.smoke else 1024,

@@ -84,17 +84,24 @@ class EventLog:
     Thread-safe.  ``emit`` never blocks and never fails the caller; the ring
     keeps the newest ``capacity`` events (older ones are dropped but still
     counted), so observability can never leak memory on a long-lived pool.
+
+    ``clock`` defaults to wall time; the discrete-event simulator injects
+    its ``VirtualClock.now`` so every event is stamped with the *modeled*
+    instant — with a virtual clock, same-seed runs produce byte-identical
+    event traces (``dump``/``to_dicts``), which is what the deterministic-
+    simulation tests diff.
     """
 
-    def __init__(self, capacity: int = 512):
+    def __init__(self, capacity: int = 512, *, clock=None):
         self._buf: Deque[Event] = collections.deque(maxlen=max(1, int(capacity)))
         self._lock = threading.Lock()
         self._seq = 0
         self._counts: Dict[str, int] = {}
+        self._clock = clock or time.time
 
     def emit(self, kind: str, **data: Any) -> Event:
         with self._lock:
-            ev = Event(self._seq, time.time(), str(kind), data)
+            ev = Event(self._seq, self._clock(), str(kind), data)
             self._seq += 1
             self._counts[ev.kind] = self._counts.get(ev.kind, 0) + 1
             self._buf.append(ev)

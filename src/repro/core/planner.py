@@ -85,6 +85,50 @@ class AdmissionError(RuntimeError):
     """The shared pool cannot guarantee the 1-unit QoS floor for a new job."""
 
 
+# -- QoS classes (the Meta DSI combo-job-peak regime) --------------------------
+# Release-candidate jobs are the revenue-bearing tier: they may preempt
+# exploratory capacity.  Exploratory jobs absorb contention: they are
+# degraded to the 1-unit floor first and rejected first when floors no
+# longer fit.  Lower rank = higher priority.
+QOS_RELEASE_CANDIDATE = "rc"
+QOS_EXPLORATORY = "exploratory"
+QOS_RANK = {QOS_RELEASE_CANDIDATE: 0, QOS_EXPLORATORY: 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class SloRequest:
+    """One job's admission request: demand plus its QoS contract."""
+
+    name: str
+    demand_units: int
+    qos_class: str = QOS_EXPLORATORY
+    deadline_s: Optional[float] = None  # relative to the job's arrival
+
+    @property
+    def rank(self) -> int:
+        return QOS_RANK.get(self.qos_class, max(QOS_RANK.values()) + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SloDecision:
+    """Per-job admission outcome: never silent starvation.
+
+    ``admitted``  — granted its full (hit-rate-discounted) demand.
+    ``degraded``  — admitted below demand (down to the 1-unit floor) because
+                    higher-priority demand or aggregate contention took the
+                    surplus; the job runs, slower, and the caller can tell.
+    ``rejected``  — even the 1-unit floor does not fit (or a release-
+                    candidate preempted this job's floor): the job is turned
+                    away NOW instead of being admitted into starvation.
+    """
+
+    name: str
+    status: str
+    granted_units: int
+    qos_class: str
+    reason: str = ""
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviceTopology:
     """Which pool units are bound to which simulated ISP device.
@@ -246,18 +290,113 @@ def plan_pool(
             if shares[j] < demands[j]:
                 shares[j] += 1
                 leftover -= 1
-    device_shares = None
-    if topology is not None:
-        ndev = max(len(topology.units_per_device), 1)
-        device_shares = {}
-        for d, units in sorted(topology.units_per_device.items()):
-            w = {}
-            for j in demands:
-                jw = (device_weights or {}).get(j)
-                frac = jw.get(d, 0.0) if jw is not None else 1.0 / ndev
-                w[j] = demands[j] * frac
-            device_shares[d] = _largest_remainder(units, w)
+    device_shares = _device_split(topology, demands, device_weights)
     return PoolPlan(capacity, dict(demand_units), shares, effective, device_shares)
+
+
+def _device_split(
+    topology: Optional[DeviceTopology],
+    demands: Dict[str, int],
+    device_weights: Optional[Dict[str, Dict[int, float]]],
+) -> Optional[Dict[int, Dict[str, int]]]:
+    """Per-device unit split across jobs (see ``plan_pool``'s docstring)."""
+    if topology is None:
+        return None
+    ndev = max(len(topology.units_per_device), 1)
+    device_shares: Dict[int, Dict[str, int]] = {}
+    for d, units in sorted(topology.units_per_device.items()):
+        w = {}
+        for j in demands:
+            jw = (device_weights or {}).get(j)
+            frac = jw.get(d, 0.0) if jw is not None else 1.0 / ndev
+            w[j] = demands[j] * frac
+        device_shares[d] = _largest_remainder(units, w)
+    return device_shares
+
+
+def plan_pool_slo(
+    capacity: int,
+    requests: "list[SloRequest]",
+    hit_rates: Optional[Dict[str, float]] = None,
+    *,
+    topology: Optional[DeviceTopology] = None,
+    device_weights: Optional[Dict[str, Dict[int, float]]] = None,
+) -> "tuple[PoolPlan, Dict[str, SloDecision]]":
+    """QoS-tiered admission + allocation: reject/degrade, never starve.
+
+    The SLO-aware twin of ``plan_pool``.  Jobs are considered in priority
+    order (release-candidate before exploratory; arrival order within a
+    tier).  The first ``capacity`` jobs in that order get the 1-unit floor;
+    the rest are REJECTED with a decision the caller can surface — a
+    release-candidate arriving into a full pool therefore preempts the
+    youngest exploratory job's floor rather than being turned away behind
+    it.  Surplus units are then granted tier by tier: the release-candidate
+    tier's residual demand is satisfied before the exploratory tier sees a
+    single surplus unit (proportional largest-remainder within each tier,
+    capped at demand).  Every admitted job granted less than its effective
+    demand is marked ``degraded`` — the caller knows it runs slow, which is
+    the opposite of silent starvation.
+
+    Returns ``(plan, decisions)``: the plan covers admitted jobs only and is
+    shaped exactly like ``plan_pool``'s (drop-in for ``PoolPlan`` consumers);
+    decisions cover every request, including the rejected ones.
+    """
+    order = sorted(range(len(requests)), key=lambda i: (requests[i].rank, i))
+    admitted = [requests[i] for i in order[: max(capacity, 0)]]
+    rejected = [requests[i] for i in order[max(capacity, 0):]]
+    decisions: Dict[str, SloDecision] = {}
+    for r in rejected:
+        decisions[r.name] = SloDecision(
+            r.name, "rejected", 0, r.qos_class,
+            reason=f"no 1-unit floor in a {capacity}-unit pool "
+                   f"({len(requests)} requests)",
+        )
+    demands = {r.name: max(1, int(r.demand_units)) for r in admitted}
+    eff = dict(demands)
+    if hit_rates:
+        eff = {
+            j: effective_demand_units(d, hit_rates.get(j, 0.0))
+            for j, d in demands.items()
+        }
+    shares = {j: 1 for j in demands}
+    surplus = capacity - len(shares)
+    for rank in sorted({r.rank for r in admitted}):
+        if surplus <= 0:
+            break
+        tier = [r.name for r in admitted if r.rank == rank]
+        residual = {j: eff[j] - shares[j] for j in tier if eff[j] > shares[j]}
+        total_res = sum(residual.values())
+        alloc = min(surplus, total_res)
+        if alloc <= 0:
+            continue
+        quotas = {j: alloc * residual[j] / total_res for j in residual}
+        floors = {j: math.floor(q) for j, q in quotas.items()}
+        for j, f in floors.items():
+            shares[j] += f
+        leftover = alloc - sum(floors.values())
+        for j in sorted(residual, key=lambda j: quotas[j] - floors[j], reverse=True):
+            if leftover <= 0:
+                break
+            if shares[j] < eff[j]:
+                shares[j] += 1
+                leftover -= 1
+        surplus -= alloc
+    for r in admitted:
+        granted = shares[r.name]
+        if granted >= eff[r.name]:
+            decisions[r.name] = SloDecision(
+                r.name, "admitted", granted, r.qos_class
+            )
+        else:
+            decisions[r.name] = SloDecision(
+                r.name, "degraded", granted, r.qos_class,
+                reason=f"granted {granted} of {eff[r.name]} effective unit(s)",
+            )
+    plan = PoolPlan(
+        capacity, demands, shares, eff,
+        _device_split(topology, eff, device_weights),
+    )
+    return plan, decisions
 
 
 def measure_throughput(

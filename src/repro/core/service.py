@@ -85,11 +85,14 @@ from repro.core.costmodel import ContentionAwareCostModel, PartitionCosts
 from repro.core.ctrlplane import EventLog, SessionCheckpoint
 from repro.core.featcache import CacheKey, FeatureCache
 from repro.core.planner import (
+    QOS_EXPLORATORY,
     AdmissionError,
     DeviceTopology,
     PoolPlan,
+    SloRequest,
     effective_demand_units,
     plan_pool,
+    plan_pool_slo,
     qos_demand_units,
 )
 from repro.core.preprocess import stack_pages
@@ -126,6 +129,15 @@ class JobSpec:
     store: Optional[PartitionedStore] = None
     placement: Union[str, Dict[str, str]] = "presto"
     target_samples_per_s: Optional[float] = None  # QoS; None = best effort
+    # -- SLO contract ---------------------------------------------------------
+    # qos_class: admission priority tier (core.planner.QOS_*).  Under SLO-
+    # aware admission, release-candidate ("rc") jobs take surplus units
+    # before — and may preempt the floors of — exploratory jobs.
+    qos_class: str = QOS_EXPLORATORY
+    # deadline_s: completion SLO relative to submission/arrival.  Advisory
+    # on the wall-clock path (surfaced through stats); the virtual-time
+    # simulator (core.simclock) scores per-class SLO attainment against it.
+    deadline_s: Optional[float] = None
     units: Optional[int] = None  # explicit demand override (else T/P estimate)
     queue_depth: int = 4
     straggler_timeout: float = 30.0
@@ -236,6 +248,10 @@ class SessionStats:
     tuned_k: int = 1  # megabatch K currently in effect (autotuned or static)
     staged_bytes_peak: int = 0  # peak bytes pre-staged ahead of claims
     prewarm_hits: int = 0  # peek-window pre-warm probes that found content cached
+    # -- SLO contract observability --
+    qos_class: str = QOS_EXPLORATORY
+    slo_status: str = "admitted"  # admitted / degraded / preempted
+    deadline_s: Optional[float] = None  # completion SLO relative to submit
 
     @property
     def achieved_samples_per_s(self) -> float:
@@ -295,6 +311,10 @@ class Session:
         self._service = service
         self.job = job
         self.name = job.name
+        # latest SLO admission decision for this session ("admitted" /
+        # "degraded" / "rejected"-i.e.-preempted); only the SLO admission
+        # policy ever moves it off the default
+        self.slo_status = "admitted"
         self._produce_fn, self.engine = job.build_produce()
         # materialize the dedup'd partition order ONCE (job.partitions may
         # be a one-shot iterable): the queue, the device-backlog binding,
@@ -604,6 +624,9 @@ class Session:
                 ),
                 staged_bytes_peak=self._staged_bytes_peak,
                 prewarm_hits=self._prewarm_hits,
+                qos_class=self.job.qos_class,
+                slo_status=self.slo_status,
+                deadline_s=self.job.deadline_s,
             )
 
     def _check_liveness(self) -> None:
@@ -1213,10 +1236,19 @@ class PreprocessingService:
         locality: bool = True,
         cost_model: Optional[ContentionAwareCostModel] = None,
         pipeline: bool = True,
+        admission: str = "strict",
     ):
         assert num_workers >= 1, "pool needs at least one worker"
+        assert admission in ("strict", "slo"), admission
         self.cache = cache  # ONE shared feature cache across every tenant
         self.locality = locality
+        # admission="slo": QoS-tiered admission (core.planner.plan_pool_slo).
+        # Release-candidate jobs take surplus before exploratory ones and may
+        # preempt exploratory floors; an existing session whose floor is
+        # preempted keeps running on work-conserving backfill only (share 0)
+        # and its slo_status says so — degrade/reject, never silent
+        # starvation.  "strict" keeps the historical fail-fast behavior.
+        self.admission = admission
         # pipeline=False disables the zero-stall worker path (megabatch
         # coalescing + stage/kernel overlap): every produce runs the legacy
         # synchronous claim->produce->complete loop.  The bench's serial
@@ -1466,6 +1498,11 @@ class PreprocessingService:
             raise RuntimeError("preprocessing service is closed")
         if resume_from is not None:
             job = resume_from.apply(job)
+        # A finished session retires from the worker loop's finally block,
+        # which may still be running when its consumer's drain() returns —
+        # prune now so back-to-back submits never fail admission against a
+        # tenant that is already done.
+        self._prune()
         with self._lock:
             if any(s.name == job.name for s in self._sessions):
                 raise ValueError(f"job name {job.name!r} already active")
@@ -1475,11 +1512,17 @@ class PreprocessingService:
             # binds device backlog on the fleet
             session = Session(self, job, resume_from=resume_from)
             try:
-                plan = plan_pool(  # admission
-                    self.num_workers, demands, rates,
-                    topology=self._topology,
-                    device_weights=self._device_weights(session),
-                )
+                if self.admission == "slo":
+                    plan = self._plan_slo(
+                        demands, rates, joining=session,
+                        device_weights=self._device_weights(session),
+                    )
+                else:
+                    plan = plan_pool(  # admission
+                        self.num_workers, demands, rates,
+                        topology=self._topology,
+                        device_weights=self._device_weights(session),
+                    )
             except AdmissionError:
                 session._release_all_backlog()  # rejected: unbind its backlog
                 raise
@@ -1538,17 +1581,73 @@ class PreprocessingService:
         self._replan = True
         self._wake()
 
+    def _plan_slo(
+        self,
+        demands: Dict[str, int],
+        rates: Dict[str, float],
+        *,
+        joining: Optional[Session] = None,
+        device_weights=None,
+    ) -> PoolPlan:
+        """QoS-tiered planning over the current sessions (plus an optionally
+        joining one); caller holds ``_lock``.  Raises ``AdmissionError`` when
+        the joining job itself is rejected.  An EXISTING session whose floor
+        a release candidate preempted is marked ``slo_status="preempted"``
+        and drops to share 0 — it keeps running on work-conserving backfill
+        only until capacity returns, and the preemption is emitted as an
+        event rather than happening silently."""
+        sessions = list(self._sessions)
+        if joining is not None:
+            sessions.append(joining)
+        reqs = [
+            SloRequest(
+                s.name, demands.get(s.name, s._demand),
+                s.job.qos_class, s.job.deadline_s,
+            )
+            for s in sessions
+        ]
+        plan, decisions = plan_pool_slo(
+            self.num_workers, reqs, rates,
+            topology=self._topology, device_weights=device_weights,
+        )
+        if joining is not None:
+            mine = decisions[joining.name]
+            if mine.status == "rejected":
+                raise AdmissionError(
+                    f"job {joining.name!r} rejected: {mine.reason}"
+                )
+        for s in sessions:
+            d = decisions.get(s.name)
+            if d is None:
+                continue
+            prev = s.slo_status
+            status = d.status
+            if status == "rejected" and s is not joining:
+                status = "preempted"
+            s.slo_status = status
+            if status == "preempted" and prev != "preempted":
+                self.events.emit(
+                    "preempt", job=s.name, qos_class=s.job.qos_class,
+                    by=(joining.name if joining is not None else None),
+                )
+        return plan
+
     def _rebalance(self) -> None:
         with self._lock:
             self._replan = False
             demands = {s.name: s._demand for s in self._sessions}
             rates = {s.name: s._hit_rate() for s in self._sessions}
             try:
-                plan = plan_pool(
-                    self.num_workers, demands, rates,
-                    topology=self._topology,
-                    device_weights=self._device_weights(),
-                )
+                if self.admission == "slo":
+                    plan = self._plan_slo(
+                        demands, rates, device_weights=self._device_weights()
+                    )
+                else:
+                    plan = plan_pool(
+                        self.num_workers, demands, rates,
+                        topology=self._topology,
+                        device_weights=self._device_weights(),
+                    )
             except AdmissionError:
                 # A crash dropped capacity below the admission floor for the
                 # sessions already inside.  Degrade rather than evict: every

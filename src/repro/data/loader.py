@@ -56,6 +56,7 @@ class WorkQueue:
         *,
         owner_of: Optional[Callable[[int], int]] = None,
         on_reissue: Optional[Callable[[int], None]] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         # dedup, order-preserving: a repeated pid would complete once and then
         # be dropped as a straggler duplicate, stranding its consumer forever
@@ -75,6 +76,11 @@ class WorkQueue:
         self._done: set[int] = set()
         self._lock = threading.Lock()
         self.straggler_timeout = straggler_timeout
+        # Injectable time source (``core.simclock.VirtualClock.now`` under the
+        # discrete-event simulator): every inflight stamp, straggler deadline
+        # and expiry back-date reads THIS clock, so a virtual-time run makes
+        # straggler re-issue deterministic instead of wall-clock-raced.
+        self._clock: Callable[[], float] = clock or time.monotonic
         self.owner_of = owner_of
         # control-plane observer: called with the pid of every straggler
         # re-issue, OUTSIDE the queue lock (it may emit events / take other
@@ -127,8 +133,9 @@ class WorkQueue:
 
     def next_deadline(self) -> Optional[float]:
         """Earliest instant an inflight claim becomes straggler-overdue
-        (``time.monotonic`` clock), or None with nothing inflight.  Idle
-        claimers sleep until this instant instead of polling."""
+        (on this queue's clock — ``time.monotonic`` unless injected), or
+        None with nothing inflight.  Idle claimers sleep until this
+        instant instead of polling."""
         with self._lock:
             if not self._inflight:
                 return None
@@ -200,10 +207,10 @@ class WorkQueue:
 
                             pid = self._take_first(_ok)
                     if pid is not None:
-                        self._inflight[pid] = time.monotonic()
+                        self._inflight[pid] = self._clock()
                         return pid
                 # steal: re-issue the longest-overdue inflight partition
-                now = time.monotonic()
+                now = self._clock()
                 overdue = [
                     (t, p)
                     for p, t in self._inflight.items()
@@ -237,7 +244,7 @@ class WorkQueue:
         with self._lock:
             if pid in self._inflight and pid not in self._done:
                 self._inflight[pid] = (
-                    time.monotonic() - self.straggler_timeout - 1.0
+                    self._clock() - self.straggler_timeout - 1.0
                 )
                 return True
             return False
@@ -282,10 +289,11 @@ class SessionQueue:
         on_settled: Optional[Callable[[int], None]] = None,
         on_offload: Optional[Callable[[int], None]] = None,
         on_reissue: Optional[Callable[[int], None]] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.work = WorkQueue(
             partition_ids, straggler_timeout, owner_of=owner_of,
-            on_reissue=on_reissue,
+            on_reissue=on_reissue, clock=clock,
         )
         self.depth = depth
         self.out: "queue.Queue[Future]" = queue.Queue()

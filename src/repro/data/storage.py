@@ -70,8 +70,15 @@ class IspDevice:
         self.queue_depth = 0  # bound partitions not yet completed/offloaded
         self.inflight = 0  # claims executing on this unit right now
         self.max_inflight = 0  # high-water mark of `inflight`
-        self.isp_claims = 0  # produces that ran here (locality or blind)
+        self.isp_claims = 0  # claims produced here (locality or blind)
         self.host_fallbacks = 0  # claims this device shed to the host path
+        # Virtual-time occupancy (core.simclock): the instant this unit next
+        # becomes idle.  Wall-clock paths never touch it; the discrete-event
+        # engine reserves the unit through `reserve`, which both advances
+        # free_at and charges the same busy_s ledger the wall-clock paths
+        # charge — so a simulated schedule and a threaded run of the same
+        # work agree on total device seconds.
+        self.free_at = 0.0
 
     # -- ledger ----------------------------------------------------------------
     def charge_stream(self, nbytes: int, *, spill: bool = False) -> float:
@@ -92,6 +99,25 @@ class IspDevice:
             self.compute_ops += ops
             self.busy_s += dt
         return dt
+
+    # -- virtual-time occupancy ------------------------------------------------
+    def reserve(
+        self, now: float, service_s: float, *, nbytes: int = 0, ops: float = 0.0
+    ) -> tuple:
+        """Reserve the unit for ``service_s`` modeled seconds, starting no
+        earlier than ``now``: returns ``(start, end)`` with
+        ``start = max(now, free_at)`` — the device is busy *in time*, so a
+        claim arriving while the unit works waits out the queue.  Charges
+        the same ledger counters as the wall-clock ``charge_*`` path (do not
+        combine both for one produce)."""
+        with self._lock:
+            start = max(now, self.free_at)
+            end = start + service_s
+            self.free_at = end
+            self.busy_s += service_s
+            self.bytes_streamed += int(nbytes)
+            self.compute_ops += ops
+            return start, end
 
     # -- occupancy -------------------------------------------------------------
     def enqueue(self, n: int = 1) -> None:
@@ -179,6 +205,9 @@ class DeviceFleet:
         self.host_link_bytes = 0
         self.host_ops = 0.0
         self.host_produces = 0
+        # Virtual-time host occupancy: one free_at instant per provisioned
+        # host worker slot (lazily sized by `reserve_host`'s parallelism).
+        self._host_free_at: List[float] = []
 
     @classmethod
     def from_cost_model(cls, num_devices: int, model) -> "DeviceFleet":
@@ -211,6 +240,36 @@ class DeviceFleet:
             self.host_ops += ops
             self.host_produces += 1
         return dt
+
+    def reserve_host(
+        self,
+        now: float,
+        service_s: float,
+        *,
+        link_bytes: int = 0,
+        ops: float = 0.0,
+        parallelism: int = 1,
+    ) -> tuple:
+        """Virtual-time twin of ``charge_host``: reserve the earliest-free of
+        ``parallelism`` host worker slots for ``service_s`` modeled seconds
+        starting no earlier than ``now``; returns ``(start, end)``.  Ledger
+        counters are charged exactly as ``charge_host`` would (do not call
+        both for one produce).  Slot choice is deterministic: the lowest-
+        indexed slot among the earliest free."""
+        with self._lock:
+            while len(self._host_free_at) < max(parallelism, 1):
+                self._host_free_at.append(0.0)
+            slot = min(
+                range(max(parallelism, 1)), key=lambda i: self._host_free_at[i]
+            )
+            start = max(now, self._host_free_at[slot])
+            end = start + service_s
+            self._host_free_at[slot] = end
+            self.host_busy_s += service_s
+            self.host_link_bytes += int(link_bytes)
+            self.host_ops += ops
+            self.host_produces += 1
+            return start, end
 
     def utilization(self) -> List[Dict[str, float]]:
         return [d.snapshot() for d in self.devices]

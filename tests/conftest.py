@@ -28,3 +28,19 @@ def run_sharded(script: str, devices: int = 8, timeout: int = 420) -> str:
     )
     assert proc.returncode == 0, f"sharded subprocess failed:\n{proc.stderr[-4000:]}"
     return proc.stdout
+
+
+@pytest.fixture
+def sim_harness():
+    """Factory for seeded virtual-time scenario harnesses (core.simclock).
+
+    Usage: ``h = sim_harness(seed=7, policy="slo", num_workers=4)`` —
+    everything the harness runs happens in virtual time (no real sleeps),
+    and a same-seed, same-schedule harness must replay a byte-identical
+    event trace (``h.trace_bytes()``)."""
+    from repro.core.simclock import SimHarness
+
+    def make(seed: int = 0, **service_kwargs):
+        return SimHarness(seed=seed, **service_kwargs)
+
+    return make

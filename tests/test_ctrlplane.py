@@ -391,3 +391,162 @@ def test_add_worker_mid_session_speeds_completion(rm1):
         svc.close()
     assert got == set(range(16)) and sess.stats().done
     assert svc.events.counts().get("worker_join") == 3
+
+
+# -- seeded chaos matrix (ISSUE 8) ---------------------------------------------
+# The kill/join schedule is DERIVED from a seed, the schedule runs against
+# every produce-path mode, and the invariant is two-layered: the threaded
+# service must deliver bitwise-identical batches no matter where the chaos
+# lands, and the virtual-time twin of the same seeded schedule must replay
+# a byte-identical event trace (threads cannot promise trace equality —
+# the sim clock is what makes the trace itself deterministic).
+
+
+def _sim_chaos_trace(seed: int) -> bytes:
+    """One seeded chaos schedule under the sim clock -> its trace bytes."""
+    from repro.core.simclock import SimHarness
+
+    h = SimHarness(seed=seed, num_workers=3, num_devices=2,
+                   straggler_timeout=0.05)
+    h.workload(24, arrival_window_s=0.4)
+    sched = np.random.default_rng(seed)
+    for _ in range(2):
+        h.kill_at(float(sched.uniform(0.01, 0.25)), int(sched.integers(0, 3)))
+    h.join_at(float(sched.uniform(0.25, 0.4)))
+    h.run()
+    return h.trace_bytes()
+
+
+@pytest.mark.parametrize("mode", sorted(MODES))
+@pytest.mark.parametrize("seed", [1, 2])
+def test_seeded_chaos_matrix_bitwise_and_replayable(rm1, mode, seed):
+    rng = np.random.default_rng(seed)
+    kill_after, kill_slot = int(rng.integers(1, 4)), int(rng.integers(0, 3))
+    rejoin = bool(rng.integers(0, 2))
+
+    cache = FeatureCache(256 << 20) if mode == "cache" else None
+    svc = PreprocessingService(num_workers=3, cache=cache)
+    got = {}
+    try:
+        sess = svc.submit(JobSpec(
+            name=f"chaos-{mode}-{seed}", partitions=range(N_PARTS),
+            engine=rm1["engine"],
+            store=PartitionedStore(N_PARTS, num_devices=4, source=rm1["src"]),
+            units=3, straggler_timeout=60.0,
+            use_cache=(mode == "cache"), **MODES[mode],
+        ))
+        it = iter(sess)
+        for _ in range(kill_after):  # seeded kill point in delivery order
+            pid, mb = next(it)
+            got[pid] = mb
+        wid = sorted(svc._workers)[kill_slot % len(svc._workers)]
+        assert svc.kill_worker(wid) is True
+        if rejoin:
+            svc.add_worker()
+        for pid, mb in it:
+            got[pid] = mb
+    finally:
+        svc.close()
+    _assert_bitwise(got, rm1["ref"])
+    assert sess.stats().done
+    assert svc.events.counts().get("worker_leave") == 1
+
+    # the virtual-time twin: the SAME seed replays byte-identically
+    assert _sim_chaos_trace(seed) == _sim_chaos_trace(seed)
+
+
+def test_sim_chaos_traces_differ_across_seeds():
+    assert _sim_chaos_trace(1) != _sim_chaos_trace(2)
+
+
+# -- checkpoint/resume edge cases (ISSUE 8) ------------------------------------
+
+
+def test_checkpoint_at_delivery_zero_resumes_full_job(rm1):
+    """A frontier snapshotted before ANY delivery resumes the whole job."""
+    job = JobSpec(
+        name="zero", partitions=range(N_PARTS), engine=rm1["engine"],
+        store=PartitionedStore(N_PARTS, num_devices=4, source=rm1["src"]),
+        units=2,
+    )
+    svc1 = PreprocessingService(num_workers=2)
+    sess1 = svc1.submit(job)
+    ck = sess1.checkpoint()  # delivery 0: nothing has reached the consumer
+    svc1.close()
+    assert ck.delivered == [] and ck.fraction_done == 0.0
+    assert ck.remaining() == list(range(N_PARTS))
+
+    svc2 = PreprocessingService(num_workers=2)
+    try:
+        sess2 = svc2.submit(job, resume_from=ck)
+        assert sess2.total == N_PARTS
+        got = {pid: mb for pid, mb in sess2}
+    finally:
+        svc2.close()
+    _assert_bitwise(got, rm1["ref"])
+
+
+def test_checkpoint_after_final_partition_resumes_to_noop(rm1, tmp_path):
+    """The completion checkpoint (written after the final delivery) resumes
+    an already-complete session: zero remaining work, an immediately-done
+    empty stream, no re-delivery."""
+    ckpt = tmp_path / "final.json"
+    job = JobSpec(
+        name="final", partitions=range(N_PARTS), engine=rm1["engine"],
+        store=PartitionedStore(N_PARTS, num_devices=4, source=rm1["src"]),
+        units=2, checkpoint_path=str(ckpt), checkpoint_every=4,
+    )
+    svc1 = PreprocessingService(num_workers=2)
+    try:
+        got = {pid: mb for pid, mb in svc1.submit(job)}
+    finally:
+        svc1.close()
+    _assert_bitwise(got, rm1["ref"])
+
+    ck = SessionCheckpoint.load(str(ckpt))
+    assert ck.fraction_done == 1.0 and ck.remaining() == []
+    assert sorted(ck.delivered) == list(range(N_PARTS))
+
+    svc2 = PreprocessingService(num_workers=2)
+    try:
+        sess2 = svc2.submit(job, resume_from=ck)
+        assert sess2.total == 0
+        assert list(sess2) == []  # nothing re-delivered, stream just ends
+        assert sess2.stats().done and not sess2.stats().cancelled
+    finally:
+        svc2.close()
+
+
+def test_resume_with_stale_cache_root_still_bitwise(rm1):
+    """Resuming a cache-mode job into a service whose feature cache is a
+    fresh (stale-rooted) instance: every hit the first incarnation banked is
+    gone, so the resume must re-produce — and stay bitwise identical."""
+    job = JobSpec(
+        name="stale-cache", partitions=range(N_PARTS), engine=rm1["engine"],
+        store=PartitionedStore(N_PARTS, num_devices=4, source=rm1["src"]),
+        units=2, use_cache=True, megabatch=2,
+    )
+    svc1 = PreprocessingService(num_workers=2, cache=FeatureCache(256 << 20))
+    got = {}
+    it1 = iter(svc1.submit(job))
+    for _ in range(N_PARTS // 2):
+        pid, mb = next(it1)
+        got[pid] = mb
+    ck = SessionCheckpoint(
+        job=job.name, partitions=list(range(N_PARTS)),
+        delivered=sorted(got),
+    )
+    svc1.close()
+
+    # brand-new cache: the old root's contents are unreachable (stale)
+    svc2 = PreprocessingService(num_workers=2, cache=FeatureCache(256 << 20))
+    try:
+        sess2 = svc2.submit(job, resume_from=ck)
+        for pid, mb in sess2:
+            assert pid not in got
+            got[pid] = mb
+    finally:
+        svc2.close()
+    _assert_bitwise(got, rm1["ref"])
+    st = sess2.stats()
+    assert st.done and st.cache_hits == 0  # nothing survived the stale root

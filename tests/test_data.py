@@ -134,3 +134,22 @@ def test_token_synth_deterministic_sharding():
     assert (a["tokens"] != c["tokens"]).mean() > 0.5
     assert a["tokens"].max() < 1000 and a["tokens"].min() >= 1
     np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_work_queue_model_seeded_interleavings():
+    """Model-based WorkQueue invariants under seeded random interleavings.
+
+    The same driver `test_properties.py` feeds from hypothesis, driven here
+    by a fixed-seed RNG so the invariants (_pending_set vs order-index
+    deques, peek_ahead purity, tombstones never resurrecting a completed
+    partition, exactly-once drain) are exercised even without hypothesis
+    installed."""
+    from workqueue_model import apply_ops, random_ops
+
+    rng = np.random.default_rng(2024)
+    for _ in range(60):
+        parts = int(rng.integers(1, 20))
+        devs = int(rng.integers(1, 5))
+        ops = random_ops(rng, int(rng.integers(0, 60)),
+                         partitions=parts, devices=devs)
+        apply_ops(ops, partitions=parts, devices=devs)

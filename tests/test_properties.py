@@ -10,7 +10,17 @@ from hypothesis import strategies as st
 
 from repro.data import encoding as enc
 from repro.kernels import ops, ref
+from workqueue_model import TIMEOUT, apply_ops
 
+# Pinned profile: bounded example count, NO per-example deadline (jit
+# compilation on first call would trip any wall-clock budget), derandomized
+# so CI failures replay exactly.  requirements-dev.txt carries hypothesis,
+# so every CI job runs these for real — the importorskip above only fires
+# on bare local installs (where test_data.py's seeded driver still covers
+# the WorkQueue invariants).
+settings.register_profile(
+    "presto", max_examples=25, deadline=None, derandomize=True)
+settings.load_profile("presto")
 _settings = settings(max_examples=25, deadline=None)
 
 
@@ -84,3 +94,77 @@ def test_lengths_mask_invariant(rows, lens):
     assert (raw.sparse_lengths <= cfg.max_sparse_len).all()
     mask = np.arange(cfg.max_sparse_len)[None, None] >= raw.sparse_lengths[..., None]
     assert (np.where(mask, raw.sparse_values, 0) == 0).all()
+
+
+# --- WorkQueue invariants under arbitrary interleavings -------------------
+# Ops are drawn as data tuples and replayed against a reference model (see
+# tests/workqueue_model.py): after EVERY op the queue's _pending_set must
+# agree with the model and with its own per-device order deques, peek_ahead
+# must be pure, and a completed partition must never be resurrected by a
+# tombstoned deque entry.  The drain epilogue then asserts exactly-once
+# delivery of every partition.
+
+_DEVICES = 3
+
+_claim_op = st.tuples(
+    st.just("claim"),
+    st.booleans(),  # reissue_only
+    st.one_of(st.none(), st.integers(0, _DEVICES - 1)),  # prefer_device
+    st.booleans(),  # fallback_ok admits everything?
+)
+_complete_op = st.tuples(st.just("complete"), st.integers(0, 63))
+_expire_op = st.tuples(st.just("expire"), st.integers(0, 63))
+_peek_op = st.tuples(
+    st.just("peek"),
+    st.integers(0, 24),
+    st.one_of(st.none(), st.integers(0, _DEVICES - 1)),
+)
+_advance_op = st.tuples(
+    st.just("advance"), st.floats(0.0, TIMEOUT * 1.5, allow_nan=False)
+)
+_ops = st.lists(
+    st.one_of(_claim_op, _complete_op, _expire_op, _peek_op, _advance_op),
+    max_size=60,
+)
+
+
+@_settings
+@given(ops_seq=_ops, partitions=st.integers(1, 20))
+def test_workqueue_interleaving_invariants(ops_seq, partitions):
+    """_pending_set consistent with the per-device deques, claims FIFO
+    within preference class, re-issue only when overdue, tombstones never
+    resurrect, exactly-once drain — under ANY op interleaving."""
+    apply_ops(list(ops_seq), partitions=partitions, devices=_DEVICES)
+
+
+@_settings
+@given(
+    ops_seq=_ops,
+    partitions=st.integers(1, 16),
+    n=st.integers(0, 20),
+    prefer=st.one_of(st.none(), st.integers(0, _DEVICES - 1)),
+)
+def test_workqueue_peek_ahead_never_claims(ops_seq, partitions, n, prefer):
+    """peek_ahead after an arbitrary history is a pure snapshot: claim
+    order preserved, nothing marked inflight, remaining() untouched."""
+    wq = apply_ops(
+        list(ops_seq), partitions=partitions, devices=_DEVICES, drain=False)
+    before = (wq.pending_snapshot(), wq.remaining())
+    out = wq.peek_ahead(n, prefer_device=prefer)
+    assert len(out) == len(set(out)) and len(out) <= max(n, 0)
+    assert set(out) <= set(before[0])
+    assert (wq.pending_snapshot(), wq.remaining()) == before
+
+
+@_settings
+@given(ops_seq=_ops, partitions=st.integers(1, 16))
+def test_workqueue_completed_never_resurrected(ops_seq, partitions):
+    """After the queue drains, every further claim mode returns None —
+    lingering tombstones and back-dated straggler stamps stay dead."""
+    wq = apply_ops(list(ops_seq), partitions=partitions, devices=_DEVICES)
+    assert wq.exhausted
+    for reissue_only in (False, True):
+        for prefer in (None, 0):
+            assert wq.claim(
+                reissue_only=reissue_only, prefer_device=prefer,
+                fallback_ok=lambda p: True) is None

@@ -1,0 +1,225 @@
+"""Model-based driver for ``WorkQueue`` invariant testing.
+
+A reference model (ordered pending list + inflight stamps + done set) is
+stepped in lockstep with a real ``WorkQueue`` through an arbitrary
+interleaving of claim / complete / expire / peek_ahead / clock-advance
+operations.  After every step the queue must agree with the model AND its
+internal indexes must be mutually consistent:
+
+* ``_pending_set`` is authoritative: exactly the model's pending pids, each
+  present in the global FIFO deque and (when device routing is bound) in
+  its owner's deque — tombstones may linger in the deques but never in the
+  set.
+* ``peek_ahead`` is pure: it returns exactly the prefix fresh claims would
+  take, and the queue's observable state is unchanged by the call.
+* tombstones never resurrect: once ``complete(pid)`` wins, no later claim —
+  fresh, fallback, or straggler re-issue — may return that pid.
+* nothing is lost: drained to exhaustion, every partition completes as the
+  winner exactly once.
+
+Shared by ``test_properties.py`` (hypothesis draws the interleaving) and
+``test_data.py`` (a seeded RNG draws it, so the invariants are exercised
+even where hypothesis is not installed).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Tuple
+
+from repro.data.loader import WorkQueue
+
+Op = Tuple  # ("advance", dt) | ("claim", reissue_only, prefer, fallback)
+#              | ("complete", slot) | ("expire", slot) | ("peek", n, prefer)
+
+TIMEOUT = 10.0
+
+
+class ClockBox:
+    """Manually-advanced virtual clock (the injectable ``clock`` callable)."""
+
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _expected_fresh(
+    pending: List[int],
+    prefer: Optional[int],
+    fallback: bool,
+    owner_of: Optional[Callable[[int], int]],
+) -> Optional[int]:
+    """The pid a fresh claim must take: FIFO within each preference class."""
+    if not pending:
+        return None
+    if prefer is None or owner_of is None:
+        return pending[0]
+    for p in pending:
+        if owner_of(p) == prefer:
+            return p
+    # no local work: the scan takes the global FIFO head iff fallback admits
+    return pending[0] if fallback else None
+
+
+def _check_indexes(wq: WorkQueue, pending: List[int]) -> None:
+    """White-box: membership set vs order-index deques (lazy tombstones)."""
+    with wq._lock:
+        assert wq._pending_set == set(pending)
+        in_fifo = set(wq._pending)
+        assert wq._pending_set <= in_fifo, "pending pid missing from FIFO index"
+        if wq._by_dev is not None:
+            assert wq.owner_of is not None
+            by_dev = {p for dq in wq._by_dev.values() for p in dq}
+            assert wq._pending_set <= by_dev, (
+                "pending pid missing from its device's order index")
+            for dev, dq in wq._by_dev.items():
+                for p in dq:
+                    if p in wq._pending_set:
+                        assert wq.owner_of(p) == dev
+
+
+def apply_ops(
+    ops: List[Op],
+    *,
+    partitions: int = 12,
+    devices: Optional[int] = 3,
+    timeout: float = TIMEOUT,
+    drain: bool = True,
+) -> WorkQueue:
+    """Run `ops` against a WorkQueue + reference model, asserting lockstep
+    agreement after every operation; optionally drain to exhaustion and
+    assert exactly-once winner delivery."""
+    clock = ClockBox()
+    owner_of = (lambda pid: pid % devices) if devices else None
+    wq = WorkQueue(range(partitions), timeout, owner_of=owner_of, clock=clock)
+
+    pending: List[int] = list(range(partitions))
+    inflight: dict = {}  # pid -> model claim stamp
+    done: set = set()
+    winners: dict = {}  # pid -> winning completions observed
+
+    def overdue_now() -> List[Tuple[float, int]]:
+        return sorted(
+            (t, p) for p, t in inflight.items()
+            if clock.t - t > timeout and p not in done
+        )
+
+    def claimed_pool() -> List[int]:
+        return sorted(set(inflight) | done)
+
+    for op in ops:
+        kind = op[0]
+        if kind == "advance":
+            clock.t += float(op[1])
+        elif kind == "claim":
+            _, reissue_only, prefer, fallback = op
+            pid = wq.claim(
+                reissue_only=bool(reissue_only),
+                prefer_device=prefer,
+                fallback_ok=(lambda p: True) if fallback else None,
+            )
+            exp = None if reissue_only else _expected_fresh(
+                pending, prefer, fallback, owner_of)
+            if exp is not None:
+                assert pid == exp, f"fresh claim took {pid}, expected {exp}"
+                assert pid not in done, "claim resurrected a completed pid"
+                pending.remove(pid)
+                inflight[pid] = clock.t
+            else:
+                od = overdue_now()
+                if od:
+                    assert pid == od[0][1], (
+                        f"re-issue took {pid}, expected longest-overdue "
+                        f"{od[0][1]}")
+                    assert pid not in done
+                    inflight[pid] = clock.t
+                else:
+                    assert pid is None, (
+                        f"claim returned {pid} with nothing claimable")
+        elif kind == "complete":
+            pool = claimed_pool()
+            if not pool:
+                continue
+            pid = pool[op[1] % len(pool)]
+            won = wq.complete(pid)
+            assert won == (pid not in done), "duplicate completion won"
+            if won:
+                winners[pid] = winners.get(pid, 0) + 1
+            done.add(pid)
+            inflight.pop(pid, None)
+        elif kind == "expire":
+            pool = claimed_pool() + pending
+            if not pool:
+                continue
+            pid = pool[op[1] % len(pool)]
+            hit = wq.expire(pid)
+            assert hit == (pid in inflight and pid not in done)
+            if hit:
+                inflight[pid] = clock.t - timeout - 1.0
+        elif kind == "peek":
+            _, n, prefer = op
+            before = wq.pending_snapshot()
+            out = wq.peek_ahead(n, prefer_device=prefer)
+            exp_order: List[int] = []
+            if prefer is not None and owner_of is not None:
+                exp_order += [p for p in pending if owner_of(p) == prefer]
+            exp_order += [p for p in pending if p not in exp_order]
+            assert out == exp_order[:max(n, 0)], "peek_ahead order diverged"
+            assert wq.pending_snapshot() == before, "peek_ahead claimed"
+        else:  # pragma: no cover - op generator bug
+            raise AssertionError(f"unknown op {op!r}")
+
+        # lockstep agreement after EVERY op
+        assert wq.pending_snapshot() == pending
+        assert wq.remaining() == len(pending) + len(inflight)
+        _check_indexes(wq, pending)
+        for probe in range(0, partitions, max(1, partitions // 4)):
+            assert wq.is_pending(probe) == (probe in pending)
+
+    if drain:
+        # exactly-once delivery: drain whatever the interleaving left behind
+        guard = 0
+        while not wq.exhausted:
+            pid = wq.claim()
+            if pid is None:
+                clock.t += timeout + 1.0  # make any straggler overdue
+                pid = wq.claim()
+            assert pid is not None, "queue not exhausted but nothing claimable"
+            assert pid not in done, "drain resurrected a completed pid"
+            if wq.complete(pid):
+                winners[pid] = winners.get(pid, 0) + 1
+            done.add(pid)
+            inflight.pop(pid, None)
+            if pid in pending:
+                pending.remove(pid)
+            guard += 1
+            assert guard <= 10 * partitions + len(ops), "drain did not converge"
+        assert sorted(winners) == list(range(partitions)), (
+            "some partition never delivered")
+        assert all(c == 1 for c in winners.values()), (
+            "a partition delivered more than once")
+    return wq
+
+
+def random_ops(rng, n_ops: int, *, partitions: int, devices: int) -> List[Op]:
+    """Seeded op-sequence generator (the no-hypothesis fallback driver)."""
+    ops: List[Op] = []
+    for _ in range(n_ops):
+        r = rng.integers(0, 10)
+        if r < 4:
+            prefer = None if rng.integers(0, 2) else int(
+                rng.integers(0, devices))
+            ops.append(("claim", bool(rng.integers(0, 4) == 0), prefer,
+                        bool(rng.integers(0, 2))))
+        elif r < 6:
+            ops.append(("complete", int(rng.integers(0, 64))))
+        elif r < 7:
+            ops.append(("expire", int(rng.integers(0, 64))))
+        elif r < 8:
+            prefer = None if rng.integers(0, 2) else int(
+                rng.integers(0, devices))
+            ops.append(("peek", int(rng.integers(0, partitions + 2)), prefer))
+        else:
+            ops.append(("advance", float(rng.uniform(0.0, TIMEOUT * 1.5))))
+    return ops
