@@ -26,6 +26,7 @@ from repro.core.ctrlplane import (
     parse_kill_spec,
 )
 from repro.core.featcache import (
+    BlockKey,
     CacheKey,
     CacheStats,
     FeatureCache,
@@ -50,6 +51,7 @@ from repro.core.planner import (
     plan_pool,
 )
 from repro.core.preprocess import (
+    execute_plan,
     minibatch_shape_dtypes,
     pages_from_partition,
     pages_shape_dtypes,
@@ -69,6 +71,7 @@ __all__ = [
     "AdmissionError",
     "Autoscaler",
     "AutoscalePolicy",
+    "BlockKey",
     "CacheKey",
     "CacheStats",
     "Comparison",
@@ -103,6 +106,7 @@ __all__ = [
     "cost_efficiency",
     "default_spill_store",
     "energy_efficiency",
+    "execute_plan",
     "k_ladder",
     "lower",
     "lower_transform",

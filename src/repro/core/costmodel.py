@@ -155,19 +155,34 @@ DEFAULT_PLACEMENT_MODEL = PlacementCostModel()
 _DECODE_OPS = 1.0
 _LOGNORM_OPS = 2.0
 _SIGRIDHASH_OPS = 8.0
+_GATHER_OPS = 0.5  # dedup expand: one indexed copy per logical value
 
 
 def family_compute_ops(spec: TransformSpec, rows: int) -> Dict[str, float]:
-    """Abstract compute ops per family for one partition of `rows`."""
+    """Abstract compute ops per family for one partition of `rows`.
+
+    Dedup datasets (``cfg.dup_factor > 1``) decode + hash each shared sparse
+    block ONCE (``rows / dup_factor`` unique rows) and pay a cheap gather op
+    per logical value to expand back — the RecD savings axis the planner and
+    router price through these numbers.
+    """
     cfg = spec.cfg
+    d = max(int(getattr(cfg, "dup_factor", 1)), 1)
+    u = rows // d
     bucket_ops = math.log2(max(cfg.bucket_size, 2))
+    sparse_ops = u * cfg.n_sparse * cfg.max_sparse_len * (
+        _DECODE_OPS + _SIGRIDHASH_OPS
+    )
+    length_ops = u * cfg.n_sparse * _DECODE_OPS
+    if d > 1:  # gather-expand to logical rows inside the program
+        sparse_ops += rows * cfg.n_sparse * cfg.max_sparse_len * _GATHER_OPS
+        length_ops += rows * cfg.n_sparse * _GATHER_OPS
     return {
         "dense": rows * cfg.n_dense * (_DECODE_OPS + _LOGNORM_OPS),
-        "sparse": rows * cfg.n_sparse * cfg.max_sparse_len
-        * (_DECODE_OPS + _SIGRIDHASH_OPS),
+        "sparse": sparse_ops,
         "gen": rows * cfg.n_generated
         * (_DECODE_OPS + bucket_ops + _SIGRIDHASH_OPS),
-        "lengths": rows * cfg.n_sparse * _DECODE_OPS,
+        "lengths": length_ops,
         "labels": rows * _DECODE_OPS,
     }
 

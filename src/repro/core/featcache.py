@@ -48,7 +48,13 @@ import numpy as np
 
 from repro.data.storage import CacheSpillStore
 
-__all__ = ["CacheKey", "CacheStats", "FeatureCache", "default_spill_store"]
+__all__ = [
+    "BlockKey",
+    "CacheKey",
+    "CacheStats",
+    "FeatureCache",
+    "default_spill_store",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +68,24 @@ class CacheKey:
     def block_id(self) -> str:
         """Flat id used by the spill tier's per-device block files."""
         return f"{self.partition_fp}-{self.plan_hash}-{self.placement}"
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockKey:
+    """Content address of ONE hashed sparse block (dedup datasets).
+
+    Sample-level dedup (RecD) shares sparse-feature blocks across sessions,
+    partitions and tenants; the per-partition ``CacheKey`` cannot see that
+    overlap.  A ``BlockKey`` addresses the train-ready form of one unique
+    block — its SigridHashed ids + lengths — by the block's content
+    fingerprint (``data.storage.PartitionedStore.block_fingerprints``) plus
+    the same plan/placement components as ``CacheKey``, so two tenants whose
+    partitions merely SHARE blocks (same session pool, different pids) reuse
+    each other's hashed blocks at block granularity."""
+
+    block_fp: str  # PartitionedStore.block_fingerprints(pid)[b]
+    plan_hash: str  # LoweredPlan.structural_hash() of the lowered Transform
+    placement: str  # engine placement signature (comm placement included)
 
 
 @dataclasses.dataclass
@@ -85,6 +109,13 @@ class CacheStats:
     spilled_entries: int = 0
     spilled_bytes: int = 0
     bytes_served: int = 0  # batch bytes returned by hits
+    # block tier (dedup datasets): hashed sparse blocks shared across
+    # partitions/tenants at block granularity
+    block_hits: int = 0
+    block_misses: int = 0
+    block_insertions: int = 0
+    block_entries: int = 0
+    block_resident_bytes: int = 0
     spill_io_s: float = 0.0  # modeled seconds of spill-tier byte movement
     # device -> modeled seconds: spill residency is charged to each block's
     # OWNING simulated device, not a global pot
@@ -150,12 +181,26 @@ class FeatureCache:
         capacity_bytes: int = 256 << 20,
         *,
         spill: Optional[CacheSpillStore] = None,
+        block_capacity_bytes: Optional[int] = None,
     ):
         assert capacity_bytes > 0
         self.capacity_bytes = capacity_bytes
         self.spill = spill
         self._lru: "OrderedDict[CacheKey, Tuple[Any, int]]" = OrderedDict()
         self._resident = 0
+        # block tier: hashed sparse blocks of dedup datasets, its own small
+        # LRU (memory-only — blocks are tiny next to batches and recompute
+        # is one fused launch away)
+        self.block_capacity_bytes = (
+            block_capacity_bytes
+            if block_capacity_bytes is not None
+            else capacity_bytes // 4
+        )
+        self._blocks: "OrderedDict[BlockKey, Tuple[Any, int]]" = OrderedDict()
+        self._block_resident = 0
+        self._block_hits = 0
+        self._block_misses = 0
+        self._block_insertions = 0
         self._inflight: Dict[CacheKey, Future] = {}  # leader produces
         self._lock = threading.Lock()
         self._hits = 0
@@ -369,6 +414,69 @@ class FeatureCache:
                     {k: np.asarray(v) for k, v in old_batch.items()},
                 )
 
+    # -- block tier (dedup datasets) ----------------------------------------
+
+    def put_block(self, key: BlockKey, ids: np.ndarray, lens: np.ndarray) -> None:
+        """Insert one hashed sparse block: ``(ids (S, L) i32, lens (S,) i32)``.
+
+        Idempotent by content address; evicts LRU blocks past the block
+        tier's own byte bound.  Publishers pass slices of a produced batch
+        (``PreStoEngine.extract_blocks``)."""
+        ids = np.asarray(ids)
+        lens = np.asarray(lens)
+        nbytes = int(ids.nbytes) + int(lens.nbytes)
+        if nbytes <= 0 or nbytes > self.block_capacity_bytes:
+            return
+        with self._lock:
+            old = self._blocks.pop(key, None)
+            if old is not None:
+                self._block_resident -= old[1]
+            self._blocks[key] = ((ids, lens), nbytes)
+            self._block_resident += nbytes
+            self._block_insertions += 1
+            while (
+                self._block_resident > self.block_capacity_bytes
+                and len(self._blocks) > 1
+            ):
+                _, (_b, old_bytes) = self._blocks.popitem(last=False)
+                self._block_resident -= old_bytes
+
+    def get_block(self, key: BlockKey) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """One cached block's ``(ids, lens)``, or None.  Refreshes recency."""
+        with self._lock:
+            entry = self._blocks.get(key)
+            if entry is None:
+                self._block_misses += 1
+                return None
+            self._blocks.move_to_end(key)
+            self._block_hits += 1
+            return entry[0]
+
+    def get_blocks(
+        self, keys
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """All-or-nothing probe of a partition's block set.
+
+        Full coverage returns the STACKED ``(ids (u, S, L), lens (u, S))``
+        ready for ``PreStoEngine.assemble_from_blocks``; any absent block
+        returns None (the partition cold-produces, then publishes).  Counts
+        one block hit/miss per key."""
+        keys = list(keys)
+        out = []
+        with self._lock:
+            missing = [k for k in keys if k not in self._blocks]
+            if missing:
+                self._block_misses += len(missing)
+                self._block_hits += len(keys) - len(missing)
+                return None
+            for k in keys:
+                self._blocks.move_to_end(k)
+                out.append(self._blocks[k][0])
+            self._block_hits += len(keys)
+        ids = np.stack([b[0] for b in out])
+        lens = np.stack([b[1] for b in out])
+        return ids, lens
+
     def stats(self) -> CacheStats:
         with self._lock:
             stats = CacheStats(
@@ -383,6 +491,11 @@ class FeatureCache:
                 entries=len(self._lru),
                 resident_bytes=self._resident,
                 bytes_served=self._bytes_served,
+                block_hits=self._block_hits,
+                block_misses=self._block_misses,
+                block_insertions=self._block_insertions,
+                block_entries=len(self._blocks),
+                block_resident_bytes=self._block_resident,
                 warm_started=self._warm_started,
             )
         if self.spill is not None:

@@ -254,14 +254,24 @@ def resolve_placements(mode, spec: TransformSpec, rows: int | None = None) -> Di
 
 
 def family_page_bytes(spec: TransformSpec, rows: int) -> Dict[str, int]:
-    """Encoded bytes each family reads, per partition of `rows`."""
+    """Encoded bytes each family reads, per partition of `rows`.
+
+    Dedup datasets (``cfg.dup_factor > 1``) store sparse/length pages at
+    unique-block geometry, so those families read ``rows / dup_factor``
+    rows' worth of encoded words (plus the 4-byte-per-sample refs page,
+    charged to the sparse family that consumes it).  Dense/gen/labels stay
+    per-sample.
+    """
     cfg = spec.cfg
+    d = max(int(getattr(cfg, "dup_factor", 1)), 1)
+    u = rows // d
     return {
         "dense": cfg.n_dense * rows * 4,  # bytesplit: 4 plane bytes / value
-        "sparse": cfg.n_sparse * (rows * cfg.max_sparse_len // 32)
-        * cfg.id_width * 4,
+        "sparse": cfg.n_sparse * (u * cfg.max_sparse_len // 32)
+        * cfg.id_width * 4
+        + (rows * 4 if d > 1 else 0),
         "gen": cfg.n_generated * rows * 4,  # sourced dense planes
-        "lengths": cfg.n_sparse * (rows // 32) * cfg.len_width * 4,
+        "lengths": cfg.n_sparse * (u // 32) * cfg.len_width * 4,
         "labels": rows * 4,
     }
 

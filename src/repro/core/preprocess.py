@@ -27,12 +27,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.opgraph import (
+    LoweredPlan,
     build_transform_graph,
     lower,
+    prepare_env,
     resolve_placements,
 )
 from repro.core.spec import TransformSpec
-from repro.data.columnar import Partition
+from repro.data.columnar import Partition, partition_refs
 from repro.kernels import ops as K
 
 MiniBatch = Dict[str, jax.Array]
@@ -43,26 +45,38 @@ MiniBatch = Dict[str, jax.Array]
 
 
 def pages_from_partition(part: Partition, spec: TransformSpec) -> Dict[str, np.ndarray]:
-    """Stack per-column pages into the grouped arrays the kernels consume."""
+    """Stack per-column pages into the grouped arrays the kernels consume.
+
+    Dedup partitions (``schema.dup_factor > 1``) stage their sparse/length
+    pages at UNIQUE-block geometry — each shared block's encoded words enter
+    device memory exactly once — plus a ``sparse_refs`` vector mapping the
+    ``rows`` logical samples back to blocks; the compiled Transform
+    gather-expands after hashing (``execute_plan``).
+    """
     cfg = spec.cfg
     rows = part.schema.rows
+    u = part.schema.unique_rows  # == rows for classic partitions
     dense = []
     for i in range(cfg.n_dense):
         col = part.columns[f"d{i}"]
         dense.append(K.regroup_bytesplit(col.pages["data"], rows))
     sparse, lengths = [], []
-    n_vals = rows * cfg.max_sparse_len
+    n_vals = u * cfg.max_sparse_len
     for i in range(cfg.n_sparse):
         col = part.columns[f"s{i}"]
         sparse.append(K.regroup_bitpack(col.pages["values"], n_vals, cfg.id_width))
-        lengths.append(K.regroup_bitpack(col.pages["lengths"], rows, cfg.len_width))
+        lengths.append(K.regroup_bitpack(col.pages["lengths"], u, cfg.len_width))
     label_words = part.columns["label"].pages["data"][:rows]
-    return {
+    pages = {
         "dense_words": np.stack(dense),  # (n_dense, rows/4, 4) u32
-        "sparse_words": np.stack(sparse),  # (n_sparse, rows*L/32, w) u32
-        "length_words": np.stack(lengths),  # (n_sparse, rows/32, lw) u32
+        "sparse_words": np.stack(sparse),  # (n_sparse, u*L/32, w) u32
+        "length_words": np.stack(lengths),  # (n_sparse, u/32, lw) u32
         "label_words": label_words,  # (rows,) u32
     }
+    refs = partition_refs(part)
+    if refs is not None:
+        pages["sparse_refs"] = refs.astype(np.int32)  # (rows,) block index
+    return pages
 
 
 def stack_pages(pages_list) -> Dict[str, np.ndarray]:
@@ -94,7 +108,15 @@ def flatten_megabatch(stacked: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
     """
     out: Dict[str, jax.Array] = {}
     for name, v in stacked.items():
-        if v.ndim == 2:  # label_words: (K, rows) -> (K*rows,)
+        if name == "sparse_refs":
+            # (K, rows) block refs -> (K*rows,) into the K*u flattened unique
+            # blocks: partition k's blocks land at offset k*u after the
+            # sparse/length pages fold their own row-group axes below.
+            k, _ = v.shape
+            u = stacked["length_words"].shape[2] * 32
+            off = (jnp.arange(k, dtype=v.dtype) * u)[:, None]
+            out[name] = (v + off).reshape(-1)
+        elif v.ndim == 2:  # label_words: (K, rows) -> (K*rows,)
             out[name] = v.reshape(-1)
         else:  # (K, F, G, w) -> (F, K*G, w)
             k, f, g, w = v.shape
@@ -113,23 +135,64 @@ def megabatch_pages_shape_dtypes(
 
 
 def pages_shape_dtypes(spec: TransformSpec, rows: int) -> Dict[str, jax.ShapeDtypeStruct]:
-    """ShapeDtypeStruct stand-ins for the page arrays (dry-run inputs)."""
+    """ShapeDtypeStruct stand-ins for the page arrays (dry-run inputs).
+
+    Sparse/length pages live at unique-block geometry when the dataset
+    dedups (``cfg.dup_factor > 1``), matching ``pages_from_partition``.
+    """
     cfg = spec.cfg
+    d = getattr(cfg, "dup_factor", 1)
+    u = rows // d
     u32 = jnp.uint32
-    return {
+    out = {
         "dense_words": jax.ShapeDtypeStruct((cfg.n_dense, rows // 4, 4), u32),
         "sparse_words": jax.ShapeDtypeStruct(
-            (cfg.n_sparse, rows * cfg.max_sparse_len // 32, cfg.id_width), u32
+            (cfg.n_sparse, u * cfg.max_sparse_len // 32, cfg.id_width), u32
         ),
         "length_words": jax.ShapeDtypeStruct(
-            (cfg.n_sparse, rows // 32, cfg.len_width), u32
+            (cfg.n_sparse, u // 32, cfg.len_width), u32
         ),
         "label_words": jax.ShapeDtypeStruct((rows,), u32),
     }
+    if d > 1:
+        out["sparse_refs"] = jax.ShapeDtypeStruct((rows,), jnp.int32)
+    return out
 
 
 # ---------------------------------------------------------------------------
 # Transform entry points (all lowered from the operator graph)
+
+
+def execute_plan(plan: LoweredPlan, pages: Dict[str, jax.Array]) -> MiniBatch:
+    """Run a lowered plan over staged pages, dedup-aware (traceable).
+
+    Classic pages run ``plan.execute`` untouched.  Dedup pages (carrying
+    ``sparse_refs``) run the sparse/length stages at unique-block geometry —
+    decode + SigridHash touch each shared block once — then gather-expand
+    ``sparse_hashed``/``lengths_i32`` through the refs just before
+    ``form_batch``.  Every sparse-chain operator is per-value row-local
+    (``kernels.ROW_LOCAL_KINDS``), so transform-then-expand is bitwise
+    identical to expand-then-transform: the undeduped result, for fused,
+    unfused and hybrid lowerings alike.
+    """
+    if "sparse_refs" not in pages:
+        return plan.execute(pages)
+    pages = dict(pages)
+    refs = jnp.asarray(pages.pop("sparse_refs"))
+    cfg = plan.spec.cfg
+    env = prepare_env(pages, plan.spec)
+    for st in plan.stages:
+        if st.name == "form_batch":
+            sh = env["sparse_hashed"]  # (n_sparse, u*L) at unique geometry
+            s, ul = sh.shape
+            blocks = sh.reshape(s, ul // cfg.max_sparse_len, cfg.max_sparse_len)
+            env["sparse_hashed"] = jnp.take(blocks, refs, axis=1).reshape(
+                s, refs.shape[0] * cfg.max_sparse_len
+            )
+            env["lengths_i32"] = jnp.take(env["lengths_i32"], refs, axis=0)
+        vals = st.fn(*(env[k] for k in st.inputs))
+        env.update(zip(st.outputs, vals))
+    return env["minibatch"]
 
 
 def preprocess_pages(
@@ -150,7 +213,7 @@ def preprocess_pages(
     """
     placements = resolve_placements(mode, spec)
     plan = lower(build_transform_graph(spec), spec, placements, interpret=interpret)
-    return plan.execute(pages)
+    return execute_plan(plan, pages)
 
 
 def minibatch_shape_dtypes(spec: TransformSpec, rows: int) -> MiniBatch:

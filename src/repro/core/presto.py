@@ -59,12 +59,14 @@ from repro.core.opgraph import (
 )
 from repro.core.preprocess import (
     MiniBatch,
+    execute_plan,
     flatten_megabatch,
     pages_from_partition,
     pages_shape_dtypes,
     stack_pages,
 )
 from repro.core.spec import TransformSpec
+from repro.data.columnar import inflate_partition
 from repro.data.storage import PartitionedStore
 
 PLACEMENTS = ("presto", "disagg", "hybrid")
@@ -130,6 +132,7 @@ class PreStoEngine:
         self._plan: Optional[LoweredPlan] = None
         self._jit_cached = None
         self._jit_mega = None
+        self._jit_rest = None
         self._jit_lock = threading.Lock()
         # Donating the page buffers lets XLA reuse their memory for outputs.
         # Only meaningful where the runtime honors donation (not the CPU
@@ -194,7 +197,10 @@ class PreStoEngine:
 
     # -- single-shard (local) path -------------------------------------------
     def preprocess_local(self, pages: Dict[str, jax.Array]) -> MiniBatch:
-        return self.lowered_plan.execute(pages)
+        # dedup-staged pages (carrying ``sparse_refs``) run the sparse chain
+        # at unique-block geometry and gather-expand inside the program —
+        # bitwise identical to classic pages (preprocess.execute_plan)
+        return execute_plan(self.lowered_plan, pages)
 
     # -- sharded global path ---------------------------------------------------
     def preprocess_global(self, pages: Dict[str, jax.Array]) -> MiniBatch:
@@ -389,8 +395,19 @@ class PreStoEngine:
 
     # -- staging ----------------------------------------------------------------
     def stage_partition(self, store: PartitionedStore, pid: int) -> Dict[str, np.ndarray]:
-        """Extract(Read): fetch + lay out one partition's pages (host side)."""
-        return pages_from_partition(store.read(pid), self.spec)
+        """Extract(Read): fetch + lay out one partition's pages (host side).
+
+        Meshed engines shard pages along the row-group axis
+        (``pages_pspec``), which a dedup partition's unique-geometry pages
+        would break — those inflate (``columnar.inflate_partition``, bitwise
+        faithful) to the classic per-sample layout first.  The I/O ledger
+        still charges only the UNIQUE bytes (``store.read`` streams the
+        stored form; inflation is host-side decompression after the read).
+        """
+        part = store.read(pid)
+        if self.mesh is not None:
+            part = inflate_partition(part)
+        return pages_from_partition(part, self.spec)
 
     def stage_megabatch(
         self, store: PartitionedStore, pids: Sequence[int]
@@ -526,3 +543,81 @@ class PreStoEngine:
 
     def pages_struct(self, rows: int) -> Dict[str, jax.ShapeDtypeStruct]:
         return pages_shape_dtypes(self.spec, rows)
+
+    # -- block-granularity cache hooks (dedup datasets) -------------------------
+    #
+    # A dedup partition's train-ready sparse content is fully determined by
+    # its unique blocks: rows sharing a block have identical multi_hot_ids /
+    # lengths slices.  ``extract_blocks`` pulls those per-block slices out of
+    # a produced batch (publish side) and ``assemble_from_blocks`` rebuilds a
+    # full batch from cached blocks plus the partial "rest" program over the
+    # per-sample families (dense/gen/labels) — so overlapping tenants reuse
+    # hashed sparse blocks across partitions and datasets
+    # (``core.featcache.BlockKey``), bitwise identical to cold compute.
+
+    def _preprocess_rest(self, pages: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Partial Transform: every family EXCEPT sparse/lengths (traceable)."""
+        plan = self.lowered_plan
+        env = prepare_env(pages, self.spec)
+        for st in plan.stages:
+            if st.family in ("sparse", "lengths") or st.name == "form_batch":
+                continue
+            vals = st.fn(*(env[k] for k in st.inputs))
+            env.update(zip(st.outputs, vals))
+        # exactly form_batch's assembly expressions for these keys
+        return {
+            "dense": env["dense_norm"].T,
+            "one_hot_ids": env["gen_hashed"].T,
+            "labels": env["labels_f32"],
+        }
+
+    def jit_preprocess_rest_cached(self):
+        """Compiled rest-program (dense/gen/labels), shared process-wide."""
+        with self._jit_lock:
+            if self._jit_rest is None:
+                key = self._exec_key("rest")
+                build = lambda: jax.jit(self._preprocess_rest)
+                if self.use_exec_cache:
+                    self._jit_rest = EXECUTABLES.get_or_build(key, build)
+                else:
+                    self._jit_rest = build()
+        return self._jit_rest
+
+    @staticmethod
+    def extract_blocks(
+        batch: MiniBatch, refs: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-unique-block hashed sparse content of a produced batch.
+
+        Returns ``(ids (u, S, L) i32, lens (u, S) i32)`` — block b's slice is
+        any row r with ``refs[r] == b`` (they are identical by construction;
+        the first occurrence is taken).
+        """
+        refs = np.asarray(refs)
+        _, first = np.unique(refs, return_index=True)
+        ids = np.asarray(batch["multi_hot_ids"])[first]
+        lens = np.asarray(batch["lengths"])[first]
+        return ids, lens
+
+    def assemble_from_blocks(
+        self,
+        pages: Dict[str, np.ndarray],
+        block_ids: np.ndarray,
+        block_lens: np.ndarray,
+    ) -> MiniBatch:
+        """Full batch from cached sparse blocks + the rest program.
+
+        ``pages`` is dedup-staged (``stage_partition``) output; only its
+        dense/label pages feed the compiled rest program — the sparse pages'
+        decode+hash work is what the block cache saved.  Bitwise identical
+        to a cold produce of the same partition.
+        """
+        refs = np.asarray(pages["sparse_refs"], dtype=np.int64)
+        rest_pages = {
+            "dense_words": pages["dense_words"],
+            "label_words": pages["label_words"],
+        }
+        batch = dict(self.jit_preprocess_rest_cached()(rest_pages))
+        batch["multi_hot_ids"] = jnp.asarray(np.asarray(block_ids)[refs])
+        batch["lengths"] = jnp.asarray(np.asarray(block_lens)[refs])
+        return batch

@@ -83,7 +83,7 @@ import numpy as np
 from repro.core.autotune import DEFAULT_AUTOTUNE_KMAX, MegabatchTuner
 from repro.core.costmodel import ContentionAwareCostModel, PartitionCosts
 from repro.core.ctrlplane import EventLog, SessionCheckpoint
-from repro.core.featcache import CacheKey, FeatureCache
+from repro.core.featcache import BlockKey, CacheKey, FeatureCache
 from repro.core.planner import (
     QOS_EXPLORATORY,
     AdmissionError,
@@ -229,6 +229,11 @@ class SessionStats:
     duplicates_dropped: int = 0  # straggler losers discarded
     cache_hits: int = 0  # claims short-circuited by the shared feature cache
     cache_misses: int = 0  # cache probes that fell through to a produce
+    # block-granularity dedup (RecD): claims whose batch was ASSEMBLED from
+    # cached shared sparse blocks (subset of cache_hits), and unique blocks
+    # this session published after cold produces
+    block_hits: int = 0
+    blocks_published: int = 0
     effective_demand_units: int = 1  # demand after the hit-rate discount
     rows_delivered: int = 0
     produce_time_s: float = 0.0  # pool-worker seconds spent on this job
@@ -410,6 +415,22 @@ class Session:
         self._cache_key = (
             job.cache_key_fn(self.engine) if self._cache is not None else None
         )
+        # block-granularity dedup (RecD): cacheable, mesh-less, store-bound
+        # jobs publish each cold produce's unique hashed sparse blocks and
+        # assemble full-coverage misses from other tenants' blocks
+        self._block_key_parts: Optional[Tuple[str, str]] = None
+        if (
+            self._cache_key is not None
+            and self.engine is not None
+            and self.engine.mesh is None
+            and job.store is not None
+        ):
+            self._block_key_parts = (
+                self.engine.cache_signature(),
+                self.engine.placement,
+            )
+        self._block_hits = 0
+        self._blocks_published = 0
         # -- device routing (fleet-backed services with a store-bound job) --
         self._fleet = service.fleet
         self._owner_of: Optional[Callable[[int], int]] = None
@@ -609,6 +630,8 @@ class Session:
                 demand_units=self._demand,
                 cache_hits=self._cache_hits,
                 cache_misses=self._cache_misses,
+                block_hits=self._block_hits,
+                blocks_published=self._blocks_published,
                 effective_demand_units=effective_demand_units(
                     self._demand, self._hit_rate_locked()
                 ),
@@ -1072,7 +1095,79 @@ class Session:
             self._eff_demand = eff
         if changed:
             self._service._request_replan()
+        if found is None and status == "produce":
+            assembled = self._assemble_from_blocks(pid)
+            if assembled is not None:
+                # the claim is served without a produce after all: flip the
+                # miss to a hit, release the leader lease by fulfilling it
+                # (followers resolve, the full-batch key is now cached too)
+                with self._slock:
+                    self._cache_keys.pop(pid, None)
+                    self._cache_misses -= 1
+                    self._cache_hits += 1
+                    self._block_hits += 1
+                try:
+                    self._cache.fulfill(key, assembled)
+                except Exception:
+                    self._cache.abandon(key)
+                return assembled
         return found
+
+    def _assemble_from_blocks(self, pid: int) -> Optional[Any]:
+        """Serve one cold claim from the block tier, if fully covered.
+
+        A dedup partition whose unique blocks are ALL cached (published by
+        any tenant — same pool, different pids included) needs no sparse
+        produce: the per-sample families run through the engine's compiled
+        partial program over a fresh (unique-bytes-charged) page read, and
+        the hashed sparse blocks gather-expand from the cache — bitwise
+        identical to a cold produce.  Returns None on any miss or error
+        (the claim then produces normally)."""
+        if self._block_key_parts is None:
+            return None
+        store, engine = self.job.store, self.engine
+        try:
+            fps = store.block_fingerprints(pid)
+            if not fps:
+                return None
+            plan_hash, placement = self._block_key_parts
+            blocks = self._cache.get_blocks(
+                BlockKey(fp, plan_hash, placement) for fp in fps
+            )
+            if blocks is None:
+                return None
+            pages = engine.stage_partition(store, pid)
+            if "sparse_refs" not in pages:
+                return None
+            batch = engine.assemble_from_blocks(pages, *blocks)
+            jax.block_until_ready(batch)
+            return batch
+        except Exception:
+            return None
+
+    def _publish_blocks(self, pid: int, batch: Any) -> None:
+        """Publish a cold produce's unique hashed sparse blocks (winner path).
+
+        Classic (dup-factor-1) data short-circuits on the store's None
+        fingerprints.  Publishing must never take the worker thread down."""
+        if self._block_key_parts is None:
+            return
+        try:
+            store = self.job.store
+            fps = store.block_fingerprints(pid)
+            if not fps:
+                return
+            refs = store.block_refs(pid)
+            if refs is None:
+                return
+            ids, lens = self.engine.extract_blocks(batch, refs)
+            plan_hash, placement = self._block_key_parts
+            for fp, bi, bl in zip(fps, ids, lens):
+                self._cache.put_block(BlockKey(fp, plan_hash, placement), bi, bl)
+        except Exception:
+            return
+        with self._slock:
+            self._blocks_published += len(fps)
 
     def _hit_rate_locked(self) -> float:
         probes = self._cache_hits + self._cache_misses
@@ -1108,6 +1203,7 @@ class Session:
                     self._cache.fulfill(key, batch)
                 except Exception:
                     self._cache.abandon(key)
+                self._publish_blocks(pid, batch)
         rows = _batch_rows(batch)
         demand_changed = False
         with self._slock:

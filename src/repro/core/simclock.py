@@ -174,10 +174,24 @@ def synthetic_costs(
     page_bytes: int = 48 << 20,
     batch_bytes: int = 16 << 20,
     ops: float = 2e7,
+    spec=None,
+    rows: Optional[int] = None,
 ) -> PartitionCosts:
     """Self-consistent per-partition costs at the model's modeled rates —
     the byte-bound RecSys regime where in-storage wins: pages stream at the
-    device's internal rate instead of crossing the 3 GB/s link."""
+    device's internal rate instead of crossing the 3 GB/s link.
+
+    Pass ``spec`` (a ``core.spec.TransformSpec``, optionally with ``rows``)
+    to CALIBRATE the sim against the real cost model instead of the round
+    default constants: the returned costs are ``costmodel.partition_costs``
+    for that Transform — including the dedup-aware unique-bytes/ops pricing
+    (``RMDataConfig.dup_factor``) — so modeled sim makespans track what the
+    threaded service's ledgers would charge for the same partitions.
+    """
+    if spec is not None:
+        from repro.core.costmodel import partition_costs  # lazy: no cycle
+
+        return partition_costs(spec, rows, model)
     isp_s = page_bytes / model.isp_stream_bytes_per_s + ops / model.isp_ops_per_s
     host_s = (page_bytes + batch_bytes) / model.link_bytes_per_s + ops / model.host_ops_per_s
     return PartitionCosts(

@@ -14,6 +14,8 @@ from repro.data.columnar import (
     PartitionSchema,
     decode_partition_numpy,
     encode_partition,
+    inflate_partition,
+    partition_refs,
 )
 from repro.data.synth import RawBatch, SyntheticRecSysSource, make_rm_source
 from repro.data.storage import (
@@ -50,7 +52,9 @@ __all__ = [
     "dict_decode",
     "dict_encode",
     "encode_partition",
+    "inflate_partition",
     "lm_input_batch",
     "make_rm_source",
     "pack_words_needed",
+    "partition_refs",
 ]

@@ -18,11 +18,26 @@ dense : float32 per row.  encodings: 'plain' | 'bytesplit'
 sparse: variable-length list of int32 ids per row, stored ragged:
         lengths  bitpacked at `len_width` bits   (per-row list lengths)
         values   bitpacked at `id_width` bits or dictionary-encoded
+refs  : per-sample unique-block references (dedup form only, see below)
+
+Sample-level dedup (RecD)
+-------------------------
+Production RecSys datasets repeat the same sparse-feature block across many
+samples of a session (RecD; Meta's ingestion characterization).  A schema
+with ``dup_factor = d > 1`` stores each partition in *dedup form*: every
+sparse column's lengths/values pages are encoded at ``unique_rows = rows/d``
+geometry (one copy per block), and one partition-wide ``__refs__`` page maps
+each of the ``rows`` logical samples to its unique block.  Dense columns and
+labels stay per-sample.  ``dup_factor`` is a DATASET-level constant, so page
+sizes remain fully determined by the schema and one compiled program still
+decodes every partition.  ``dup_factor == 1`` is bit-for-bit the classic
+layout (no refs page).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import io
 import json
 import struct
@@ -33,6 +48,14 @@ import numpy as np
 from repro.data import encoding as enc
 
 _MAGIC = b"RPRESTO1"
+
+# partition-wide pseudo-column holding the per-sample block references of a
+# dedup-form partition (kind "refs"; exactly one per schema when dup_factor>1)
+REFS_COLUMN = "__refs__"
+
+
+def refs_column() -> "ColumnSchema":
+    return ColumnSchema(REFS_COLUMN, "refs", "plain")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +80,25 @@ class PartitionSchema:
 
     rows: int
     columns: tuple[ColumnSchema, ...]
+    # sample-level dedup: every ``dup_factor`` consecutive rows of a session
+    # share ONE stored sparse-feature block.  1 = classic per-sample layout.
+    dup_factor: int = 1
+
+    def __post_init__(self):
+        assert self.dup_factor >= 1, self.dup_factor
+        if self.dup_factor > 1:
+            assert self.rows % self.dup_factor == 0, (
+                f"rows={self.rows} not divisible by dup_factor={self.dup_factor}"
+            )
+            assert any(c.kind == "refs" for c in self.columns), (
+                "dedup schema (dup_factor > 1) needs a refs column "
+                "(columnar.refs_column())"
+            )
+
+    @property
+    def unique_rows(self) -> int:
+        """Stored sparse-block count per partition (== rows when dup 1)."""
+        return self.rows // self.dup_factor
 
     def dense_columns(self) -> List[ColumnSchema]:
         return [c for c in self.columns if c.kind == "dense"]
@@ -69,8 +111,11 @@ class PartitionSchema:
         r = self.rows
         if col.kind == "dense":
             return {"data": r}  # 1 word per float (plain and bytesplit alike)
-        total_vals = r * col.max_len  # ragged values stored padded-capacity
-        sizes = {"lengths": enc.pack_words_needed(r, col.len_width)}
+        if col.kind == "refs":
+            return {"refs": r}  # 1 uint32 block index per logical sample
+        u = self.unique_rows  # sparse pages live at unique-block geometry
+        total_vals = u * col.max_len  # ragged values stored padded-capacity
+        sizes = {"lengths": enc.pack_words_needed(u, col.len_width)}
         if col.encoding == "dict":
             sizes["dict"] = col.dict_size
             sizes["values"] = enc.pack_words_needed(total_vals, col.code_width)
@@ -81,13 +126,25 @@ class PartitionSchema:
     def encoded_words(self) -> int:
         return sum(sum(self.page_sizes(c).values()) for c in self.columns)
 
-    def to_json(self) -> str:
-        return json.dumps(
-            {
-                "rows": self.rows,
-                "columns": [dataclasses.asdict(c) for c in self.columns],
-            }
+    def logical_schema(self) -> "PartitionSchema":
+        """The undeduped (dup_factor 1, no refs column) view of this schema —
+        the layout the same logical rows would occupy without dedup."""
+        if self.dup_factor == 1:
+            return self
+        return PartitionSchema(
+            rows=self.rows,
+            columns=tuple(c for c in self.columns if c.kind != "refs"),
+            dup_factor=1,
         )
+
+    def to_json(self) -> str:
+        d = {
+            "rows": self.rows,
+            "columns": [dataclasses.asdict(c) for c in self.columns],
+        }
+        if self.dup_factor != 1:  # dup-1 headers stay byte-identical to old
+            d["dup_factor"] = self.dup_factor
+        return json.dumps(d)
 
     @staticmethod
     def from_json(s: str) -> "PartitionSchema":
@@ -95,6 +152,7 @@ class PartitionSchema:
         return PartitionSchema(
             rows=d["rows"],
             columns=tuple(ColumnSchema(**c) for c in d["columns"]),
+            dup_factor=d.get("dup_factor", 1),
         )
 
 
@@ -113,9 +171,21 @@ class Partition:
     columns: Dict[str, EncodedColumn]
 
     def nbytes(self) -> int:
+        """Actual stored bytes — UNIQUE block bytes for a dedup partition.
+
+        This is what every ledger charges (``PartitionedStore.read`` streams
+        exactly these bytes off the owning device); compare against
+        ``logical_nbytes()`` for the dedup saving."""
         return sum(
             int(p.nbytes) for c in self.columns.values() for p in c.pages.values()
         )
+
+    def logical_nbytes(self) -> int:
+        """Bytes the same logical rows would occupy undeduped (dup_factor 1).
+        Equal to ``nbytes()`` for classic partitions."""
+        if self.schema.dup_factor == 1:
+            return self.nbytes()
+        return self.schema.logical_schema().encoded_words() * 4
 
     def page_arrays(self) -> Dict[str, np.ndarray]:
         """Flat dict 'col/page' -> words, the kernel-side input layout."""
@@ -132,16 +202,45 @@ def encode_partition(
     dense: Mapping[str, np.ndarray],
     sparse_values: Mapping[str, np.ndarray],
     sparse_lengths: Mapping[str, np.ndarray],
+    sparse_refs: np.ndarray | None = None,
 ) -> Partition:
     """Encode raw host arrays into a Partition.
 
     dense[name]         : (rows,) float
     sparse_values[name] : (rows, max_len) int — entries beyond length are 0
     sparse_lengths[name]: (rows,) int, each <= max_len
+    sparse_refs         : (rows,) int in [0, unique_rows) — dedup schemas
+                          only; row r's sparse block is unique block refs[r].
+                          Defaults to contiguous sessions (r // dup_factor).
+                          Every block must be referenced, and all rows of a
+                          block must carry IDENTICAL sparse values/lengths
+                          (asserted: dedup is lossless by construction).
     """
+    d = schema.dup_factor
+    first_rows = None  # logical row defining each unique block, dedup only
+    if d > 1:
+        if sparse_refs is None:
+            sparse_refs = np.arange(schema.rows, dtype=np.int64) // d
+        refs = np.asarray(sparse_refs, dtype=np.int64)
+        u = schema.unique_rows
+        assert refs.shape == (schema.rows,), refs.shape
+        assert refs.min(initial=0) >= 0 and refs.max(initial=0) < u
+        # first occurrence of each block defines its stored content
+        first_rows = np.full(u, -1, dtype=np.int64)
+        rev = np.arange(schema.rows - 1, -1, -1)
+        first_rows[refs[rev]] = rev  # walk reversed: lowest row index wins
+        assert (first_rows >= 0).all(), "unreferenced unique block(s)"
+    else:
+        assert sparse_refs is None or np.array_equal(
+            np.asarray(sparse_refs), np.arange(schema.rows)
+        ), "sparse_refs is meaningless on a dup_factor-1 schema"
     cols: Dict[str, EncodedColumn] = {}
     for cs in schema.columns:
-        if cs.kind == "dense":
+        if cs.kind == "refs":
+            cols[cs.name] = EncodedColumn(
+                cs, {"refs": refs.astype(np.uint32)}
+            )
+        elif cs.kind == "dense":
             v = np.asarray(dense[cs.name], dtype=np.float32)
             assert v.shape == (schema.rows,), (cs.name, v.shape)
             if cs.encoding == "bytesplit":
@@ -154,6 +253,13 @@ def encode_partition(
             lens = np.asarray(sparse_lengths[cs.name], dtype=np.int64)
             assert vals.shape == (schema.rows, cs.max_len), (cs.name, vals.shape)
             assert lens.max(initial=0) <= cs.max_len
+            if first_rows is not None:
+                # dedup: store one copy per unique block, losslessly —
+                # every row must equal its block's defining row
+                assert np.array_equal(vals, vals[first_rows][refs]) and (
+                    np.array_equal(lens, lens[first_rows][refs])
+                ), f"{cs.name}: rows referencing one block differ in content"
+                vals, lens = vals[first_rows], lens[first_rows]
             flat = vals.reshape(-1)
             pages = {"lengths": enc.bitpack(lens, cs.len_width)}
             if cs.encoding == "dict":
@@ -175,10 +281,21 @@ def decode_partition_numpy(part: Partition) -> dict:
     Returns {'dense': {name: (rows,) f32},
              'sparse_values': {name: (rows, max_len) i32},
              'sparse_lengths': {name: (rows,) i32}}
+    (+ 'sparse_refs': (rows,) i64 for dedup partitions)
+
+    Dedup partitions decode their unique blocks once and expand through the
+    refs page, so the returned LOGICAL arrays are bitwise identical to
+    decoding the same rows from an undeduped partition.
     """
     schema = part.schema
     out = {"dense": {}, "sparse_values": {}, "sparse_lengths": {}}
+    refs = partition_refs(part)
+    if schema.dup_factor > 1:
+        out["sparse_refs"] = refs
+    u = schema.unique_rows
     for cs in schema.columns:
+        if cs.kind == "refs":
+            continue
         col = part.columns[cs.name]
         if cs.kind == "dense":
             if cs.encoding == "bytesplit":
@@ -190,8 +307,8 @@ def decode_partition_numpy(part: Partition) -> dict:
                     col.pages["data"], schema.rows
                 )
         else:
-            total = schema.rows * cs.max_len
-            lens = enc.bitunpack(col.pages["lengths"], schema.rows, cs.len_width)
+            total = u * cs.max_len
+            lens = enc.bitunpack(col.pages["lengths"], u, cs.len_width)
             if cs.encoding == "dict":
                 dictionary = col.pages["dict"].view(np.int32)
                 vals = enc.dict_decode(
@@ -201,9 +318,88 @@ def decode_partition_numpy(part: Partition) -> dict:
                 vals = enc.bitunpack(col.pages["values"], total, cs.id_width).astype(
                     np.int32
                 )
-            out["sparse_values"][cs.name] = vals.reshape(schema.rows, cs.max_len)
-            out["sparse_lengths"][cs.name] = lens.astype(np.int32)
+            vals = vals.reshape(u, cs.max_len)
+            lens = lens.astype(np.int32)
+            if refs is not None:
+                vals, lens = vals[refs], lens[refs]  # expand to logical rows
+            out["sparse_values"][cs.name] = vals
+            out["sparse_lengths"][cs.name] = lens
     return out
+
+
+def partition_refs(part: Partition) -> np.ndarray | None:
+    """The (rows,) block-reference vector of a dedup partition, else None."""
+    if part.schema.dup_factor == 1:
+        return None
+    return part.columns[REFS_COLUMN].pages["refs"].astype(np.int64)
+
+
+def inflate_partition(part: Partition) -> Partition:
+    """Dedup form -> classic per-sample layout, bitwise faithful.
+
+    Decodes the unique sparse blocks, expands them through the refs page and
+    re-encodes at logical geometry under ``schema.logical_schema()`` — the
+    partition an undeduped source would have produced for the same rows
+    (bitpack(bitunpack(x)) is exact for in-width values).  Dense pages are
+    reused as-is.  The compatibility path for consumers that need the
+    per-sample layout (e.g. mesh-sharded staging)."""
+    schema = part.schema
+    if schema.dup_factor == 1:
+        return part
+    dec = decode_partition_numpy(part)
+    logical = schema.logical_schema()
+    cols: Dict[str, EncodedColumn] = {}
+    for cs in logical.columns:
+        if cs.kind == "dense":
+            cols[cs.name] = EncodedColumn(cs, dict(part.columns[cs.name].pages))
+        else:
+            lens = dec["sparse_lengths"][cs.name].astype(np.int64)
+            flat = dec["sparse_values"][cs.name].astype(np.int64).reshape(-1)
+            pages = {"lengths": enc.bitpack(lens, cs.len_width)}
+            if cs.encoding == "dict":
+                pages["dict"] = np.arange(cs.dict_size, dtype=np.int32).view(
+                    np.uint32
+                )
+                pages["values"] = enc.bitpack(flat, cs.code_width)
+            else:
+                pages["values"] = enc.bitpack(flat, cs.id_width)
+            cols[cs.name] = EncodedColumn(cs, pages)
+    return Partition(part.partition_id, logical, cols)
+
+
+def block_fingerprints(part: Partition) -> List[str] | None:
+    """Content digest of each unique sparse block (dedup partitions only).
+
+    Block b's digest covers every sparse column's decoded values + length for
+    that block, so two blocks hash alike iff their decoded content is equal —
+    across partitions, datasets and tenants.  These are the block-granularity
+    components of feature-cache keys (``core.featcache.BlockKey``)."""
+    schema = part.schema
+    if schema.dup_factor == 1:
+        return None
+    u = schema.unique_rows
+    payload = []  # per sparse column: (u, max_len) vals and (u,) lens
+    for cs in schema.sparse_columns():
+        col = part.columns[cs.name]
+        total = u * cs.max_len
+        if cs.encoding == "dict":
+            vals = enc.dict_decode(
+                col.pages["dict"].view(np.int32), col.pages["values"], total,
+                cs.code_width,
+            ).astype(np.int32)
+        else:
+            vals = enc.bitunpack(col.pages["values"], total, cs.id_width).astype(
+                np.int32
+            )
+        payload.append(vals.reshape(u, cs.max_len))
+        payload.append(
+            enc.bitunpack(col.pages["lengths"], u, cs.len_width)
+            .astype(np.int32).reshape(u, 1)
+        )
+    stacked = np.ascontiguousarray(np.concatenate(payload, axis=1))
+    return [
+        hashlib.sha256(stacked[b].tobytes()).hexdigest()[:16] for b in range(u)
+    ]
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.data import columnar
 from repro.data.columnar import Partition, read_partition, write_partition
 from repro.data.synth import SyntheticRecSysSource
 
@@ -344,8 +345,12 @@ class PartitionedStore:
             assert all(0 <= d < num_devices for d in owner_map)
         self.owner_map = owner_map
         self._read_bytes = 0
+        self._logical_read_bytes = 0
         # pid -> (stat signature | None, fingerprint); guarded by _fp_lock
         self._fp_cache: Dict[int, tuple] = {}
+        # pid -> (stat signature, (fingerprints, refs) | None); file-backed
+        # dedup metadata only (source-backed derivation is cheap every call)
+        self._blockfp_cache: Dict[int, tuple] = {}
         self._fp_lock = threading.Lock()
 
     # -- ownership -----------------------------------------------------------
@@ -385,24 +390,42 @@ class PartitionedStore:
             path = self._path(partition_id)
             if os.path.exists(path):
                 part = read_partition(path)
-                self._account_read(partition_id, part.nbytes())
+                self._account_read(
+                    partition_id, part.nbytes(), part.logical_nbytes()
+                )
                 return part
         assert self.source is not None, "no disk file and no synthetic source"
         part = self.source.partition(partition_id)
-        self._account_read(partition_id, part.nbytes())
+        self._account_read(partition_id, part.nbytes(), part.logical_nbytes())
         return part
 
-    def _account_read(self, partition_id: int, nbytes: int) -> None:
+    def _account_read(
+        self, partition_id: int, nbytes: int, logical_nbytes: int | None = None
+    ) -> None:
         """Every partition read streams off its OWNING device: charge that
         device's shared ledger (when a fleet is attached) so reads contend
-        with ISP compute and cache spills for the same modeled bandwidth."""
+        with ISP compute and cache spills for the same modeled bandwidth.
+
+        ``nbytes`` is the partition's STORED size — for dedup partitions the
+        unique block bytes (``Partition.nbytes``), which is exactly what the
+        device streams; ``logical_nbytes`` rides along for the savings
+        report (``logical_bytes_read - bytes_read`` = bytes dedup kept off
+        the devices)."""
         self._read_bytes += nbytes
+        self._logical_read_bytes += (
+            logical_nbytes if logical_nbytes is not None else nbytes
+        )
         if self.fleet is not None:
             self.fleet[self.owner_of(partition_id)].charge_stream(nbytes)
 
     @property
     def bytes_read(self) -> int:
         return self._read_bytes
+
+    @property
+    def logical_bytes_read(self) -> int:
+        """Bytes the same reads would have streamed without dedup."""
+        return self._logical_read_bytes
 
     # -- content identity ------------------------------------------------------
     def partition_fingerprint(self, partition_id: int) -> str:
@@ -445,6 +468,72 @@ class PartitionedStore:
             self._fp_cache[partition_id] = (None, fp)
         return fp
 
+    def block_fingerprints(self, partition_id: int) -> Optional[List[str]]:
+        """Content identity of each unique sparse block (dedup datasets).
+
+        None for classic (dup-factor-1) data.  Mirrors ``read()``'s file vs
+        source precedence like ``partition_fingerprint``: a disk file's
+        blocks hash their decoded content (``columnar.block_fingerprints``,
+        cached against the file's stat signature); fileless partitions use
+        the source's deterministic identity — ``(source fp, pool id)`` when
+        blocks come from a dataset-level pool (``RMDataConfig.dup_pool``, the
+        cross-partition overlap case) else ``(source fp, pid, block idx)`` —
+        with no content generation at probe time.  Equal fingerprint ⇒ equal
+        decoded block, always; the two derivations never match each other,
+        which can only cost a missed block-cache dedup, never a wrong batch.
+        """
+        meta = self._block_meta(partition_id)
+        return meta[0] if meta is not None else None
+
+    def block_refs(self, partition_id: int) -> Optional[np.ndarray]:
+        """The (rows,) unique-block reference vector (dedup datasets), else
+        None.  Same file/source precedence (and cache) as
+        ``block_fingerprints`` — the publish side of the block cache slices
+        a produced batch with these."""
+        meta = self._block_meta(partition_id)
+        return meta[1] if meta is not None else None
+
+    def _block_meta(self, partition_id: int):
+        """(fingerprints, refs) of one dedup partition, or None (classic)."""
+        path = self._path(partition_id) if self.root is not None else None
+        if path is not None and os.path.exists(path):
+            st = os.stat(path)
+            sig = (st.st_mtime_ns, st.st_size)
+            with self._fp_lock:
+                hit = self._blockfp_cache.get(partition_id)
+            if hit is not None and hit[0] == sig:
+                return hit[1]
+            part = read_partition(path)  # metadata derivation: not a
+            # modeled data-path read, like partition_fingerprint's file hash
+            fps = columnar.block_fingerprints(part)
+            meta = (
+                (fps, columnar.partition_refs(part)) if fps is not None else None
+            )
+            with self._fp_lock:
+                self._blockfp_cache[partition_id] = (sig, meta)
+            return meta
+        assert self.source is not None, "no disk file and no synthetic source"
+        src = self.source
+        if getattr(src.cfg, "dup_factor", 1) <= 1:
+            return None
+        src_fp = src.fingerprint()
+        refs = src.block_refs(partition_id)
+        pool_ids = src.block_pool_ids(partition_id)
+        if pool_ids is not None:
+            fps = [
+                hashlib.sha256(f"{src_fp}:pool:{int(p)}".encode())
+                .hexdigest()[:16]
+                for p in pool_ids
+            ]
+        else:
+            n_unique = src.rows // src.cfg.dup_factor
+            fps = [
+                hashlib.sha256(f"{src_fp}:{partition_id}:{b}".encode())
+                .hexdigest()[:16]
+                for b in range(n_unique)
+            ]
+        return fps, refs
+
     def _path(self, pid: int) -> str:
         # deviceNN/ prefix models per-device directories of the storage array
         assert self.root is not None
@@ -469,7 +558,54 @@ class CacheSpillStore:
     With ``root`` set, blocks live as one ``.npz`` file per block under
     per-device directories (restart-survivable); otherwise they live in
     per-device dicts (pure simulation).  Thread-safe.
+
+    Spilled payloads are row-deduped at rest: integer arrays whose leading-
+    axis rows repeat (dedup datasets' ``multi_hot_ids``/``lengths`` repeat
+    every session's block) are stored as unique rows + a refs vector when
+    that is strictly smaller, and the ledgers are charged only the stored
+    (unique) bytes.  Reads expand back before returning — bitwise lossless,
+    invisible to callers.
     """
+
+    # key suffixes of a row-deduped spilled array (unique rows / refs);
+    # batch keys never carry them
+    _DD_BLOCKS = "__ddb"
+    _DD_REFS = "__ddr"
+
+    @classmethod
+    def _dedup_rows(cls, arrays: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Row-dedup eligible arrays for storage (lossless; see class doc)."""
+        out: Dict[str, np.ndarray] = {}
+        for k, a in arrays.items():
+            a = np.asarray(a)
+            # integer-only: exact row equality, and that's where dedup
+            # datasets repeat (hashed ids / lengths); float rows are noise
+            if a.ndim >= 2 and a.shape[0] >= 2 and a.dtype.kind in "iub":
+                flat = np.ascontiguousarray(a.reshape(a.shape[0], -1))
+                uniq, inv = np.unique(flat, axis=0, return_inverse=True)
+                inv = np.ascontiguousarray(inv.reshape(-1).astype(np.int32))
+                if uniq.nbytes + inv.nbytes < a.nbytes:
+                    out[k + cls._DD_BLOCKS] = uniq.reshape(-1, *a.shape[1:])
+                    out[k + cls._DD_REFS] = inv
+                    continue
+            out[k] = a
+        return out
+
+    @classmethod
+    def _expand_rows(cls, block: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Inverse of ``_dedup_rows``: rebuild the logical arrays (bitwise)."""
+        out: Dict[str, np.ndarray] = {}
+        for k, a in block.items():
+            if k.endswith(cls._DD_REFS):
+                continue
+            if k.endswith(cls._DD_BLOCKS):
+                base = k[: -len(cls._DD_BLOCKS)]
+                full = a[block[base + cls._DD_REFS]]
+                full.setflags(write=False)
+                out[base] = full
+            else:
+                out[k] = a
+        return out
 
     def __init__(
         self,
@@ -592,7 +728,7 @@ class CacheSpillStore:
                 a.setflags(write=False)
             return a
 
-        arrays = {k: frozen(v) for k, v in arrays.items()}
+        arrays = self._dedup_rows({k: frozen(v) for k, v in arrays.items()})
         nbytes = sum(int(a.nbytes) for a in arrays.values())
         if self.root is not None:
             np.savez(self._block_path(key), **arrays)
@@ -652,4 +788,4 @@ class CacheSpillStore:
         else:
             block = dict(block)
         self._charge(key, nbytes)
-        return block
+        return self._expand_rows(block)

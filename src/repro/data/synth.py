@@ -22,6 +22,7 @@ from repro.data.columnar import (
     Partition,
     PartitionSchema,
     encode_partition,
+    refs_column,
 )
 
 
@@ -39,6 +40,18 @@ class RMDataConfig:
     rows_per_partition: int = 8192
     dense_encoding: str = "bytesplit"
     sparse_encoding: str = "bitpack"
+    # -- sample-level dedup (RecD) -----------------------------------------
+    # dup_factor: every `dup_factor` consecutive rows form one session that
+    # shares ONE sparse-feature block (dense features + labels stay
+    # per-sample).  Partitions are then stored dedup-encoded (unique blocks
+    # + per-sample refs, data.columnar).  1 = no duplication.
+    dup_factor: int = 1
+    # dup_pool: > 0 draws each partition's session blocks from a DATASET-
+    # level pool of this many distinct blocks, so different partitions (and
+    # tenants of the same dataset) share identical blocks — the cross-
+    # partition overlap the feature cache's block tier dedups.  0 = every
+    # partition's blocks are fresh.
+    dup_pool: int = 0
 
     @property
     def n_tables(self) -> int:
@@ -72,6 +85,10 @@ class RawBatch:
     sparse_values: np.ndarray  # (rows, n_sparse, max_len) i32
     sparse_lengths: np.ndarray  # (rows, n_sparse) i32
     labels: np.ndarray  # (rows,) f32 in {0,1}
+    # dedup datasets (cfg.dup_factor > 1): row r's sparse block is unique
+    # block sparse_refs[r]; sparse_values/lengths are the EXPANDED logical
+    # view (rows referencing one block are exact copies).  None otherwise.
+    sparse_refs: np.ndarray | None = None
 
 
 def _schema_for(cfg: RMDataConfig, rows: int) -> PartitionSchema:
@@ -92,7 +109,11 @@ def _schema_for(cfg: RMDataConfig, rows: int) -> PartitionSchema:
         )
     # label column rides along as a dense column
     cols.append(ColumnSchema("label", "dense", "plain"))
-    return PartitionSchema(rows=rows, columns=tuple(cols))
+    if cfg.dup_factor > 1:
+        cols.append(refs_column())
+    return PartitionSchema(
+        rows=rows, columns=tuple(cols), dup_factor=cfg.dup_factor
+    )
 
 
 class SyntheticRecSysSource:
@@ -102,7 +123,17 @@ class SyntheticRecSysSource:
         self.cfg = cfg
         self.rows = rows or cfg.rows_per_partition
         self.seed = seed
+        if cfg.dup_factor > 1:
+            # unique-block pages regroup into 32-value word groups at the
+            # kernel boundary, so unique_rows must stay word-aligned
+            assert self.rows % cfg.dup_factor == 0 and (
+                (self.rows // cfg.dup_factor) % 32 == 0
+            ), (
+                f"rows={self.rows} needs rows/dup_factor divisible by 32 "
+                f"(dup_factor={cfg.dup_factor})"
+            )
         self.schema = _schema_for(cfg, self.rows)
+        self._pool_cache: Dict[int, tuple] = {}  # pool block id -> (ids, lens)
         # Dataset-level bucket boundaries (one sorted array per generated
         # feature) drawn from the dense-feature distribution's range.
         rng = np.random.default_rng(seed ^ 0x5EED)
@@ -131,29 +162,78 @@ class SyntheticRecSysSource:
         return hashlib.sha256(payload.encode()).hexdigest()[:16]
 
     # -- raw (decoded) view ------------------------------------------------
+    def _sparse_block_batch(self, rng, n: int):
+        """Draw n sparse blocks: ((n, S, L) ids, (n, S) lengths)."""
+        cfg = self.cfg
+        if cfg.max_sparse_len == 1:
+            lengths = np.ones((n, cfg.n_sparse), dtype=np.int32)
+        else:
+            lengths = np.clip(
+                rng.poisson(cfg.avg_sparse_len, size=(n, cfg.n_sparse)),
+                1,
+                cfg.max_sparse_len,
+            ).astype(np.int32)
+        # Zipf-flavored ids: square a uniform to skew toward small ids, then
+        # scatter across the space with a multiplicative hash for realism.
+        u = rng.random(size=(n, cfg.n_sparse, cfg.max_sparse_len))
+        ids = (u * u * (cfg.id_space - 1)).astype(np.int64)
+        ids = (ids * 2654435761) % cfg.id_space
+        mask = np.arange(cfg.max_sparse_len)[None, None, :] < lengths[..., None]
+        ids = np.where(mask, ids, 0).astype(np.int32)
+        return ids, lengths
+
+    def _pool_block(self, pool_id: int):
+        """One dataset-level session block, deterministic in (seed, pool_id)."""
+        blk = self._pool_cache.get(pool_id)
+        if blk is None:
+            rng = np.random.default_rng((self.seed << 20) ^ 0xB10C0000 ^ pool_id)
+            ids, lens = self._sparse_block_batch(rng, 1)
+            blk = (ids[0], lens[0])
+            self._pool_cache[pool_id] = blk
+        return blk
+
+    def block_pool_ids(self, partition_id: int) -> np.ndarray | None:
+        """Pool index of each unique block of one partition (dup_pool > 0).
+
+        Cheap (one rng draw, no content generation) — the source-backed fast
+        path for block fingerprints, and deterministic in (seed, pid) like
+        everything else here."""
+        cfg = self.cfg
+        if cfg.dup_factor <= 1 or cfg.dup_pool <= 0:
+            return None
+        n_unique = self.rows // cfg.dup_factor
+        rng = np.random.default_rng((self.seed << 20) ^ 0x5E55 ^ partition_id)
+        return rng.integers(0, cfg.dup_pool, size=n_unique, dtype=np.int64)
+
+    def block_refs(self, partition_id: int) -> np.ndarray | None:
+        """The (rows,) refs vector of one partition (contiguous sessions)."""
+        d = self.cfg.dup_factor
+        if d <= 1:
+            return None
+        return np.arange(self.rows, dtype=np.int64) // d
+
     def raw(self, partition_id: int) -> RawBatch:
         cfg, rows = self.cfg, self.rows
         rng = np.random.default_rng((self.seed << 20) ^ partition_id)
         dense = rng.lognormal(mean=1.0, sigma=2.0, size=(rows, cfg.n_dense)).astype(
             np.float32
         )
-        if cfg.max_sparse_len == 1:
-            lengths = np.ones((rows, cfg.n_sparse), dtype=np.int32)
+        if cfg.dup_factor <= 1:
+            ids, lengths = self._sparse_block_batch(rng, rows)
+            labels = (rng.random(size=(rows,)) < 0.25).astype(np.float32)
+            return RawBatch(dense, ids, lengths, labels)
+        # dedup dataset: one sparse block per session of dup_factor rows
+        n_unique = rows // cfg.dup_factor
+        pool_ids = self.block_pool_ids(partition_id)
+        if pool_ids is None:
+            uids, ulens = self._sparse_block_batch(rng, n_unique)
         else:
-            lengths = np.clip(
-                rng.poisson(cfg.avg_sparse_len, size=(rows, cfg.n_sparse)),
-                1,
-                cfg.max_sparse_len,
-            ).astype(np.int32)
-        # Zipf-flavored ids: square a uniform to skew toward small ids, then
-        # scatter across the space with a multiplicative hash for realism.
-        u = rng.random(size=(rows, cfg.n_sparse, cfg.max_sparse_len))
-        ids = (u * u * (cfg.id_space - 1)).astype(np.int64)
-        ids = (ids * 2654435761) % cfg.id_space
-        mask = np.arange(cfg.max_sparse_len)[None, None, :] < lengths[..., None]
-        ids = np.where(mask, ids, 0).astype(np.int32)
+            blocks = [self._pool_block(int(p)) for p in pool_ids]
+            uids = np.stack([b[0] for b in blocks])
+            ulens = np.stack([b[1] for b in blocks])
         labels = (rng.random(size=(rows,)) < 0.25).astype(np.float32)
-        return RawBatch(dense, ids, lengths, labels)
+        refs = self.block_refs(partition_id)
+        return RawBatch(dense, uids[refs], ulens[refs], labels, refs)
 
     # -- encoded partition ---------------------------------------------------
     def partition(self, partition_id: int) -> Partition:
@@ -163,7 +243,10 @@ class SyntheticRecSysSource:
         dense["label"] = raw.labels
         svals = {f"s{i}": raw.sparse_values[:, i] for i in range(cfg.n_sparse)}
         slens = {f"s{i}": raw.sparse_lengths[:, i] for i in range(cfg.n_sparse)}
-        return encode_partition(partition_id, self.schema, dense, svals, slens)
+        return encode_partition(
+            partition_id, self.schema, dense, svals, slens,
+            sparse_refs=raw.sparse_refs,
+        )
 
 
 def make_rm_source(

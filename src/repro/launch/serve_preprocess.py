@@ -13,6 +13,14 @@ With ``--cache`` the pool carries a shared content-addressed feature cache
 content (deterministic synthetic sources), so overlapping work deduplicates
 across tenants even though every job builds its own store object.
 
+``--dup-factor D`` makes every tenant's dataset sample-level deduped
+(RecD): each session's sparse feature block repeats D times, partitions are
+stored and staged as unique blocks + per-sample refs (the stores charge
+only unique bytes — watch the dedup summary line), and with ``--cache`` the
+shared block tier assembles repeat partitions from other tenants' published
+blocks (the blk column, hits/published; ``--dup-pool`` sizes the shared
+dataset-level block pool that gives tenants real overlap).
+
 The pool's units are bound to a shared ``data.storage.DeviceFleet`` of
 ``--devices`` simulated ISP devices: every tenant's partitions live on (and
 charge) those devices, claims are locality-aware, and skewed ownership
@@ -36,6 +44,7 @@ stream (summarized at exit; ``--events-out`` writes the JSON artifact).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import itertools
 import json
 import os
@@ -78,6 +87,16 @@ cache flags:
   --spill-devices K          add a spill tier on K simulated storage devices
                              (evictions land there; 0 = no spill tier; K ==
                              --devices reuses the shared fleet's ledgers)
+dedup flags:
+  --dup-factor D             sample-level dedup (RecD): every session's
+                             sparse block repeats D times; partitions stage
+                             as unique blocks + refs, stores charge unique
+                             bytes only (D=1 = classic layout; rows/D must
+                             be a multiple of 32)
+  --dup-pool P               dataset-level shared block pool (default 16):
+                             blocks repeat ACROSS partitions and tenants,
+                             so the shared cache's block tier can assemble
+                             one tenant's partitions from another's blocks
 pipeline flags:
   --megabatch K              pool workers coalesce up to K same-job claims
                              into ONE megabatched kernel launch (bitwise
@@ -226,6 +245,14 @@ def main(argv=None) -> None:
                     help="cache memory-tier bound in MB (default 256)")
     ap.add_argument("--spill-devices", type=int, default=0,
                     help="spill tier on K simulated devices (0 = none)")
+    ap.add_argument("--dup-factor", type=int, default=1, metavar="D",
+                    help="sample-level dedup: each session's sparse block "
+                         "repeats D times; partitions stage as unique "
+                         "blocks + refs (default 1 = classic layout)")
+    ap.add_argument("--dup-pool", type=int, default=16, metavar="P",
+                    help="dataset-level shared block pool size under "
+                         "--dup-factor (cross-partition/tenant overlap; "
+                         "default 16)")
     ap.add_argument("--megabatch", type=int, default=1, metavar="K",
                     help="coalesce up to K same-job claims into one "
                          "megabatched kernel launch (default 1)")
@@ -285,10 +312,19 @@ def main(argv=None) -> None:
     ckpt_dir = tempfile.mkdtemp(prefix="presto-ckpt-") if chaos else None
     jobspecs, job_specs_ts, stores = [], {}, {}
     rms = itertools.cycle(args.rm)
+    if args.dup_factor > 1:
+        assert args.rows % args.dup_factor == 0 and (
+            args.rows // args.dup_factor) % 32 == 0, (
+            f"--dup-factor {args.dup_factor}: rows/D must be a multiple of "
+            f"32 (got {args.rows} rows)")
     for j in range(args.jobs):
         rm = next(rms)
         rcfg = get_recsys(rm, reduced=args.reduced)
-        src = SyntheticRecSysSource(rcfg.data, rows=args.rows)
+        data_cfg = rcfg.data
+        if args.dup_factor > 1:
+            data_cfg = dataclasses.replace(
+                data_cfg, dup_factor=args.dup_factor, dup_pool=args.dup_pool)
+        src = SyntheticRecSysSource(data_cfg, rows=args.rows)
         spec = TransformSpec.from_source(src)
         store = PartitionedStore(
             args.partitions, num_devices=args.devices or 4, source=src,
@@ -407,8 +443,8 @@ def main(argv=None) -> None:
 
     print(f"\n{'job':<12} {'batches':>7} {'rows/s':>9} {'util':>6} "
           f"{'starve':>7} {'reissue':>7} {'dupes':>6} {'hits':>5} "
-          f"{'fallbk':>6} {'tunedK':>6} {'staged':>8} {'prewrm':>6} "
-          f"{'share/demand':>13}")
+          f"{'blk':>7} {'fallbk':>6} {'tunedK':>6} {'staged':>8} "
+          f"{'prewrm':>6} {'share/demand':>13}")
     for job in jobspecs:
         st = final_sessions[job.name].stats()
         result = results[job.name]
@@ -418,16 +454,28 @@ def main(argv=None) -> None:
             assert result["batches"] == st.total
         staged = (f"{st.staged_bytes_peak / 1e6:.1f}M"
                   if st.staged_bytes_peak else "-")
+        # blk: batches assembled from the shared block tier / unique blocks
+        # this tenant published into it (only dedup'd cacheable jobs move it)
+        blk = (f"{st.block_hits}/{st.blocks_published}"
+               if args.dup_factor > 1 else "-")
         print(f"{st.job:<12} {result['batches']:>7} "
               f"{st.achieved_samples_per_s:>9.0f} "
               f"{util:>6.2f} {st.starvation:>7.2f} {st.reissues:>7} "
               f"{st.duplicates_dropped:>6} {st.cache_hits:>5} "
-              f"{st.host_fallbacks:>6} {st.tuned_k:>6} {staged:>8} "
-              f"{st.prewarm_hits:>6} "
+              f"{blk:>7} {st.host_fallbacks:>6} {st.tuned_k:>6} "
+              f"{staged:>8} {st.prewarm_hits:>6} "
               f"{st.share:>7}/{st.effective_demand_units}")
     total_rows = sum(s.stats().rows_delivered for s in final_sessions.values())
     print(f"\naggregate: {total_rows} rows in {wall:.1f}s "
           f"({total_rows / max(wall, 1e-9):.0f} rows/s across tenants)")
+    if args.dup_factor > 1:
+        moved = sum(s.bytes_read for s in stores.values())
+        logical = sum(s.logical_bytes_read for s in stores.values())
+        if logical:
+            print(f"dedup: moved {moved / 1e6:.2f}MB of "
+                  f"{logical / 1e6:.2f}MB logical "
+                  f"({(logical - moved) / logical * 100:.1f}% stayed on "
+                  f"storage at dup-factor {args.dup_factor})")
 
     if args.verify:
         # the chaos acceptance gate: every partition delivered exactly once
