@@ -144,6 +144,17 @@ modes:
                              same-seed trace replay and zero starvation
                              under SLO admission; writes BENCH_sim_slo.json
 
+  --chaos                    storage fault domain drill: seeded I/O chaos
+                             (transient reads, torn blocks, spill
+                             corruption, slow reads, one device offline)
+                             against every produce mode; asserts each
+                             fault-injected run delivers batches bitwise
+                             identical to the fault-free reference, an
+                             offline device fails over, and a poisoned
+                             store surfaces a structured SessionError
+                             within the retry budget; writes
+                             BENCH_throughput_chaos.json
+
 examples:
   PYTHONPATH=src python -m benchmarks.bench_throughput --multi-tenant --smoke
   PYTHONPATH=src python -m benchmarks.bench_throughput \\
@@ -152,6 +163,7 @@ examples:
   PYTHONPATH=src python -m benchmarks.bench_throughput --pipeline --smoke
   PYTHONPATH=src python -m benchmarks.bench_throughput --autotune --smoke
   PYTHONPATH=src python -m benchmarks.bench_throughput --sim --sessions 1000
+  PYTHONPATH=src python -m benchmarks.bench_throughput --chaos --smoke
 """
 
 
@@ -1112,6 +1124,180 @@ def run_dedup(
     return results
 
 
+def run_chaos(
+    rm: str = "rm1",
+    *,
+    partitions: int = 12,
+    rows: int = 256,
+    workers: int = 3,
+    io_retries: int = 4,
+    out_json: str = "BENCH_throughput_chaos.json",
+) -> dict:
+    """Storage fault domain drill: seeded I/O chaos, bitwise-identical output.
+
+    A clean engine+store pair produces the fault-free reference batches.
+    Then each produce mode (pipeline / autotune / cache+spill) runs a full
+    service session against a store wired to a seeded ``IoFaultInjector``
+    throwing transient read errors, torn (bit-flipped) blocks, slow reads,
+    spill-block corruption, and one whole device knocked offline mid-run —
+    and every delivered batch is asserted bitwise identical to the clean
+    reference.  Faults cost LATENCY (bounded retry/backoff, device
+    failover), never correctness.  Two negative drills close the loop: a
+    poisoned store (every read faults) must surface a structured
+    ``SessionError`` within the retry budget instead of hanging, and the
+    offline drill must re-route the dead device's partitions through the
+    failover path.  Writes ``out_json``.
+    """
+    from repro.core.featcache import default_spill_store
+    from repro.core.service import SessionError
+    from repro.data.storage import IoFaultInjector
+
+    src = SyntheticRecSysSource(RM_CONFIGS[rm], rows=rows)
+    spec = TransformSpec.from_source(src)
+    engine = PreStoEngine(spec)
+    pids = list(range(partitions))
+    clean_store = PartitionedStore(partitions, num_devices=4, source=src)
+    reference = {pid: engine.produce_batch(clean_store, pid) for pid in pids}
+    total_rows = rows * partitions
+
+    def assert_bitwise(tag: str, produced: dict) -> None:
+        assert sorted(produced) == pids, (
+            f"{tag}: lost partitions {sorted(set(pids) - set(produced))}"
+        )
+        for pid in pids:
+            for key in reference[pid]:
+                np.testing.assert_array_equal(
+                    np.asarray(reference[pid][key]),
+                    np.asarray(produced[pid][key]),
+                    err_msg=f"{tag} pid={pid} key={key} diverged under faults",
+                )
+
+    def faulted_session(tag, injector, *, cache=None, **job_kw):
+        """One service run against an injected store; returns (got, stats)."""
+        fleet = DeviceFleet.from_cost_model(4, DEFAULT_PLACEMENT_MODEL)
+        store = PartitionedStore(
+            partitions, num_devices=4, source=src, fleet=fleet,
+            fault_injector=injector)
+        svc = PreprocessingService(
+            num_workers=workers, devices=fleet, cache=cache)
+        try:
+            session = svc.submit(JobSpec(
+                name=tag, partitions=pids, engine=engine, store=store,
+                io_retries=io_retries, io_backoff_s=0.002, **job_kw))
+            got = {}
+            t0 = time.perf_counter()
+            for pid, mb in session:
+                got[pid] = mb
+            wall = time.perf_counter() - t0
+            return got, session.stats(), svc.events.counts(), wall
+        finally:
+            svc.close()
+
+    chaos_spec = dict(transient=0.25, corrupt=0.15, spill=0.4,
+                      slow=0.1, slow_s=5e-4, offline_device=1,
+                      offline_after=partitions)
+    modes = {
+        "pipeline": dict(megabatch=2, lookahead=2),
+        "autotune": dict(autotune=True),
+        "cache": dict(),  # shared feature cache + spill tier (below)
+    }
+    results: dict = {"modes": {}}
+    tot_injected, tot_retries, tot_failovers = 0, 0, 0
+    for i, (tag, job_kw) in enumerate(modes.items()):
+        inj = IoFaultInjector(seed=11 + i, **chaos_spec)
+        cache = None
+        if tag == "cache":
+            # a small memory tier forces evictions into the spill store,
+            # whose blocks the injector corrupts at rest — corrupt spill
+            # hits must be detected, dropped, and recomputed cold
+            spill = default_spill_store(4)
+            spill.fault_injector = inj
+            cache = FeatureCache(1 << 20, spill=spill)
+        got, st, events, wall = faulted_session(
+            tag, inj, cache=cache, **job_kw)
+        assert_bitwise(tag, got)
+        assert st.done and not st.cancelled, f"{tag}: session did not drain"
+        assert st.quarantined == 0, (
+            f"{tag}: {st.quarantined} partition(s) quarantined inside the "
+            f"retry budget"
+        )
+        injected = sum(inj.summary().values())
+        tot_injected += injected
+        tot_retries += st.retries
+        tot_failovers += st.failovers
+        emit(f"throughput/{rm}/chaos/{tag}", wall * 1e6 / partitions,
+             f"rows_per_s={total_rows / wall:.0f} injected={injected} "
+             f"retries={st.retries} failovers={st.failovers}")
+        results["modes"][tag] = {
+            "wall_s": wall,
+            "rows_per_s": total_rows / wall,
+            "injected": inj.summary(),
+            "retries": st.retries,
+            "failovers": st.failovers,
+            "events": events,
+            "bitwise_identical": True,
+        }
+    assert tot_injected > 0, "the chaos drill injected no faults at all"
+    assert tot_retries > 0, "injected faults were never retried"
+
+    # offline failover drill: device 1 dies on the FIRST read — every one of
+    # its partitions must re-route through the failover path, and the run
+    # still delivers bitwise-identical batches
+    inj = IoFaultInjector(seed=29, offline_device=1, offline_after=1)
+    got, st, events, _w = faulted_session("failover", inj)
+    assert_bitwise("failover", got)
+    assert st.failovers >= 1, "offline device produced no failovers"
+    assert events.get("device_offline", 0) == 1
+    results["failover"] = {
+        "failovers": st.failovers, "retries": st.retries, "events": events,
+    }
+    tot_failovers += st.failovers
+
+    # poison drill: every read faults — the session must surface a
+    # structured SessionError within the retry budget, never hang
+    inj = IoFaultInjector(seed=43, transient=1.0)
+    fleet = DeviceFleet.from_cost_model(4, DEFAULT_PLACEMENT_MODEL)
+    store = PartitionedStore(partitions, num_devices=4, source=src,
+                             fleet=fleet, fault_injector=inj)
+    svc = PreprocessingService(num_workers=workers, devices=fleet)
+    try:
+        session = svc.submit(JobSpec(
+            name="poison", partitions=pids, engine=engine, store=store,
+            io_retries=2, io_backoff_s=1e-3))
+        t0 = time.perf_counter()
+        try:
+            for _ in session:
+                pass
+            raise AssertionError("poisoned store delivered batches")
+        except SessionError as e:
+            poison_s = time.perf_counter() - t0
+            assert e.attempts == 2, e.attempts
+        st = session.stats()
+        assert st.quarantined >= 1, "poisoned run quarantined nothing"
+        session.cancel()
+    finally:
+        svc.close()
+    results["poison"] = {
+        "error_latency_s": poison_s, "quarantined": st.quarantined,
+    }
+
+    print(f"\n{'mode':<10} {'rows/s':>10} {'injected':>9} {'retries':>8} "
+          f"{'failovers':>10}")
+    for tag, r in results["modes"].items():
+        print(f"{tag:<10} {r['rows_per_s']:>10.0f} "
+              f"{sum(r['injected'].values()):>9} {r['retries']:>8} "
+              f"{r['failovers']:>10}")
+    print(f"\nstorage chaos: {tot_injected} injected fault(s) absorbed "
+          f"across {len(modes)} produce modes ({tot_retries} retries, "
+          f"{tot_failovers} failovers) — every delivered batch bitwise "
+          f"identical to the fault-free run; poisoned store surfaced "
+          f"SessionError in {poison_s * 1e3:.0f}ms")
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_json}")
+    return results
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(
         description=__doc__, epilog=EPILOG,
@@ -1175,13 +1361,28 @@ if __name__ == "__main__":
                     help="--sim: seconds of virtual time the session "
                          "arrivals span; smaller = heavier overload "
                          "(default 4.0)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="storage fault domain drill: seeded I/O faults "
+                         "against every produce mode, asserting "
+                         "bitwise-identical delivery, device failover, and "
+                         "prompt quarantine of a poisoned store; writes "
+                         "BENCH_throughput_chaos.json")
     ap.add_argument("--out", default=None,
-                    help="--pipeline/--autotune/--sim: JSON artifact path "
-                         "override (default: BENCH_throughput_pipeline.json "
-                         "/ BENCH_throughput_autotune.json / "
-                         "BENCH_sim_slo.json per mode)")
+                    help="--pipeline/--autotune/--sim/--chaos: JSON artifact "
+                         "path override (default: "
+                         "BENCH_throughput_pipeline.json / "
+                         "BENCH_throughput_autotune.json / "
+                         "BENCH_sim_slo.json / BENCH_throughput_chaos.json "
+                         "per mode)")
     args = ap.parse_args()
-    if args.dedup:
+    if args.chaos:
+        run_chaos(
+            partitions=6 if args.smoke else 12,
+            rows=64 if args.smoke else 256,
+            workers=max(args.workers, 3),
+            out_json=args.out or "BENCH_throughput_chaos.json",
+        )
+    elif args.dedup:
         run_dedup(
             dups=(2, 4) if args.smoke else (2, 4, 8),
             dup_pool=args.dup_pool,

@@ -44,6 +44,7 @@ import collections
 import dataclasses
 import json
 import math
+import os
 import threading
 import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
@@ -55,6 +56,7 @@ __all__ = [
     "EventLog",
     "FailureInjector",
     "SessionCheckpoint",
+    "SessionError",
     "SimulatedFailure",
     "parse_kill_spec",
 ]
@@ -215,15 +217,35 @@ class SessionCheckpoint:
         )
 
     def save(self, path: str) -> None:
-        # write-then-rename would be the production move; a torn half-write
-        # here only costs a slightly older resume point, never correctness
-        with open(path, "w") as f:
+        """Atomic write: tmp file + fsync + ``os.replace``.  A crash at any
+        instant leaves either the previous checkpoint or the new one —
+        never a torn half-write — so ``load`` on the survivor always
+        parses."""
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
             json.dump(self.to_dict(), f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
 
     @staticmethod
     def load(path: str) -> "SessionCheckpoint":
+        """Parse a checkpoint, rejecting torn/truncated JSON with a clear
+        error (``ValueError`` naming the path and size) instead of a bare
+        decode traceback — the restart path can then fall back to a fresh
+        session rather than crash-looping on a bad file."""
         with open(path) as f:
-            return SessionCheckpoint.from_dict(json.load(f))
+            raw = f.read()
+        try:
+            d = json.loads(raw)
+            if not isinstance(d, dict) or "job" not in d:
+                raise ValueError("not a checkpoint object (missing 'job')")
+        except ValueError as exc:
+            raise ValueError(
+                f"checkpoint {path!r} is torn or truncated "
+                f"({len(raw)} bytes): {exc}"
+            ) from exc
+        return SessionCheckpoint.from_dict(d)
 
 
 # -- backlog-driven autoscaling ------------------------------------------------
@@ -344,6 +366,33 @@ class Autoscaler:
 
 class SimulatedFailure(RuntimeError):
     """An injected failure — distinguishable from a real production error."""
+
+
+class SessionError(RuntimeError):
+    """A structured, terminal per-partition session failure.
+
+    Raised through the session iterator when the claim-path recovery policy
+    exhausts a partition's poison budget (retries + failover did not help):
+    the consumer gets WHICH job, WHICH partition, HOW many attempts, and the
+    underlying cause — promptly, instead of a hung iterator.  Quarantining
+    is deliberate: a partition that fails deterministically would otherwise
+    burn the pool's retry bandwidth forever.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        job: Optional[str] = None,
+        pid: Optional[int] = None,
+        attempts: int = 0,
+        cause: Optional[BaseException] = None,
+    ):
+        super().__init__(message)
+        self.job = job
+        self.pid = pid
+        self.attempts = attempts
+        self.cause = cause
 
 
 @dataclasses.dataclass

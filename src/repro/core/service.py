@@ -82,7 +82,7 @@ import numpy as np
 
 from repro.core.autotune import DEFAULT_AUTOTUNE_KMAX, MegabatchTuner
 from repro.core.costmodel import ContentionAwareCostModel, PartitionCosts
-from repro.core.ctrlplane import EventLog, SessionCheckpoint
+from repro.core.ctrlplane import EventLog, SessionCheckpoint, SessionError
 from repro.core.featcache import BlockKey, CacheKey, FeatureCache
 from repro.core.planner import (
     QOS_EXPLORATORY,
@@ -99,7 +99,13 @@ from repro.core.preprocess import stack_pages
 from repro.core.presto import PreStoEngine
 from repro.core.spec import TransformSpec
 from repro.data.loader import SessionQueue
-from repro.data.storage import DeviceFleet, IspDevice, PartitionedStore
+from repro.data.storage import (
+    DeviceFleet,
+    DeviceOfflineError,
+    IoFaultError,
+    IspDevice,
+    PartitionedStore,
+)
 
 __all__ = [
     "AdmissionError",
@@ -110,6 +116,7 @@ __all__ = [
     "PreprocessingService",
     "Session",
     "SessionCheckpoint",
+    "SessionError",
     "SessionStats",
 ]
 
@@ -178,6 +185,16 @@ class JobSpec:
     # ``service.submit(job, resume_from=SessionCheckpoint.load(path))``.
     checkpoint_path: Optional[str] = None
     checkpoint_every: int = 8
+    # -- storage fault domain --------------------------------------------------
+    # io_retries: how many times one partition's claim may be re-issued after
+    # a RETRYABLE I/O fault (transient read error, torn/bit-flipped block,
+    # device knocked offline) before the partition is quarantined and the
+    # session surfaces a structured ``SessionError`` through its future.
+    # io_backoff_s: base delay before the n-th retry (exponential:
+    # ``io_backoff_s * 2**(n-1)``), served by the queue's clock — real time
+    # by default, virtual when the session runs under ``core.simclock``.
+    io_retries: int = 3
+    io_backoff_s: float = 0.01
 
     def build_produce(self) -> Tuple[Callable[[int], Any], Optional[PreStoEngine]]:
         """Resolve the per-partition production callable for this job."""
@@ -246,6 +263,10 @@ class SessionStats:
     cancelled: bool = False
     done: bool = False
     host_fallbacks: int = 0  # fresh claims routed off their owning device
+    # -- storage fault domain observability --
+    retries: int = 0  # claims re-issued after a retryable I/O fault
+    failovers: int = 0  # claims re-routed off an offline device's replica path
+    quarantined: int = 0  # partitions that exhausted their retry budget
     # device -> winner produces that ran ON that device (ISP route); the
     # skew surface: a hot device's count dwarfs the cold ones' under Zipf
     device_produced: Dict[int, int] = dataclasses.field(default_factory=dict)
@@ -475,6 +496,12 @@ class Session:
         self._cache_hits = 0
         self._cache_misses = 0
         self._cache_keys: Dict[int, CacheKey] = {}  # pid -> key, probe->produce
+        # storage fault domain: per-partition retry attempts plus the
+        # session-level counters stats() surfaces
+        self._fault_attempts: Dict[int, int] = {}
+        self._retries = 0
+        self._failovers = 0
+        self._quarantined = 0
         self._eff_demand = self._demand  # last hit-rate-discounted demand
         self._p_est: Optional[float] = None
         self._device_produced: Dict[int, int] = {}  # ISP-route winner counts
@@ -496,6 +523,11 @@ class Session:
             self._backlogged = set(pids)
             for d, c in counts.items():
                 self._fleet[d].enqueue(c)
+        # a fault-injected store publishes io_fault/device_offline events
+        # through the service's stream (duck-typed: data/ never imports core/)
+        inj = getattr(job.store, "fault_injector", None) if job.store else None
+        if inj is not None and getattr(inj, "events", None) is None:
+            inj.events = service.events
         self._t0 = time.perf_counter()
         self._t_end: Optional[float] = None
 
@@ -641,6 +673,9 @@ class Session:
                 cancelled=self.cancelled,
                 done=self._delivered >= self.total,
                 host_fallbacks=self._queue.host_fallbacks,
+                retries=self._retries,
+                failovers=self._failovers,
+                quarantined=self._quarantined,
                 device_produced=dict(self._device_produced),
                 tuned_k=(
                     self._tuner.k if self._tuner is not None else self._megabatch_k
@@ -752,6 +787,9 @@ class Session:
         The candidate itself is still in the device's backlog, so the wait
         it would experience is behind the OTHER queued claims."""
         owner = self._owner_of(pid)
+        if getattr(self._fleet[owner], "offline", False):
+            return True  # an offline device computes nothing: host is the
+            # only route (reads go through the replica/failover path)
         if owner not in self._service._manned:
             return True
         return self._service.cost_model.should_offload(
@@ -829,23 +867,36 @@ class Session:
             return _Chunk(self, claims, None)
         t0 = time.perf_counter()
         pre_s = 0.0  # stage seconds already paid by the lookahead walker
+        per: List[Any] = []
+        kept: List[Tuple[int, Future, Optional[str]]] = []
         try:
-            per = []
-            for pid, _f, _r in claims:
+            for pid, f, r in claims:
                 entry = self._take_prestaged(pid)
                 if entry is not None:
                     pages_i, _nb, s = entry
                     pre_s += s
-                    per.append(pages_i)
                 else:
-                    per.append(self.engine.stage_partition(self.job.store, pid))
+                    try:
+                        pages_i = self.engine.stage_partition(
+                            self.job.store, pid
+                        )
+                    except IoFaultError as exc:
+                        # a faulted read condemns ONLY its own claim (the
+                        # retry/quarantine policy decides its fate) — its
+                        # chunk mates stage on with their own budgets intact
+                        self._on_produce_error(pid, exc)
+                        continue
+                per.append(pages_i)
+                kept.append((pid, f, r))
+            if not kept:
+                return None
             pages = stack_pages(per)
         except BaseException as exc:  # noqa: BLE001 — consumer re-raises
-            for pid, _f, _r in claims:
+            for pid, _f, _r in kept or claims:
                 self._on_produce_error(pid, exc)
             return None
         return _Chunk(
-            self, claims, pages, stage_s=time.perf_counter() - t0 + pre_s
+            self, kept, pages, stage_s=time.perf_counter() - t0 + pre_s
         )
 
     # -- deep lookahead: pre-stage + pre-warm the peek window ------------------
@@ -1270,8 +1321,75 @@ class Session:
         else:
             self._service._rebalance()
 
+    def _retry_claim(self, pid: int, exc: IoFaultError) -> bool:
+        """Bounded-backoff recovery for one claim's retryable I/O fault.
+
+        Returns True when the fault is absorbed: the claim is re-queued
+        (embargoed ``io_backoff_s * 2**(attempt-1)`` on the queue's clock)
+        and its still-pending future is resolved by a later re-produce, so
+        the consumer only ever sees latency.  A ``DeviceOfflineError``
+        additionally re-routes the partition's reads through the store's
+        replica/failover path before the retry lands.  False means the
+        retry budget is exhausted — the caller quarantines the partition.
+        """
+        budget = max(0, int(self.job.io_retries))
+        with self._slock:
+            attempt = self._fault_attempts.get(pid, 0) + 1
+            if attempt > budget:
+                return False
+            self._fault_attempts[pid] = attempt
+            self._retries += 1
+        if isinstance(exc, DeviceOfflineError) and self.job.store is not None:
+            store = self.job.store
+            if pid not in store.failover_partitions:
+                store.allow_failover(pid)
+                with self._slock:
+                    self._failovers += 1
+                self._service.events.emit(
+                    "failover", job=self.name, pid=pid,
+                    device=getattr(exc, "device", None),
+                )
+        delay = max(0.0, float(self.job.io_backoff_s)) * (2.0 ** (attempt - 1))
+        if not self._queue.requeue(pid, delay=delay):
+            # a straggler twin settled (or already re-queued) this pid first;
+            # this loser's error carries no new information — drop it
+            with self._slock:
+                self._retries -= 1
+            return True
+        self._service.events.emit(
+            "retry", job=self.name, pid=pid, attempt=attempt,
+            delay_s=round(delay, 6), fault=type(exc).__name__,
+        )
+        self._service._wake()
+        return True
+
     def _on_produce_error(self, pid: int, exc: BaseException) -> None:
+        if (
+            isinstance(exc, IoFaultError)
+            and getattr(exc, "retryable", True)
+            and not self.cancelled
+        ):
+            if self._retry_claim(pid, exc):
+                return  # absorbed: the future stays pending for the retry
+        quarantine = isinstance(exc, IoFaultError)
+        if quarantine:
+            # budget exhausted (or the fault is non-retryable, e.g. verified
+            # at-rest corruption): surface a structured error, never hang
+            with self._slock:
+                attempts = self._fault_attempts.get(pid, 0)
+            exc = SessionError(
+                f"partition {pid} of job {self.name!r} quarantined after "
+                f"{attempts} I/O retr{'y' if attempts == 1 else 'ies'}: {exc}",
+                job=self.name, pid=pid, attempts=attempts, cause=exc,
+            )
         winner = self._queue.complete_error(pid, exc)  # duplicate losers drop
+        if winner and quarantine:
+            with self._slock:
+                self._quarantined += 1
+            self._service.events.emit(
+                "quarantine", job=self.name, pid=pid, attempts=attempts,
+                fault=type(exc.cause).__name__,
+            )
         if winner and self._cache_key is not None:
             with self._slock:
                 key = self._cache_keys.pop(pid, None)  # winner-only, as above
@@ -1373,6 +1491,12 @@ class PreprocessingService:
         # claim re-issues, checkpoints, scale decisions, plan changes
         self.events = EventLog()
         if cache is not None:
+            # the spill tier publishes corrupt-block drops through the
+            # service's event stream — wired BEFORE warm_start so a corrupt
+            # block skipped at boot is observable too
+            spill = getattr(cache, "spill", None)
+            if spill is not None and getattr(spill, "events", None) is None:
+                spill.events = self.events
             # feature-cache warm start: promote restart-survivable spilled
             # blocks back into the memory tier before any worker runs
             cache.warm_start()

@@ -95,6 +95,14 @@ class VirtualClock:
             raise ValueError(f"virtual time cannot rewind: {t} < {self._now}")
         self._now = float(t)
 
+    def sleep(self, dt: float) -> None:
+        """Advance modeled time by ``dt`` — the drop-in ``sleep`` callable
+        for virtual-clock-aware paths (``IoFaultInjector`` slow reads, the
+        claim path's fault-retry backoff), so a simulated run models fault
+        latency without ever blocking a real thread."""
+        if dt > 0:
+            self._now += float(dt)
+
 
 class SimEngine:
     """Event-heap scheduler over a ``VirtualClock``.

@@ -402,8 +402,38 @@ def block_fingerprints(part: Partition) -> List[str] | None:
     ]
 
 
+def partition_digest(part: Partition) -> str:
+    """Content digest of one partition's DECODED page words.
+
+    Unlike ``PartitionedStore.partition_fingerprint`` (which hashes file
+    bytes or source identity — a cache *key*), this hashes the in-memory
+    page arrays themselves in a canonical order, so it can compare a
+    just-read partition against a trusted reference regardless of where the
+    bytes came from (file, source, or a torn read).  Equal digest ⇔ equal
+    page words ⇔ bitwise-equal decoded batch.  This is the end-to-end
+    integrity check the storage fault domain verifies reads against."""
+    h = hashlib.sha256()
+    h.update(part.schema.to_json().encode())
+    for cname in sorted(part.columns):
+        col = part.columns[cname]
+        for pname in sorted(col.pages):
+            words = np.ascontiguousarray(col.pages[pname], dtype=np.uint32)
+            h.update(f"{cname}/{pname}/{words.shape[0]}".encode())
+            h.update(words.tobytes())
+    return h.hexdigest()[:16]
+
+
 # ---------------------------------------------------------------------------
 # File round-trip
+
+
+class CorruptPartitionFile(ValueError):
+    """A partition file failed structural validation or checksum on decode.
+
+    Raised instead of silently mis-decoding: a truncated payload, a torn
+    header, a wrong magic, or a checksum mismatch all land here, so callers
+    (and the fault-injection retry path) can treat the read as failed rather
+    than serve short/garbage arrays."""
 
 
 def write_partition(path: str, part: Partition) -> None:
@@ -419,27 +449,72 @@ def write_partition(path: str, part: Partition) -> None:
                 {"column": cname, "page": pname, "words": int(words.shape[0])}
             )
             payload.write(np.ascontiguousarray(words, dtype=np.uint32).tobytes())
+    body = payload.getvalue()
+    # write-time payload checksum: read_partition verifies it when present,
+    # so a bit-flipped or truncated page is detected, never mis-decoded.
+    # Older files without the field still load (verification is opt-in by
+    # the file, not the reader).
+    header["checksum"] = hashlib.sha256(body).hexdigest()[:16]
     hjson = json.dumps(header).encode()
     with open(path, "wb") as f:
         f.write(_MAGIC)
         f.write(struct.pack("<I", len(hjson)))
         f.write(hjson)
-        f.write(payload.getvalue())
+        f.write(body)
 
 
 def read_partition(path: str) -> Partition:
     with open(path, "rb") as f:
         magic = f.read(8)
-        assert magic == _MAGIC, f"bad magic in {path}"
-        (hlen,) = struct.unpack("<I", f.read(4))
-        header = json.loads(f.read(hlen))
-        schema = PartitionSchema.from_json(json.dumps(header["schema"]))
-        cols: Dict[str, EncodedColumn] = {}
-        cschemas = {c.name: c for c in schema.columns}
-        for pmeta in header["pages"]:
-            words = np.frombuffer(f.read(pmeta["words"] * 4), dtype=np.uint32)
+        if magic != _MAGIC:
+            raise CorruptPartitionFile(
+                f"{path}: bad magic {magic!r} (want {_MAGIC!r})"
+            )
+        raw_hlen = f.read(4)
+        if len(raw_hlen) != 4:
+            raise CorruptPartitionFile(f"{path}: truncated before header length")
+        (hlen,) = struct.unpack("<I", raw_hlen)
+        raw_header = f.read(hlen)
+        if len(raw_header) != hlen:
+            raise CorruptPartitionFile(
+                f"{path}: truncated header ({len(raw_header)} of {hlen} bytes)"
+            )
+        try:
+            header = json.loads(raw_header)
+            schema = PartitionSchema.from_json(json.dumps(header["schema"]))
+            pages = header["pages"]
+            partition_id = header["partition_id"]
+        except (ValueError, KeyError, TypeError, AssertionError) as e:
+            raise CorruptPartitionFile(f"{path}: corrupt header: {e}") from e
+        body = f.read()
+    want_ck = header.get("checksum")
+    if want_ck is not None:
+        got_ck = hashlib.sha256(body).hexdigest()[:16]
+        if got_ck != want_ck:
+            raise CorruptPartitionFile(
+                f"{path}: payload checksum mismatch "
+                f"(stored {want_ck}, computed {got_ck})"
+            )
+    cols: Dict[str, EncodedColumn] = {}
+    cschemas = {c.name: c for c in schema.columns}
+    off = 0
+    for pmeta in pages:
+        try:
+            nwords = int(pmeta["words"])
             cname = pmeta["column"]
-            if cname not in cols:
-                cols[cname] = EncodedColumn(cschemas[cname], {})
-            cols[cname].pages[pmeta["page"]] = words
-    return Partition(header["partition_id"], schema, cols)
+            pname = pmeta["page"]
+            cs = cschemas[cname]
+        except (KeyError, TypeError, ValueError) as e:
+            raise CorruptPartitionFile(f"{path}: corrupt page table: {e}") from e
+        end = off + nwords * 4
+        if nwords < 0 or end > len(body):
+            raise CorruptPartitionFile(
+                f"{path}: truncated payload (page {cname}/{pname} wants "
+                f"bytes [{off}, {end}) of {len(body)})"
+            )
+        words = np.frombuffer(body, dtype=np.uint32, count=nwords, offset=off)
+        off = end
+        if cname not in cols:
+            cols[cname] = EncodedColumn(cs, {})
+        cols[cname].pages[pname] = words
+    return Partition(partition_id, schema, cols)

@@ -74,6 +74,14 @@ class WorkQueue:
                 self._by_dev.setdefault(owner_of(pid), collections.deque()).append(pid)
         self._inflight: Dict[int, float] = {}  # pid -> claim time
         self._done: set[int] = set()
+        # Fault-retry state: a pid whose produce hit a retryable I/O fault
+        # is `requeue`d — back to pending, optionally embargoed until a
+        # backoff deadline, and marked in _requeued so claims may take it
+        # even under backpressure (its future already exists; re-claiming
+        # it can never grow the consumer's undelivered window, and the
+        # stream's head future may be exactly this pid — liveness).
+        self._embargo: Dict[int, float] = {}  # pid -> claimable-at instant
+        self._requeued: set[int] = set()
         self._lock = threading.Lock()
         self.straggler_timeout = straggler_timeout
         # Injectable time source (``core.simclock.VirtualClock.now`` under the
@@ -87,6 +95,7 @@ class WorkQueue:
         # locks); a broken observer never breaks the claim path
         self.on_reissue = on_reissue
         self.reissues = 0
+        self.requeues = 0  # fault retries returned to the pending pool
         self.total = len(self._pending)  # distinct partitions at creation
 
     def remaining(self) -> int:
@@ -132,35 +141,62 @@ class WorkQueue:
         return out
 
     def next_deadline(self) -> Optional[float]:
-        """Earliest instant an inflight claim becomes straggler-overdue
-        (on this queue's clock — ``time.monotonic`` unless injected), or
-        None with nothing inflight.  Idle claimers sleep until this
-        instant instead of polling."""
+        """Earliest instant anything becomes claimable again: an inflight
+        claim going straggler-overdue, or an embargoed fault-retry's backoff
+        expiring (on this queue's clock — ``time.monotonic`` unless
+        injected); None when neither applies.  Idle claimers sleep until
+        this instant instead of polling."""
         with self._lock:
-            if not self._inflight:
-                return None
-            return min(self._inflight.values()) + self.straggler_timeout
+            deadlines = []
+            if self._inflight:
+                deadlines.append(
+                    min(self._inflight.values()) + self.straggler_timeout
+                )
+            if self._embargo:
+                deadlines.append(min(self._embargo.values()))
+            return min(deadlines) if deadlines else None
 
-    def _pop(self, dq: Optional[Deque[int]]) -> Optional[int]:
-        """Pop the first still-pending pid off an order index, discarding
-        tombstones (pids already popped through the other index)."""
+    def _claimable(self, pid: int, now: float) -> bool:
+        """Pending and past any fault-retry backoff embargo."""
+        if pid not in self._pending_set:
+            return False
+        until = self._embargo.get(pid)
+        return until is None or now >= until
+
+    def _claimed(self, pid: int) -> None:
+        """Bookkeeping for a pid leaving the pending pool."""
+        self._pending_set.discard(pid)
+        self._embargo.pop(pid, None)
+        self._requeued.discard(pid)
+
+    def _pop(self, dq: Optional[Deque[int]], now: float) -> Optional[int]:
+        """Pop the first claimable pid off an order index, discarding
+        tombstones (pids already popped through the other index).  An
+        embargoed pid rotates to the back instead of being dropped — the
+        bounded loop guarantees termination when everything is embargoed."""
         if dq is None:
             return None
-        while dq:
+        for _ in range(len(dq)):
             pid = dq.popleft()
-            if pid in self._pending_set:
-                self._pending_set.discard(pid)
+            if pid not in self._pending_set:
+                continue  # tombstone: discard
+            if self._claimable(pid, now):
+                self._claimed(pid)
                 return pid
+            dq.append(pid)  # embargoed: keep for a later round
         return None
 
-    def _take_first(self, pred: Callable[[int], bool]) -> Optional[int]:
-        """First pending pid matching `pred`, global FIFO order.  The popped
-        pid is left in the deques as a tombstone (membership alone decides
-        pending-ness).  Linear, but only the rare host-fallback scan uses
-        it — the device-local hot path pops its own index in O(1)."""
+    def _take_first(
+        self, pred: Callable[[int], bool], now: float
+    ) -> Optional[int]:
+        """First claimable pid matching `pred`, global FIFO order.  The
+        popped pid is left in the deques as a tombstone (membership alone
+        decides pending-ness).  Linear, but only the rare host-fallback and
+        fault-retry scans use it — the device-local hot path pops its own
+        index in O(1)."""
         for pid in self._pending:
-            if pid in self._pending_set and pred(pid):
-                self._pending_set.discard(pid)
+            if self._claimable(pid, now) and pred(pid):
+                self._claimed(pid)
                 return pid
         return None
 
@@ -175,7 +211,11 @@ class WorkQueue:
 
         ``reissue_only=True`` skips fresh claims (used by backpressured
         sessions: no new work may start, but an overdue straggler may still
-        be backed up so the stream's head future always resolves).
+        be backed up so the stream's head future always resolves).  Fault
+        RETRIES (``requeue``d pids) are exempt from that gate for the same
+        liveness reason: their futures already exist — the stream's blocked
+        head may be exactly the requeued pid, and re-claiming it never grows
+        the undelivered window.
 
         ``prefer_device`` (with an ``owner_of`` bound) restricts fresh
         claims to that device's own partitions, then to partitions
@@ -186,12 +226,14 @@ class WorkQueue:
         reissued: Optional[int] = None
         try:
             with self._lock:
+                now = self._clock()
+                pid: Optional[int] = None
                 if self._pending_set and not reissue_only:
                     if prefer_device is None or self.owner_of is None or self._by_dev is None:
-                        pid: Optional[int] = self._pop(self._pending)
+                        pid = self._pop(self._pending, now)
                     else:
                         owner = self.owner_of
-                        pid = self._pop(self._by_dev.get(prefer_device))
+                        pid = self._pop(self._by_dev.get(prefer_device), now)
                         if pid is None and fallback_ok is not None:
                             # the offload verdict depends only on the OWNING
                             # device (manned? queue past threshold?), so cache
@@ -205,12 +247,16 @@ class WorkQueue:
                                     verdicts[d] = bool(fallback_ok(p))
                                 return verdicts[d]
 
-                            pid = self._take_first(_ok)
-                    if pid is not None:
-                        self._inflight[pid] = self._clock()
-                        return pid
+                            pid = self._take_first(_ok, now)
+                elif self._requeued and reissue_only:
+                    # backpressure bypass for fault retries (see docstring);
+                    # locality is ignored — liveness beats placement, like
+                    # straggler re-issue
+                    pid = self._take_first(self._requeued.__contains__, now)
+                if pid is not None:
+                    self._inflight[pid] = now
+                    return pid
                 # steal: re-issue the longest-overdue inflight partition
-                now = self._clock()
                 overdue = [
                     (t, p)
                     for p, t in self._inflight.items()
@@ -248,6 +294,37 @@ class WorkQueue:
                 )
                 return True
             return False
+
+    def requeue(self, pid: int, delay: float = 0.0) -> bool:
+        """Return a failed inflight claim to the pending pool (fault retry).
+
+        The claim-path recovery policy's hook: a produce that died on a
+        retryable I/O fault re-queues its pid instead of failing the future
+        — back of the FIFO (and its device index), embargoed for ``delay``
+        seconds of backoff on this queue's clock, and marked requeued so
+        backpressured sessions may still re-claim it (its future already
+        exists; see ``claim``).  Returns False without touching anything if
+        the pid is already done or already pending (a duplicate claim's
+        loser — the twin's retry or completion is in motion)."""
+        with self._lock:
+            if (
+                pid in self._done
+                or pid in self._pending_set
+                or pid not in self._inflight
+            ):
+                return False
+            del self._inflight[pid]
+            self._pending_set.add(pid)
+            self._pending.append(pid)
+            if self._by_dev is not None and self.owner_of is not None:
+                self._by_dev.setdefault(
+                    self.owner_of(pid), collections.deque()
+                ).append(pid)
+            self._requeued.add(pid)
+            if delay > 0:
+                self._embargo[pid] = self._clock() + delay
+            self.requeues += 1
+            return True
 
     def complete(self, pid: int) -> bool:
         """Returns True if this completion is the winner (not a duplicate)."""
@@ -425,6 +502,13 @@ class SessionQueue:
         """Force `pid`'s inflight claim immediately re-issuable (a dead
         worker held it); see ``WorkQueue.expire``."""
         return self.work.expire(pid)
+
+    def requeue(self, pid: int, delay: float = 0.0) -> bool:
+        """Return `pid` to the pending pool for a fault retry with `delay`
+        seconds of backoff; its existing future stays pending and resolves
+        when a later claim produces (or quarantines) it.  See
+        ``WorkQueue.requeue``."""
+        return self.work.requeue(pid, delay)
 
     def complete(self, pid: int, batch: Any) -> bool:
         """First completion wins and resolves the future; duplicates dropped."""

@@ -23,13 +23,348 @@ import hashlib
 import math
 import os
 import threading
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
 from repro.data import columnar
-from repro.data.columnar import Partition, read_partition, write_partition
+from repro.data.columnar import (
+    EncodedColumn,
+    Partition,
+    read_partition,
+    write_partition,
+)
 from repro.data.synth import SyntheticRecSysSource
+
+
+# ---------------------------------------------------------------------------
+# Storage fault domain: typed I/O faults + the seeded injector
+#
+# PreSto's preprocessing lives IN the storage layer, so device read errors,
+# torn blocks, and offline devices are the system's primary failure domain
+# (Meta's DSI characterization: production ingestion survives constant
+# partial storage failures).  The exceptions below are the vocabulary the
+# claim-path recovery policy (core.service) speaks: `retryable` faults are
+# re-queued with backoff, a DeviceOfflineError additionally re-routes the
+# partition through the host-fallback replica path, and a partition that
+# keeps failing past its poison budget is quarantined with a structured
+# SessionError instead of hanging the iterator.
+
+
+class IoFaultError(RuntimeError):
+    """Base of all storage-domain I/O faults.
+
+    ``retryable`` tells the claim-path policy whether re-reading can ever
+    succeed (a torn DMA: yes; verified at-rest corruption: no — retrying
+    the same bytes fails identically, so quarantine immediately)."""
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        pid: Optional[int] = None,
+        device: Optional[int] = None,
+        retryable: bool = True,
+    ):
+        super().__init__(message)
+        self.pid = pid
+        self.device = device
+        self.retryable = retryable
+
+
+class TransientReadError(IoFaultError):
+    """A read failed in a way that a retry can fix (bus hiccup, timeout)."""
+
+
+class CorruptPartitionError(IoFaultError):
+    """A partition read failed end-to-end integrity verification."""
+
+
+class CorruptBlockError(IoFaultError):
+    """A spilled cache block failed integrity verification."""
+
+
+class DeviceOfflineError(IoFaultError):
+    """The partition's owning device is offline; failover is the fix."""
+
+
+class IoFaultInjector:
+    """Seeded, deterministic I/O fault injection for the storage layer.
+
+    Composes with ``ctrlplane.FailureInjector`` (worker crashes) to cover
+    the data-fault half of the chaos story: transient read errors, torn
+    (bit-flipped) partition reads, corrupt-at-rest spill blocks, slow reads,
+    and whole-device-offline.  Attach one to a ``PartitionedStore`` and/or a
+    ``CacheSpillStore``; with no injector attached the hot paths are
+    untouched.
+
+    Determinism: every fault decision hashes ``(seed, op, ident, attempt)``
+    — NOT a shared RNG — so the decision for a given read attempt is
+    independent of thread interleaving, and the same seed replays the same
+    fault schedule under the virtual-clock sim engine.  Per-ident attempt
+    counters advance under a lock, so retries of the same partition see
+    fresh rolls and a transient fault eventually clears.
+
+    ``offline_device``/``offline_after`` model one whole device going dark:
+    the trigger fires once when the total partition-read count reaches
+    ``offline_after`` (the ``FailureInjector`` fire-once idiom), marks the
+    fleet device ``offline`` and fails every read of its partitions until
+    the claim path grants failover (``PartitionedStore.allow_failover``).
+
+    ``events`` is the duck-typed EventLog hook (``emit(kind, **data)``) —
+    this module never imports ``core``; ``sleep`` is injectable so
+    virtual-time runs pass ``VirtualClock.sleep`` and slow-read faults
+    advance modeled time instead of blocking a real thread.
+    """
+
+    def __init__(
+        self,
+        seed: int = 0,
+        *,
+        transient: float = 0.0,
+        corrupt: float = 0.0,
+        spill: float = 0.0,
+        slow: float = 0.0,
+        slow_s: float = 1e-3,
+        offline_device: Optional[int] = None,
+        offline_after: Optional[int] = None,
+        sleep: Optional[Callable[[float], None]] = None,
+        events: Any = None,
+    ):
+        assert 0.0 <= transient <= 1.0 and 0.0 <= corrupt <= 1.0
+        assert 0.0 <= spill <= 1.0 and 0.0 <= slow <= 1.0
+        self.seed = int(seed)
+        self.transient = float(transient)
+        self.corrupt = float(corrupt)
+        self.spill = float(spill)
+        self.slow = float(slow)
+        self.slow_s = float(slow_s)
+        self.offline_device = offline_device
+        self.offline_after = offline_after
+        self.sleep = sleep if sleep is not None else time.sleep
+        self.events = events
+        self._lock = threading.Lock()
+        self._attempts: Dict[tuple, int] = {}  # (op, ident) -> attempt count
+        self._reads = 0  # total partition reads (the offline trigger's clock)
+        self.offline_devices: set[int] = set()
+        self.injected: Dict[str, int] = {}  # fault kind -> count
+
+    # -- plumbing --------------------------------------------------------------
+    def _roll(self, op: str, ident, attempt: int) -> float:
+        """Uniform [0, 1) decision value for one (op, ident, attempt)."""
+        h = hashlib.sha256(
+            f"{self.seed}:{op}:{ident}:{attempt}".encode()
+        ).digest()
+        return int.from_bytes(h[:8], "big") / float(1 << 64)
+
+    def _next_attempt(self, op: str, ident) -> int:
+        with self._lock:
+            n = self._attempts.get((op, ident), 0) + 1
+            self._attempts[(op, ident)] = n
+            return n
+
+    def _count(self, fault: str) -> None:
+        with self._lock:
+            self.injected[fault] = self.injected.get(fault, 0) + 1
+
+    def _emit(self, kind: str, **data) -> None:
+        ev = self.events
+        if ev is None:
+            return
+        try:
+            ev.emit(kind, **data)
+        except Exception:
+            pass  # a broken observer never breaks the data path
+
+    # -- partition reads -------------------------------------------------------
+    def on_partition_read(self, store: "PartitionedStore", pid: int) -> int:
+        """Pre-read hook: offline / slow / transient faults.  Returns the
+        attempt number (the corrupt roll's salt).  Raises on injected
+        failure — the store never performs the read."""
+        with self._lock:
+            self._reads += 1
+            reads = self._reads
+            attempt = self._attempts.get(("part", pid), 0) + 1
+            self._attempts[("part", pid)] = attempt
+        if (
+            self.offline_device is not None
+            and self.offline_after is not None
+            and reads >= self.offline_after
+        ):
+            with self._lock:
+                newly = self.offline_device not in self.offline_devices
+                if newly:
+                    self.offline_devices.add(self.offline_device)
+            if newly:
+                if store.fleet is not None and 0 <= self.offline_device < len(
+                    store.fleet
+                ):
+                    store.fleet[self.offline_device].offline = True
+                self._count("device_offline")
+                self._emit(
+                    "device_offline",
+                    device=self.offline_device,
+                    after_reads=self.offline_after,
+                )
+        dev = store.owner_of(pid)
+        if dev in self.offline_devices and not store.is_failover(pid):
+            self._count("offline_read")
+            self._emit("io_fault", fault="device_offline", pid=pid, device=dev)
+            raise DeviceOfflineError(
+                f"device {dev} is offline (partition {pid})",
+                pid=pid, device=dev,
+            )
+        if self.slow > 0 and self._roll("slow", pid, attempt) < self.slow:
+            self._count("slow_read")
+            self._emit(
+                "io_fault", fault="slow_read", pid=pid, attempt=attempt,
+                delay_s=self.slow_s,
+            )
+            if self.slow_s > 0:
+                self.sleep(self.slow_s)
+        if self.transient > 0 and self._roll("transient", pid, attempt) < (
+            self.transient
+        ):
+            self._count("transient")
+            self._emit(
+                "io_fault", fault="transient", pid=pid, device=dev,
+                attempt=attempt,
+            )
+            raise TransientReadError(
+                f"transient read error on partition {pid} "
+                f"(device {dev}, attempt {attempt})",
+                pid=pid, device=dev,
+            )
+        return attempt
+
+    def maybe_corrupt_partition(
+        self, pid: int, part: Partition, attempt: int
+    ) -> Partition:
+        """Torn-read model: with probability ``corrupt``, return a COPY of
+        the partition with one page word bit-flipped.  The authoritative
+        content (file / source) stays clean, so a retry can succeed; the
+        store's digest verification catches the flip, so the corrupt copy is
+        never delivered."""
+        if self.corrupt <= 0 or self._roll("corrupt", pid, attempt) >= (
+            self.corrupt
+        ):
+            return part
+        bad = Partition(
+            part.partition_id,
+            part.schema,
+            {
+                n: EncodedColumn(c.schema, dict(c.pages))
+                for n, c in part.columns.items()
+            },
+        )
+        for cname in sorted(bad.columns):
+            col = bad.columns[cname]
+            for pname in sorted(col.pages):
+                words = col.pages[pname]
+                if words.size == 0:
+                    continue
+                flipped = np.array(words, dtype=np.uint32)
+                flipped[attempt % flipped.size] ^= np.uint32(0xFFFFFFFF)
+                flipped.setflags(write=False)
+                col.pages[pname] = flipped
+                self._count("corrupt")
+                self._emit(
+                    "io_fault", fault="corrupt", pid=pid, attempt=attempt,
+                    page=f"{cname}/{pname}",
+                )
+                return bad
+        return part
+
+    # -- spill blocks ----------------------------------------------------------
+    def on_spill_read(self, key: str) -> bool:
+        """True → fail this spill read (the caller treats it as a miss and
+        recomputes cold — latency, never wrong bytes)."""
+        if self.transient <= 0:
+            return False
+        attempt = self._next_attempt("spillr", key)
+        if self._roll("spill_transient", key, attempt) < self.transient:
+            self._count("spill_transient")
+            self._emit(
+                "io_fault", fault="spill_transient", key=key, attempt=attempt
+            )
+            return True
+        return False
+
+    def maybe_corrupt_spill(
+        self, key: str, arrays: Dict[str, np.ndarray]
+    ) -> Dict[str, np.ndarray]:
+        """Corrupt-at-rest model: with probability ``spill``, flip one byte
+        of one stored array (a copy).  The block's write-time checksum is
+        computed over the CLEAN arrays, so the next read detects the damage,
+        drops the block, and recomputes."""
+        attempt = self._next_attempt("spillw", key)
+        if self.spill <= 0 or self._roll("spill_corrupt", key, attempt) >= (
+            self.spill
+        ):
+            return arrays
+        bad = dict(arrays)
+        for k in sorted(bad):
+            a = np.asarray(bad[k])
+            if a.nbytes == 0:
+                continue
+            raw = bytearray(a.tobytes())
+            raw[0] ^= 0xFF
+            b = np.frombuffer(bytes(raw), dtype=a.dtype).reshape(a.shape)
+            b.setflags(write=False)
+            bad[k] = b
+            self._count("spill_corrupt")
+            self._emit("io_fault", fault="spill_corrupt", key=key, array=k)
+            return bad
+        return arrays
+
+    def summary(self) -> Dict[str, int]:
+        """Injected fault counts by kind (for asserts and reports)."""
+        with self._lock:
+            return dict(self.injected)
+
+
+def parse_iofault_spec(spec: str) -> IoFaultInjector:
+    """Build an ``IoFaultInjector`` from a compact CLI spec string.
+
+    Comma-separated knobs, e.g.::
+
+        transient=0.2,corrupt=0.1,spill=0.3,slow=0.05:0.01,offline=2@6,seed=7
+
+    - ``transient=P``  transient read-error probability per attempt
+    - ``corrupt=P``    torn (bit-flipped) partition read probability
+    - ``spill=P``      corrupt-at-rest probability per spilled block write
+    - ``slow=P[:S]``   slow-read probability, each costing S seconds (1 ms)
+    - ``offline=D@N``  device D goes offline at the Nth partition read
+    - ``seed=K``       fault-schedule seed (default 0)
+    """
+    kw: Dict[str, Any] = {}
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        k, sep, v = item.partition("=")
+        if not sep:
+            raise ValueError(f"io-fault knob {item!r} wants KEY=VALUE")
+        k, v = k.strip(), v.strip()
+        if k in ("transient", "corrupt", "spill"):
+            kw[k] = float(v)
+        elif k == "slow":
+            rate, _, secs = v.partition(":")
+            kw["slow"] = float(rate)
+            if secs:
+                kw["slow_s"] = float(secs)
+        elif k == "offline":
+            dev, sep2, after = v.partition("@")
+            if not sep2:
+                raise ValueError(f"offline wants DEV@N, got {v!r}")
+            kw["offline_device"] = int(dev)
+            kw["offline_after"] = int(after)
+        elif k == "seed":
+            kw["seed"] = int(v)
+        else:
+            raise ValueError(f"unknown io-fault knob {k!r} in {spec!r}")
+    return IoFaultInjector(**kw)
 
 
 class IspDevice:
@@ -73,6 +408,11 @@ class IspDevice:
         self.max_inflight = 0  # high-water mark of `inflight`
         self.isp_claims = 0  # claims produced here (locality or blind)
         self.host_fallbacks = 0  # claims this device shed to the host path
+        # Fault domain: an offline device serves NO reads or compute — the
+        # IoFaultInjector sets this at its trigger, and the claim path
+        # re-routes the device's partitions through the host-fallback
+        # replica path (PartitionedStore.allow_failover).
+        self.offline = False
         # Virtual-time occupancy (core.simclock): the instant this unit next
         # becomes idle.  Wall-clock paths never touch it; the discrete-event
         # engine reserves the unit through `reserve`, which both advances
@@ -156,6 +496,7 @@ class IspDevice:
                 "max_inflight": self.max_inflight,
                 "isp_claims": self.isp_claims,
                 "host_fallbacks": self.host_fallbacks,
+                "offline": self.offline,
                 "bytes_streamed": self.bytes_streamed,
                 "spill_bytes": self.spill_bytes,
                 "compute_ops": self.compute_ops,
@@ -323,6 +664,7 @@ class PartitionedStore:
         *,
         fleet: Optional[DeviceFleet] = None,
         owner_map: Optional[Sequence[int]] = None,
+        fault_injector: Optional[IoFaultInjector] = None,
     ):
         assert placement in ("presto", "disagg")
         if fleet is not None:
@@ -352,6 +694,13 @@ class PartitionedStore:
         # dedup metadata only (source-backed derivation is cheap every call)
         self._blockfp_cache: Dict[int, tuple] = {}
         self._fp_lock = threading.Lock()
+        # Fault domain: with an injector attached, every read is verified
+        # against the trusted content digest below before delivery; pids in
+        # _failover read through the host/replica path (their owning device
+        # is offline) and charge the fleet's host-link ledger instead.
+        self.fault_injector = fault_injector
+        self._failover: set[int] = set()
+        self._digest_cache: Dict[int, str] = {}  # pid -> trusted digest
 
     # -- ownership -----------------------------------------------------------
     def owner_of(self, partition_id: int) -> int:
@@ -386,18 +735,88 @@ class PartitionedStore:
                 write_partition(path, self.source.partition(pid))
 
     def read(self, partition_id: int) -> Partition:
+        inj = self.fault_injector
+        if inj is None:
+            part = self._read_raw(partition_id)
+            self._account_read(
+                partition_id, part.nbytes(), part.logical_nbytes()
+            )
+            return part
+        # fault-injected read: pre-read faults (offline/slow/transient) may
+        # raise before any bytes move; the clean read then pins the trusted
+        # digest; a torn-read corruption lands on a COPY and is caught by
+        # verification — a corrupt partition is never returned, only raised.
+        attempt = inj.on_partition_read(self, partition_id)
+        try:
+            part = self._read_raw(partition_id)
+        except columnar.CorruptPartitionFile as e:
+            # verified at-rest corruption: retrying the same bytes fails
+            # identically, so surface it non-retryable (quarantine fast)
+            raise CorruptPartitionError(
+                str(e), pid=partition_id,
+                device=self.owner_of(partition_id), retryable=False,
+            ) from e
+        self._account_read(partition_id, part.nbytes(), part.logical_nbytes())
+        want = self.content_digest(partition_id, part)
+        delivered = inj.maybe_corrupt_partition(partition_id, part, attempt)
+        if delivered is not part:
+            got = columnar.partition_digest(delivered)
+            if got != want:
+                raise CorruptPartitionError(
+                    f"partition {partition_id} failed integrity verification "
+                    f"(want {want}, got {got}, attempt {attempt})",
+                    pid=partition_id, device=self.owner_of(partition_id),
+                )
+        return delivered
+
+    def _read_raw(self, partition_id: int) -> Partition:
+        """The unverified read: disk file wins, else the synthetic source."""
         if self.root is not None:
             path = self._path(partition_id)
             if os.path.exists(path):
-                part = read_partition(path)
-                self._account_read(
-                    partition_id, part.nbytes(), part.logical_nbytes()
-                )
-                return part
+                return read_partition(path)
         assert self.source is not None, "no disk file and no synthetic source"
-        part = self.source.partition(partition_id)
-        self._account_read(partition_id, part.nbytes(), part.logical_nbytes())
-        return part
+        return self.source.partition(partition_id)
+
+    def content_digest(
+        self, partition_id: int, part: Optional[Partition] = None
+    ) -> str:
+        """Trusted write-time digest of one partition's page content.
+
+        Pinned on first computation (the clean read, or write time via an
+        explicit call) and compared against every subsequent delivered read
+        when a fault injector is attached — the end-to-end integrity anchor.
+        Pass ``part`` when the clean partition is already in hand to avoid
+        a second read."""
+        with self._fp_lock:
+            hit = self._digest_cache.get(partition_id)
+        if hit is not None:
+            return hit
+        if part is None:
+            part = self._read_raw(partition_id)
+        d = columnar.partition_digest(part)
+        with self._fp_lock:
+            self._digest_cache[partition_id] = d
+        return d
+
+    # -- failover --------------------------------------------------------------
+    def allow_failover(self, partition_id: int) -> None:
+        """Grant replica reads for one partition of an offline device: its
+        reads stop raising ``DeviceOfflineError`` and charge the fleet's
+        host-link ledger (the replica crosses the link) instead of the dark
+        device.  Content is unchanged — same pid, same bytes, still
+        digest-verified."""
+        with self._fp_lock:
+            self._failover.add(partition_id)
+
+    def is_failover(self, partition_id: int) -> bool:
+        with self._fp_lock:
+            return partition_id in self._failover
+
+    @property
+    def failover_partitions(self) -> List[int]:
+        with self._fp_lock:
+            return sorted(self._failover)
 
     def _account_read(
         self, partition_id: int, nbytes: int, logical_nbytes: int | None = None
@@ -410,13 +829,17 @@ class PartitionedStore:
         unique block bytes (``Partition.nbytes``), which is exactly what the
         device streams; ``logical_nbytes`` rides along for the savings
         report (``logical_bytes_read - bytes_read`` = bytes dedup kept off
-        the devices)."""
+        the devices).  Failover reads (owning device offline) pull the
+        replica over the host link instead."""
         self._read_bytes += nbytes
         self._logical_read_bytes += (
             logical_nbytes if logical_nbytes is not None else nbytes
         )
         if self.fleet is not None:
-            self.fleet[self.owner_of(partition_id)].charge_stream(nbytes)
+            if self.is_failover(partition_id):
+                self.fleet.charge_host(nbytes, 0.0)
+            else:
+                self.fleet[self.owner_of(partition_id)].charge_stream(nbytes)
 
     @property
     def bytes_read(self) -> int:
@@ -571,6 +994,24 @@ class CacheSpillStore:
     # batch keys never carry them
     _DD_BLOCKS = "__ddb"
     _DD_REFS = "__ddr"
+    # reserved key of the block's write-time checksum (sha256 over the clean
+    # stored arrays); read verifies it, so a corrupt block is detected and
+    # dropped — a cache hit is never wrong, a miss only costs recompute
+    _CK = "__ck"
+
+    @classmethod
+    def _checksum(cls, arrays: Dict[str, np.ndarray]) -> np.ndarray:
+        """Canonical content digest of a stored block (names, dtypes,
+        shapes, bytes — order-independent), as a (32,) uint8 array so it
+        survives the npz round trip."""
+        h = hashlib.sha256()
+        for k in sorted(arrays):
+            if k == cls._CK:
+                continue
+            a = np.ascontiguousarray(arrays[k])
+            h.update(f"{k}:{a.dtype.str}:{a.shape}".encode())
+            h.update(a.tobytes())
+        return np.frombuffer(h.digest(), dtype=np.uint8).copy()
 
     @classmethod
     def _dedup_rows(cls, arrays: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
@@ -636,6 +1077,13 @@ class CacheSpillStore:
         self.bytes_written = 0
         self.bytes_read = 0
         self.modeled_io_s = 0.0
+        # Fault domain: `events` is the duck-typed EventLog hook (wired by
+        # the service before warm_start so boot-time corruption is visible);
+        # `fault_injector` corrupts blocks at rest / fails reads; corrupt
+        # blocks found on read are dropped + counted here, never served.
+        self.events: Any = None
+        self.fault_injector: Optional[IoFaultInjector] = None
+        self.corrupt_drops = 0
         # per-owning-device modeled seconds: spill residency is DEVICE work,
         # so a hot device's cache traffic shows up on ITS ledger, not a
         # global pot (the global modeled_io_s stays as the aggregate)
@@ -730,12 +1178,21 @@ class CacheSpillStore:
 
         arrays = self._dedup_rows({k: frozen(v) for k, v in arrays.items()})
         nbytes = sum(int(a.nbytes) for a in arrays.values())
+        # checksum over the CLEAN arrays, stored alongside: survives process
+        # restarts inside the npz, so warm_start rescans verify too.  An
+        # injector corrupts the STORED copy only — the checksum stays
+        # honest, which is exactly what lets the next read detect it.
+        ck = self._checksum(arrays)
+        stored = dict(arrays)
+        if self.fault_injector is not None:
+            stored = self.fault_injector.maybe_corrupt_spill(key, stored)
+        stored[self._CK] = ck
         if self.root is not None:
-            np.savez(self._block_path(key), **arrays)
+            np.savez(self._block_path(key), **stored)
         dropped: List[str] = []
         with self._lock:
             if self.root is None:
-                self._devices[self.owner_of(key)][key] = arrays
+                self._devices[self.owner_of(key)][key] = stored
             old_bytes = self._sizes.pop(key, None)
             if old_bytes is not None:
                 self._resident -= old_bytes
@@ -760,32 +1217,76 @@ class CacheSpillStore:
         return nbytes
 
     def read(self, key: str) -> Optional[Dict[str, np.ndarray]]:
-        """Fetch one spilled block (None if absent).  The read bytes are
-        charged to the block's OWNING device's ledger — a spill hit promoted
-        back to the memory tier is byte movement on that device, contending
-        with its partition reads and ISP compute."""
+        """Fetch one spilled block (None if absent, unreadable, or corrupt).
+
+        The read bytes are charged to the block's OWNING device's ledger — a
+        spill hit promoted back to the memory tier is byte movement on that
+        device, contending with its partition reads and ISP compute.
+
+        Integrity: the block's stored checksum is verified before return.  A
+        mismatch (or an unreadable npz — torn writes raise anything from
+        ``BadZipFile`` to ``EOFError``, not just ``OSError``) drops the
+        block from the index AND the device, emits a ``spill_corrupt``
+        event, and reads as a miss: the feature cache recomputes cold.  A
+        session never sees corrupt bytes from the spill tier, only latency.
+        This is also what makes ``FeatureCache.warm_start`` safe: a corrupt
+        survivor block is skipped at boot instead of aborting the service."""
         with self._lock:
             nbytes = self._sizes.get(key)
             if nbytes is None:
                 return None
-            if self.root is None:
-                block = self._devices[self.owner_of(key)].get(key)
-                if block is None:
-                    return None
-                self.bytes_read += nbytes
-            else:
-                block = None
-        if block is None:
+        inj = self.fault_injector
+        if inj is not None and inj.on_spill_read(key):
+            return None  # injected transient: a miss, recompute underneath
+        if self.root is None:
+            with self._lock:
+                stored = self._devices[self.owner_of(key)].get(key)
+            if stored is None:
+                return None
+            block = dict(stored)
+        else:
             try:
                 with np.load(self._block_path(key)) as z:
                     block = {k: z[k] for k in z.files}
-            except OSError:
+            except FileNotFoundError:
                 return None  # evicted between the size check and the load
+            except Exception as e:
+                self._drop_corrupt(key, f"unreadable: {e!r}")
+                return None
             for a in block.values():
                 a.setflags(write=False)
-            with self._lock:
-                self.bytes_read += nbytes
-        else:
-            block = dict(block)
+        ck = block.pop(self._CK, None)
+        if ck is None or not np.array_equal(
+            self._checksum(block), np.asarray(ck)
+        ):
+            self._drop_corrupt(
+                key, "checksum missing" if ck is None else "checksum mismatch"
+            )
+            return None
+        with self._lock:
+            self.bytes_read += nbytes
         self._charge(key, nbytes)
         return self._expand_rows(block)
+
+    def _drop_corrupt(self, key: str, reason: str) -> None:
+        """Evict a block that failed integrity on read.  The spill tier is
+        a cache of a cache — recompute is always available underneath, so
+        dropping is always safe; the event makes the damage observable."""
+        dev = self.owner_of(key)
+        with self._lock:
+            nbytes = self._sizes.pop(key, None)
+            if nbytes is not None:
+                self._resident -= nbytes
+            self._devices[dev].pop(key, None)
+            self.corrupt_drops += 1
+        if self.root is not None:
+            try:
+                os.remove(self._block_path(key))
+            except OSError:
+                pass
+        ev = self.events
+        if ev is not None:
+            try:
+                ev.emit("spill_corrupt", key=key, device=dev, reason=reason)
+            except Exception:
+                pass  # a broken observer never breaks the read path

@@ -38,6 +38,16 @@ run's output is bitwise identical and complete.  Every membership change,
 re-issue, checkpoint, and scale decision lands in the structured event
 stream (summarized at exit; ``--events-out`` writes the JSON artifact).
 
+The STORAGE fault domain is drillable too (``data.storage.IoFaultInjector``):
+``--io-faults SPEC`` seeds deterministic I/O chaos into every tenant's store
+— transient read errors, torn (bit-flipped) blocks caught by end-to-end
+content digests, slow reads, spill-block corruption, and a whole device
+knocked offline mid-run.  Sessions absorb the faults through bounded
+retry/backoff, device failover, and per-partition quarantine; with
+``--verify`` the drill asserts the faulted run's output is still bitwise
+identical to a fault-free solo recompute.  The exit code is non-zero when
+verification fails or any session ends with a quarantined partition.
+
     PYTHONPATH=src python -m repro.launch.serve_preprocess --jobs 2 --reduced
 """
 
@@ -61,7 +71,12 @@ from repro.core.featcache import FeatureCache, default_spill_store
 from repro.core.presto import PreStoEngine
 from repro.core.service import JobSpec, PreprocessingService
 from repro.core.spec import TransformSpec
-from repro.data.storage import DeviceFleet, PartitionedStore, zipf_owner_map
+from repro.data.storage import (
+    DeviceFleet,
+    PartitionedStore,
+    parse_iofault_spec,
+    zipf_owner_map,
+)
 from repro.data.synth import SyntheticRecSysSource
 
 EPILOG = """\
@@ -125,6 +140,17 @@ control-plane flags (core.ctrlplane):
                              and MAX workers (scale decisions land in the
                              event stream)
   --autoscale-interval S     policy evaluation period in seconds (0.05)
+  --io-faults SPEC           seeded I/O fault injection into every store:
+                             comma-joined knobs out of transient=P
+                             (retryable read errors), corrupt=P (torn
+                             blocks, caught by content digests), spill=P
+                             (spill-block corruption), slow=P[:SECONDS],
+                             offline=DEV@N (device DEV dies after N reads),
+                             seed=K — e.g.
+                             transient=0.2,corrupt=0.1,offline=1@8,seed=7
+  --io-retries N             per-partition retry budget before quarantine
+                             (default 3); --io-backoff-ms is the base of
+                             the exponential backoff (default 10)
   --verify                   recompute every delivered batch solo; assert
                              the (chaos) run delivered every partition,
                              bitwise identical
@@ -144,6 +170,10 @@ examples:
       --events-out EVENTS_chaos.json
   PYTHONPATH=src python -m repro.launch.serve_preprocess \\
       --jobs 2 --reduced --workers 2 --units 3 --autoscale 2:6
+  PYTHONPATH=src python -m repro.launch.serve_preprocess \\
+      --jobs 2 --reduced --cache --spill-devices 4 --verify \\
+      --io-faults transient=0.2,corrupt=0.1,spill=0.3,offline=1@8,seed=7 \\
+      --events-out EVENTS_iofaults.json
 """
 
 
@@ -279,6 +309,16 @@ def main(argv=None) -> None:
                          "MAX workers")
     ap.add_argument("--autoscale-interval", type=float, default=0.05,
                     metavar="S", help="autoscaler evaluation period (s)")
+    ap.add_argument("--io-faults", default=None, metavar="SPEC",
+                    help="seeded I/O fault injection into every store "
+                         "(transient=P,corrupt=P,spill=P,slow=P[:S],"
+                         "offline=DEV@N,seed=K)")
+    ap.add_argument("--io-retries", type=int, default=3, metavar="N",
+                    help="per-partition retry budget before quarantine "
+                         "(default 3)")
+    ap.add_argument("--io-backoff-ms", type=float, default=10.0, metavar="MS",
+                    help="base retry backoff in ms, doubled per attempt "
+                         "(default 10)")
     ap.add_argument("--verify", action="store_true",
                     help="recompute every delivered batch solo and assert "
                          "bitwise-identical, complete output")
@@ -296,6 +336,10 @@ def main(argv=None) -> None:
     cost_model = ContentionAwareCostModel()
     fleet = (DeviceFleet.from_cost_model(args.devices, cost_model)
              if args.devices > 0 else None)
+    # ONE seeded injector shared by every tenant's store: the offline
+    # trigger counts reads pool-wide, exactly like a real device dying
+    # under everyone at once
+    injector = parse_iofault_spec(args.io_faults) if args.io_faults else None
     owner_map = None
     if fleet is not None and args.skew > 0:
         # one shared map: every tenant's partition p lives on the same hot
@@ -328,7 +372,7 @@ def main(argv=None) -> None:
         spec = TransformSpec.from_source(src)
         store = PartitionedStore(
             args.partitions, num_devices=args.devices or 4, source=src,
-            fleet=fleet, owner_map=owner_map)
+            fleet=fleet, owner_map=owner_map, fault_injector=injector)
         name = f"{rm}-job{j}"
         job = JobSpec(
             name=name,
@@ -345,6 +389,8 @@ def main(argv=None) -> None:
             checkpoint_path=(os.path.join(ckpt_dir, f"{name}.json")
                              if ckpt_dir else None),
             checkpoint_every=4,
+            io_retries=args.io_retries,
+            io_backoff_s=args.io_backoff_ms / 1e3,
         )
         jobspecs.append(job)
         job_specs_ts[name] = spec
@@ -363,6 +409,9 @@ def main(argv=None) -> None:
         if args.restart_after is not None:
             directives.append(f"restart@{args.restart_after}")
         print(f"chaos: {', '.join(directives)}")
+    if injector is not None:
+        print(f"io-faults: {args.io_faults} (retry budget "
+              f"{args.io_retries}, backoff {args.io_backoff_ms}ms)")
 
     counter = _Counter()
     results = {job.name: {} for job in jobspecs}
@@ -376,6 +425,9 @@ def main(argv=None) -> None:
     while True:
         phase += 1
         service = make_service()
+        if injector is not None:
+            # each incarnation gets the injected-fault events in ITS stream
+            injector.events = service.events
         scaler = None
         if scale_bounds is not None:
             scaler = Autoscaler(service, AutoscalePolicy(
@@ -420,12 +472,15 @@ def main(argv=None) -> None:
         if scaler is not None:
             scaler.stop()
         for name, session in sessions.items():
-            if session.stats().done:
+            st = session.stats()
+            if st.done:
                 final_sessions[name] = session
             elif not restart_requested.is_set():
+                quarantined = (f" ({st.quarantined} partition(s) "
+                               f"quarantined)" if st.quarantined else "")
                 raise RuntimeError(
-                    f"job {name} interrupted without a requested restart: "
-                    f"{results[name].get('interrupted')}")
+                    f"job {name} interrupted without a requested restart"
+                    f"{quarantined}: {results[name].get('interrupted')}")
         if not service.closed:
             service.close()
         all_events.extend(service.events.to_dicts())
@@ -480,6 +535,9 @@ def main(argv=None) -> None:
     if args.verify:
         # the chaos acceptance gate: every partition delivered exactly once
         # per tenant's output map, bitwise identical to a solo recompute
+        # (reads go clean — the injector must not fault the reference)
+        for store in stores.values():
+            store.fault_injector = None
         for job in jobspecs:
             got = gots[job.name]
             missing = sorted(set(range(args.partitions)) - set(got))
@@ -520,6 +578,19 @@ def main(argv=None) -> None:
               f"resident={cs.resident_bytes / 1e6:.1f}MB "
               f"spilled={cs.spilled_entries} ({cs.spilled_bytes / 1e6:.1f}MB, "
               f"{cs.spill_io_s * 1e3:.2f}ms modeled I/O)")
+
+    if injector is not None:
+        stats = [s.stats() for s in final_sessions.values()]
+        tot_r = sum(s.retries for s in stats)
+        tot_f = sum(s.failovers for s in stats)
+        tot_q = sum(s.quarantined for s in stats)
+        injected = " ".join(
+            f"{k}={n}" for k, n in sorted(injector.summary().items()) if n)
+        print(f"io-faults: injected[{injected or 'none'}] "
+              f"retries={tot_r} failovers={tot_f} quarantined={tot_q}")
+        if tot_q:
+            raise SystemExit(
+                f"io-faults: {tot_q} partition(s) ended quarantined")
 
     if event_counts:
         summary = " ".join(f"{k}={n}" for k, n in sorted(event_counts.items()))
